@@ -1,0 +1,322 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the figure's quality
+axis: recall / avg-degree / dominant roofline term).  Sizes are scaled to
+CPU (the TPU target numbers come from the dry-run roofline artifacts, which
+`roofline_table` re-emits at the end).
+
+  PYTHONPATH=src python -m benchmarks.run            # full
+  REPRO_BENCH_QUICK=1 PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+QUICK = bool(os.environ.get("REPRO_BENCH_QUICK"))
+
+ROWS: list = []
+
+
+def emit(name: str, us: float, derived: str):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _timeit(fn, *args, repeat: int = 3):
+    fn(*args)  # compile / warm
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeat * 1e6, out
+
+
+def _dataset(n=None, d=32, nq=128):
+    from repro.data.synthetic import make_clustered
+
+    n = n or (4000 if QUICK else 20000)
+    return make_clustered(n=n, d=d, n_queries=nq, n_clusters=64, noise=0.6,
+                          seed=0)
+
+
+def _cfg(**kw):
+    from repro.configs import get_arch
+
+    base = dict(k_graph=24, max_degree=32, lambda0=8, bridge_hubs=128,
+                bridge_k=8)
+    base.update(kw)
+    return dataclasses.replace(get_arch("tsdg-paper"), **base)
+
+
+# ==========================================================================
+# Table 2: graph diversification time
+# ==========================================================================
+
+def table2_diversification_time():
+    from repro.core.diversify import (append_reverse, build_gd_baseline,
+                                      build_tsdg, relaxed_gd, soft_gd)
+    from repro.core.knn_build import exact_knn
+
+    ds = _dataset()
+    X = jnp.asarray(ds.X)
+    ids, dists = exact_knn(X, 24)
+    jax.block_until_ready(ids)
+
+    cfg = _cfg()
+
+    def tsdg():
+        g = build_tsdg(X, cfg, knn_ids=ids, knn_dists=dists)
+        jax.block_until_ready(g.neighbors)
+        return g
+
+    def gd():
+        g = build_gd_baseline(X, cfg, knn_ids=ids, knn_dists=dists)
+        jax.block_until_ready(g.neighbors)
+        return g
+
+    def soft_only():  # DPG-like: stage 2 applied directly to the k-NN graph
+        adj_i, adj_d = append_reverse(X, ids, dists,
+                                      jnp.ones(ids.shape, bool),
+                                      rev_cap=24, metric="l2")
+        out = soft_gd(X, adj_i, adj_d, lambda0=cfg.lambda0,
+                      max_degree=cfg.max_degree, metric="l2")
+        jax.block_until_ready(out[0])
+        return out
+
+    us, g = _timeit(tsdg)
+    emit("table2/tsdg_build", us, f"avg_degree={g.avg_degree():.1f}")
+    us, g2 = _timeit(gd)
+    emit("table2/gd_build", us, f"avg_degree={g2.avg_degree():.1f}")
+    us, _ = _timeit(soft_only)
+    emit("table2/softonly_build_dpg_like", us, "stage2_only")
+
+
+# ==========================================================================
+# Fig 4: CPU search (reference best-first) recall vs throughput
+# ==========================================================================
+
+def fig4_cpu_search():
+    from repro.core import search_ref
+    from repro.core.diversify import build_gd_baseline, build_tsdg
+    from repro.core.knn_build import exact_knn
+    from repro.data.synthetic import recall_at_k
+
+    ds = _dataset(n=3000 if QUICK else 8000, nq=32)
+    X = jnp.asarray(ds.X)
+    ids, dists = exact_knn(X, 24)
+    cfg = _cfg()
+    graphs = {
+        "tsdg": build_tsdg(X, cfg, knn_ids=ids, knn_dists=dists),
+        "gd": build_gd_baseline(X, cfg, knn_ids=ids, knn_dists=dists),
+    }
+    for name, g in graphs.items():
+        for ef in ((32,) if QUICK else (32, 64, 128)):
+            t0 = time.perf_counter()
+            out, _ = search_ref.search_batch(ds.X, g, ds.Q, k=10, ef=ef)
+            dt = time.perf_counter() - t0
+            r = recall_at_k(out, ds.gt, 10)
+            emit(f"fig4/cpu_{name}_ef{ef}", dt / len(ds.Q) * 1e6,
+                 f"recall@10={r:.3f}")
+
+
+# ==========================================================================
+# Fig 5: degree / λ-limit sweep (one graph, many operating points)
+# ==========================================================================
+
+def fig5_degree_sweep():
+    from repro.core.diversify import build_tsdg
+    from repro.core.knn_build import exact_knn
+    from repro.core.search_small import small_batch_search
+    from repro.data.synthetic import recall_at_k
+
+    ds = _dataset(nq=64)
+    X = jnp.asarray(ds.X)
+    ids, dists = exact_knn(X, 24)
+    g = build_tsdg(X, _cfg(), knn_ids=ids, knn_dists=dists)
+    Q = jnp.asarray(ds.Q)
+    for lam_limit in (2, 5, 10):
+        fn = lambda: small_batch_search(X, g, Q, k=10, t0=16, hops=6,
+                                        lambda_limit=lam_limit)[0]
+        us, out = _timeit(fn)
+        r = recall_at_k(np.asarray(out), ds.gt, 10)
+        emit(f"fig5/lambda_limit_{lam_limit}", us / len(ds.Q),
+             f"recall@10={r:.3f}")
+
+
+# ==========================================================================
+# Figs 6-9: small-batch search on accelerator (batch 1 / 10 / 100)
+# ==========================================================================
+
+def fig6_small_batch():
+    from repro.core.diversify import build_tsdg
+    from repro.core.knn_build import exact_knn
+    from repro.core.search_small import small_batch_search
+    from repro.data.synthetic import recall_at_k
+
+    ds = _dataset(nq=100)
+    X = jnp.asarray(ds.X)
+    ids, dists = exact_knn(X, 24)
+    g = build_tsdg(X, _cfg(), knn_ids=ids, knn_dists=dists)
+    for B in ((1, 10) if QUICK else (1, 10, 100)):
+        Q = jnp.asarray(ds.Q[:B])
+        gt = ds.gt[:B]
+        for k in (10, 100):
+            fn = lambda: small_batch_search(X, g, Q, k=k, t0=32, hops=6)[0]
+            us, out = _timeit(fn)
+            r = recall_at_k(np.asarray(out), ds.gt[:B], k)
+            emit(f"fig6-9/small_bs{B}_k{k}", us / B, f"recall@{k}={r:.3f}")
+
+
+# ==========================================================================
+# Figs 10-11: large-batch search (scaled 10k regime)
+# ==========================================================================
+
+def fig10_large_batch():
+    from repro.core.diversify import build_tsdg
+    from repro.core.knn_build import exact_knn
+    from repro.core.search_large import large_batch_search
+    from repro.data.synthetic import make_clustered, recall_at_k
+
+    ds = make_clustered(n=4000 if QUICK else 20000, d=32,
+                        n_queries=256 if QUICK else 1024, n_clusters=64,
+                        noise=0.6, seed=0)
+    X = jnp.asarray(ds.X)
+    ids, dists = exact_knn(X, 24)
+    g = build_tsdg(X, _cfg(), knn_ids=ids, knn_dists=dists)
+    Q = jnp.asarray(ds.Q)
+    for k, ef, ns in ((10, 64, 32), (10, 64, 128), (100, 128, 128)):
+        fn = lambda: large_batch_search(X, g, Q, k=k, ef=ef, hops=128,
+                                        lambda_limit=5, n_seeds=ns)[0]
+        us, out = _timeit(fn, repeat=2)
+        r = recall_at_k(np.asarray(out), ds.gt, k)
+        emit(f"fig10-11/large_bs{Q.shape[0]}_k{k}_seeds{ns}",
+             us / Q.shape[0], f"recall@{k}={r:.3f}")
+
+
+# ==========================================================================
+# ablations: the paper's two diversification knobs (α, λ0)
+# ==========================================================================
+
+def ablation_alpha_lambda():
+    from repro.core.diversify import build_tsdg
+    from repro.core.knn_build import exact_knn
+    from repro.core.search_large import large_batch_search
+    from repro.data.synthetic import recall_at_k
+
+    ds = _dataset(n=3000 if QUICK else 8000, nq=64)
+    X = jnp.asarray(ds.X)
+    ids, dists = exact_knn(X, 24)
+    Q = jnp.asarray(ds.Q)
+    for alpha in ((1.0, 1.2) if QUICK else (1.0, 1.1, 1.2, 1.4)):
+        cfg = _cfg(alpha=alpha)
+        g = build_tsdg(X, cfg, knn_ids=ids, knn_dists=dists)
+        out, _ = large_batch_search(X, g, Q, k=10, ef=64, hops=96)
+        r = recall_at_k(np.asarray(out), ds.gt, 10)
+        emit(f"ablation/alpha_{alpha}", 0.0,
+             f"avg_degree={g.avg_degree():.1f};recall@10={r:.3f}")
+    for lam0 in ((2, 8) if QUICK else (0, 2, 8, 16)):
+        cfg = _cfg(lambda0=lam0)
+        g = build_tsdg(X, cfg, knn_ids=ids, knn_dists=dists)
+        out, _ = large_batch_search(X, g, Q, k=10, ef=64, hops=96)
+        r = recall_at_k(np.asarray(out), ds.gt, 10)
+        emit(f"ablation/lambda0_{lam0}", 0.0,
+             f"avg_degree={g.avg_degree():.1f};recall@10={r:.3f}")
+
+
+# ==========================================================================
+# serving engine: regime dispatch end-to-end
+# ==========================================================================
+
+def serve_engine_mixed():
+    from repro.data.synthetic import recall_at_k
+    from repro.serve.engine import ANNEngine
+
+    ds = _dataset(nq=128)
+    eng = ANNEngine(ds.X, _cfg(), k=10)
+    rng = np.random.default_rng(0)
+    hits, total = 0.0, 0
+    t0 = time.perf_counter()
+    for _ in range(4 if QUICK else 12):
+        B = int(rng.choice([1, 4, 16, 128]))
+        sel = rng.integers(0, len(ds.Q), B)
+        ids, _ = eng.query(ds.Q[sel])
+        hits += recall_at_k(ids, ds.gt[sel], 10) * B
+        total += B
+    dt = time.perf_counter() - t0
+    emit("serve/mixed_batches", dt / total * 1e6,
+         f"recall@10={hits / total:.3f};small={eng.stats.small_batches};"
+         f"large={eng.stats.large_batches}")
+
+
+# ==========================================================================
+# kernel microbenches (XLA path timing; Pallas validated in tests)
+# ==========================================================================
+
+def kernel_micro():
+    from repro.kernels import ref
+
+    rng = np.random.default_rng(0)
+    Q = jnp.asarray(rng.normal(size=(256, 128)).astype(np.float32))
+    X = jnp.asarray(rng.normal(size=(8192, 128)).astype(np.float32))
+    f = jax.jit(lambda a, b: ref.distance_matrix_ref(a, b, metric="l2"))
+    us, _ = _timeit(f, Q, X)
+    emit("kernel/l2dist_256x8192x128", us, "xla_ref_path")
+
+    d = jnp.asarray(rng.normal(size=(2048, 64)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 1 << 20, size=(2048, 64))
+                      .astype(np.int32))
+    f = jax.jit(lambda a, b: ref.sort_ref(a, b))
+    us, _ = _timeit(f, d, ids)
+    emit("kernel/bitonic_sort_2048x64", us, "xla_ref_path")
+
+    q = jnp.asarray(rng.normal(size=(2, 512, 8, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(2, 512, 2, 64)).astype(np.float32))
+    f = jax.jit(lambda a, b, c: ref.attention_ref(a, b, c, window=256))
+    us, _ = _timeit(f, q, k, k)
+    emit("kernel/flash_attn_512_gqa", us, "xla_ref_path")
+
+
+# ==========================================================================
+# roofline table from the dry-run artifacts
+# ==========================================================================
+
+def roofline_table():
+    art = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+    for path in sorted(glob.glob(os.path.join(art, "*__single.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        r = rec.get("roofline", {})
+        if not r:
+            continue
+        name = f"roofline/{rec['arch']}__{rec['shape']}"
+        t_dom = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        emit(name, t_dom * 1e6,
+             f"dominant={r['dominant']};flops={r['flops']:.2e};"
+             f"coll={r['coll_bytes']:.2e}")
+
+
+BENCHES = [table2_diversification_time, fig4_cpu_search, fig5_degree_sweep,
+           fig6_small_batch, fig10_large_batch, ablation_alpha_lambda,
+           serve_engine_mixed, kernel_micro, roofline_table]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for bench in BENCHES:
+        try:
+            bench()
+        except Exception as e:  # noqa: BLE001
+            emit(f"{bench.__name__}/ERROR", -1.0, repr(e)[:120])
+    print(f"# {len(ROWS)} rows", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Train a small LM end-to-end with the production trainer: grad accum,
+warmup-cosine, checkpointing + resume — the same code path the 40-cell
+dry-run lowers at 256/512 chips.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--d-model 256]
+"""
+import argparse
+import dataclasses
+
+from repro.configs import get_arch
+from repro.configs.base import TransformerConfig
+from repro.data.lm import LMStream
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+from repro.optim.api import OptimizerConfig
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--ckpt", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = TransformerConfig(
+        name="demo-lm", n_layers=args.layers, d_model=args.d_model,
+        n_heads=4, n_kv_heads=2, d_ff=4 * args.d_model, vocab=2048)
+    print(f"model: {cfg.n_params() / 1e6:.1f}M params")
+
+    trainer = Trainer(
+        schema=T.schema(cfg),
+        loss_fn=lambda p, b: T.loss_fn(p, cfg, b),
+        mesh=make_host_mesh(),
+        opt_cfg=OptimizerConfig(lr=3e-3, warmup_steps=20,
+                                total_steps=args.steps),
+        train_cfg=TrainConfig(steps=args.steps, log_every=20, ckpt_every=50,
+                              ckpt_dir=args.ckpt, microbatches=2))
+    data = iter(LMStream(cfg.vocab, args.seq, args.batch, microbatches=2))
+    _, hist = trainer.run(
+        data, resume=args.resume,
+        on_metrics=lambda s, m: print(
+            f"step {s:4d} loss {m['loss']:.3f} acc {m['acc']:.3f} "
+            f"gnorm {m['grad_norm']:.2f}"))
+    print(f"done: loss {hist[0][1]['loss']:.3f} -> {hist[-1][1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro — TSDG (Graph-based ANN Search: A Revisit) as a multi-pod JAX framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,77 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""kimi-k2 roofline via layer extrapolation.
+
+The 61-layer fully-unrolled kimi module exceeds the CPU compile budget, so
+we lower the *same* step with n_layers=2 and n_layers=4 (unrolled, full
+dims) and extrapolate linearly: every kimi layer is identical (homogeneous
+MoE stack), so  term(L) = term(2) + (L-2)/2 · (term(4) - term(2))  is exact
+for per-layer costs and attributes the residual (embed/head/optimizer) to
+the intercept.  Writes standard __roofline artifacts with provenance.
+"""
+import dataclasses
+import json
+import time
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "benchmarks", "artifacts", "dryrun")
+
+
+def measure(shape_name: str, n_layers: int):
+    from repro.analysis import roofline as rl
+    from repro.configs import get_arch
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import get_bundle
+
+    mesh = make_production_mesh()
+    cfg = dataclasses.replace(get_arch("kimi-k2-1t-a32b"),
+                              n_layers=n_layers)
+    b = get_bundle("kimi-k2-1t-a32b", shape_name, mesh, cfg=cfg,
+                   roofline=True)
+    comp = b.lower(mesh).compile()
+    return rl.analyze(comp, mesh.devices.size), b.meta
+
+
+def main() -> None:
+    from repro.configs import get_arch
+
+    L = get_arch("kimi-k2-1t-a32b").n_layers
+    for shape in ("train_4k", "prefill_32k"):
+        t0 = time.time()
+        r2, _ = measure(shape, 2)
+        r4, meta = measure(shape, 4)
+        ex = {}
+        for k in ("flops", "bytes_accessed", "coll_bytes"):
+            v2, v4 = getattr(r2, k), getattr(r4, k)
+            ex[k] = v2 + (L - 2) / 2.0 * (v4 - v2)
+        from repro.analysis.roofline import Roofline
+
+        roof = Roofline(flops=ex["flops"],
+                        bytes_accessed=ex["bytes_accessed"],
+                        coll_bytes=ex["coll_bytes"], coll_detail={},
+                        chips=256)
+        # meta from the 4-layer bundle has reduced params; recompute
+        cfg_full = get_arch("kimi-k2-1t-a32b")
+        rec = {
+            "arch": "kimi-k2-1t-a32b", "shape": shape, "mesh": "single",
+            "chips": 256, "roofline_mode": True,
+            "provenance": "layer-extrapolated (2 vs 4 unrolled layers)",
+            "lower_s": 0, "compile_s": round(time.time() - t0, 1),
+            "memory": {},
+            "roofline": roof.as_dict(),
+            "meta": {"n_params": cfg_full.n_params(),
+                     "n_active_params": cfg_full.n_active_params(),
+                     "tokens": meta["tokens"]},
+        }
+        path = os.path.join(
+            ART, f"kimi-k2-1t-a32b__{shape}__single__roofline.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[ok] {shape}: comp {roof.t_compute:.3g}s "
+              f"mem {roof.t_memory:.3g}s coll {roof.t_collective:.3g}s "
+              f"({time.time() - t0:.0f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

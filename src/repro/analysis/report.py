@@ -1,0 +1,126 @@
+"""Aggregate dry-run artifacts into the EXPERIMENTS.md tables.
+
+  PYTHONPATH=src python -m repro.analysis.report [--artifacts DIR]
+
+Emits markdown: §Dry-run (memory/collective per cell, both meshes) and
+§Roofline (three terms + dominant + MODEL_FLOPS ratio, single-pod).  For
+scan-bearing steps the roofline row uses the `__roofline` (unrolled) artifact
+— cost_analysis counts a while body once, so the scanned variant would
+undercount; memory comes from the scanned (deployable) variant.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.analysis.roofline import HBM_BW, LINK_BW, PEAK_FLOPS
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "benchmarks", "artifacts", "dryrun")
+
+
+def load(art_dir: str) -> dict:
+    recs = {}
+    for p in glob.glob(os.path.join(art_dir, "*.json")):
+        with open(p) as f:
+            r = json.load(f)
+        key = (r["arch"], r["shape"], r["mesh"],
+               bool(r.get("roofline_mode")))
+        recs[key] = r
+    return recs
+
+
+def _gb(x) -> str:
+    return f"{x / 2**30:.2f}"
+
+
+def _fmt_s(x: float) -> str:
+    if x <= 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x * 1e6:.0f}µs"
+    if x < 1.0:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def model_flops_per_chip(rec) -> float | None:
+    meta = rec.get("meta", {})
+    chips = rec["chips"]
+    n_act = meta.get("n_active_params")
+    toks = meta.get("tokens")
+    if not n_act or not toks:
+        return None
+    shape = rec["shape"]
+    if shape.startswith("train"):
+        return 6.0 * n_act * toks / chips
+    return 2.0 * n_act * toks / chips  # prefill & decode: fwd only
+
+
+def dryrun_table(recs) -> str:
+    rows = ["| arch | shape | mesh | chips | lower+compile (s) | "
+            "args/dev (GiB) | temps/dev (GiB) | collective bytes/dev | "
+            "#coll ops |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for key in sorted(recs):
+        arch, shape, mesh, roof = key
+        if roof:
+            continue
+        r = recs[key]
+        mem = r.get("memory", {})
+        ro = r.get("roofline", {})
+        rows.append(
+            f"| {arch} | {shape} | {mesh} | {r['chips']} "
+            f"| {r['lower_s']}+{r['compile_s']} "
+            f"| {_gb(mem.get('argument_size_in_bytes', 0))} "
+            f"| {_gb(mem.get('temp_size_in_bytes', 0))} "
+            f"| {ro.get('coll_bytes', 0):.2e} "
+            f"| {ro.get('coll_detail', {}).get('count', 0)} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs) -> str:
+    rows = ["| arch | shape | t_compute | t_memory | t_collective | "
+            "dominant | HLO flops/chip | MODEL/HLO flops |",
+            "|---|---|---|---|---|---|---|---|"]
+    seen = set()
+    for key in sorted(recs):
+        arch, shape, mesh, roof = key
+        if mesh != "single" or (arch, shape) in seen:
+            continue
+        # prefer the unrolled roofline artifact when it exists
+        r = recs.get((arch, shape, "single", True)) \
+            or recs.get((arch, shape, "single", False))
+        seen.add((arch, shape))
+        ro = r.get("roofline", {})
+        if not ro:
+            continue
+        mf = model_flops_per_chip(r)
+        ratio = f"{mf / ro['flops']:.2f}" if (mf and ro["flops"]) else "n/a"
+        rows.append(
+            f"| {arch} | {shape} | {_fmt_s(ro['t_compute_s'])} "
+            f"| {_fmt_s(ro['t_memory_s'])} | {_fmt_s(ro['t_collective_s'])} "
+            f"| **{ro['dominant']}** | {ro['flops']:.2e} | {ratio} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default=ARTIFACTS)
+    args = ap.parse_args()
+    recs = load(args.artifacts)
+    n_single = sum(1 for k in recs if k[2] == "single" and not k[3])
+    n_multi = sum(1 for k in recs if k[2] == "multi" and not k[3])
+    print(f"## Dry-run ({n_single} single-pod cells / {n_multi} "
+          f"multi-pod cells)\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single-pod, v5e: "
+          f"{PEAK_FLOPS / 1e12:.0f} TF bf16, {HBM_BW / 1e9:.0f} GB/s HBM, "
+          f"{LINK_BW / 1e9:.0f} GB/s link)\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

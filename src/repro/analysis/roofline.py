@@ -1,0 +1,147 @@
+"""Roofline terms from a compiled AOT step (no hardware needed).
+
+v5e constants (assigned): 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+  compute   = HLO_FLOPs / (chips * peak)
+  memory    = HLO_bytes / (chips * hbm_bw)
+  collective= collective_bytes / (chips * link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``.  Collective bytes are NOT
+in cost_analysis: we parse the post-SPMD optimized HLO text and sum operand
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op.  cost_analysis is per-device under SPMD, so the terms
+below are per-chip step latencies (seconds).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+LINK_BW = 50e9             # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  f32[1024,128]{1,0}  or bf16[8]
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[( ]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum *output* operand bytes per collective kind from optimized HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_txt, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(shape_txt)
+        out["count"] += 1
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    coll_detail: dict
+    chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "bytes": self.bytes_accessed,
+            "coll_bytes": self.coll_bytes,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant, "chips": self.chips,
+            "coll_detail": {k: v for k, v in self.coll_detail.items()
+                            if v},
+        }
+
+
+def analyze(compiled, mesh_devices: int) -> Roofline:
+    """cost_analysis is per-device post-SPMD; HLO text likewise."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older API returns [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    try:
+        text = compiled.as_text()
+    except Exception:
+        text = ""
+    coll = collective_bytes(text)
+    total_coll = sum(v for k, v in coll.items() if k in _COLLECTIVES)
+    return Roofline(flops=flops, bytes_accessed=byts, coll_bytes=total_coll,
+                    coll_detail=coll, chips=mesh_devices)
+
+
+def model_flops_train(n_params: int, n_tokens: int) -> float:
+    """6·N·D (fwd+bwd)."""
+    return 6.0 * n_params * n_tokens
+
+
+def model_flops_decode(n_params: int, n_tokens: int) -> float:
+    """2·N per generated token (fwd only)."""
+    return 2.0 * n_params * n_tokens
+
+
+def memory_summary(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out

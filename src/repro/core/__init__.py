@@ -1,0 +1,5 @@
+"""The paper's contribution: TSDG build + the two search procedures."""
+from repro.core.diversify import PackedGraph, build_gd_baseline, build_tsdg  # noqa: F401
+from repro.core.knn_build import exact_knn, nn_descent  # noqa: F401
+from repro.core.search_large import large_batch_search  # noqa: F401
+from repro.core.search_small import small_batch_search  # noqa: F401

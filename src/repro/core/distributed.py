@@ -1,0 +1,147 @@
+"""Distributed TSDG: sharded index build + 2-D parallel search (shard_map).
+
+Production layout (DESIGN.md §2): the database (vectors + packed graph) is
+sharded over the ``data`` axis (and ``pod`` when multi-pod) — each shard owns
+an independent TSDG sub-index over its slice, built with zero cross-shard
+traffic (the paper's batched-GPU build, pod-scaled).  Queries are sharded
+over the ``model`` axis.  A query visits every DB shard's sub-index in
+parallel and the per-shard top-k are merged with one all-gather over the DB
+axes — k·shards ids/dists per query, the only collective in the hot path.
+
+This is the standard sharded-ANN serving architecture (sub-linear per-shard
+search, embarrassingly parallel scale-out); the paper is single-GPU, so this
+layer is our extension for the 1000+-node deployment target.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ANNConfig
+from repro.core import metrics as M
+from repro.core.diversify import PackedGraph, build_tsdg
+from repro.core.search_large import large_batch_search
+from repro.core.search_small import small_batch_search
+
+
+def db_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def query_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("model",) if a in mesh.axis_names)
+
+
+def graph_pspec(mesh: Mesh):
+    d = db_axes(mesh)
+    return PackedGraph(
+        neighbors=P(d, None), lambdas=P(d, None), degrees=P(d),
+        hubs=P(None))
+
+
+def make_build_fn(mesh: Mesh, cfg: ANNConfig):
+    """shard_map'd index build: each DB shard builds its own TSDG."""
+    d_ax = db_axes(mesh)
+
+    def local_build(X_shard):
+        g = build_tsdg(X_shard, cfg)
+        return g.neighbors, g.lambdas, g.degrees, \
+            (g.hubs if g.hubs is not None else jnp.zeros((0,), jnp.int32))
+
+    fn = jax.shard_map(
+        local_build, mesh=mesh,
+        in_specs=(P(d_ax, None),),
+        out_specs=(P(d_ax, None), P(d_ax, None), P(d_ax), P(d_ax)),
+        check_vma=False)
+    return jax.jit(fn)
+
+
+def make_search_fn(mesh: Mesh, cfg: ANNConfig, *, kind: str = "large",
+                   k: int = 10, batch: int | None = None):
+    """Returns jit(search)(X, neighbors, lambdas, degrees, hubs, Q) ->
+    (global ids [B, k], dists [B, k]).
+
+    Layouts mirror the paper's two regimes:
+      * large batch — queries sharded over `model` (one best-first search
+        per query, thousands in flight), DB sharded over `data`(+`pod`);
+      * small batch — queries REPLICATED; the paper's `t0` independent
+        greedy searches are split across the `model` axis (that is the
+        small-batch parallelism unit, §4.1), results merged with the same
+        dedup-top-k that merges the DB shards.
+    """
+    d_ax = db_axes(mesh)
+    q_ax = query_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_db_shards = 1
+    for a in d_ax:
+        n_db_shards *= sizes[a]
+    n_q_shards = 1
+    for a in q_ax:
+        n_q_shards *= sizes[a]
+    unroll = getattr(cfg, "unroll_scans", False)
+
+    def local_search(X_s, nbrs_s, lams_s, degs_s, hubs_s, Q_s):
+        n_local = X_s.shape[0]
+        if getattr(cfg, "db_bf16", False):  # beyond-paper: bf16 database
+            X_s = X_s.astype(jnp.bfloat16)
+        graph = PackedGraph(neighbors=nbrs_s, lambdas=lams_s,
+                            degrees=degs_s,
+                            hubs=hubs_s if hubs_s.shape[0] else None)
+        # shard index along the DB axes -> global id offset
+        idx = 0
+        for a in d_ax:
+            idx = idx * sizes[a] + jax.lax.axis_index(a)
+        offset = (idx * n_local).astype(jnp.int32)
+        if kind == "small":
+            # this model-column runs its slice of the t0 searches
+            q_idx = jax.lax.axis_index(q_ax[0]) if q_ax else 0
+            t0_local = max(1, cfg.small_t0 // max(1, n_q_shards))
+            ids, dist = small_batch_search(
+                X_s, graph, Q_s, k=k, t0=t0_local, hops=cfg.small_hops,
+                hop_width=cfg.hop_width, n_seeds=cfg.n_seeds,
+                lambda_limit=10, metric=cfg.metric, unroll=unroll,
+                seed_offset=q_idx)
+        else:
+            ids, dist = large_batch_search(
+                X_s, graph, Q_s, k=k, ef=cfg.large_ef, hops=cfg.large_hops,
+                lambda_limit=5, metric=cfg.metric,
+                n_seeds=getattr(cfg, "large_n_seeds", cfg.n_seeds),
+                m_seg=cfg.queue_segments, seg=cfg.segment_size,
+                mv_seg=cfg.visited_segments, delta=cfg.delta,
+                unroll=unroll,
+                gather_limit=getattr(cfg, "gather_limit", 0),
+                exact_visited=getattr(cfg, "exact_visited", False))
+        gids = jnp.where(ids < n_local, ids + offset, jnp.int32(-1))
+        dist = jnp.where(ids < n_local, dist, jnp.float32(3.4e38))
+        # merge across DB shards (and search shards in the small regime)
+        merge_ax = d_ax + q_ax if kind == "small" else d_ax
+        n_merge = n_db_shards * (n_q_shards if kind == "small" else 1)
+        all_ids = jax.lax.all_gather(gids, merge_ax, tiled=False)
+        all_d = jax.lax.all_gather(dist, merge_ax, tiled=False)
+        all_ids = jnp.moveaxis(all_ids.reshape(n_merge, *gids.shape),
+                               0, 1).reshape(gids.shape[0], -1)
+        all_d = jnp.moveaxis(all_d.reshape(n_merge, *dist.shape),
+                             0, 1).reshape(dist.shape[0], -1)
+        # dedup by id (different searches may find the same neighbor)
+        o = jnp.argsort(all_ids, axis=1)
+        sid = jnp.take_along_axis(all_ids, o, axis=1)
+        sd = jnp.take_along_axis(all_d, o, axis=1)
+        dup = jnp.concatenate(
+            [jnp.zeros((sid.shape[0], 1), bool),
+             sid[:, 1:] == sid[:, :-1]], axis=1)
+        sd = jnp.where(dup, jnp.float32(3.4e38), sd)
+        neg, pos = jax.lax.top_k(-sd, k)
+        return jnp.take_along_axis(sid, pos, axis=1), -neg
+
+    q_spec = P(None, None) if kind == "small" else P(q_ax, None)
+    out_spec = P(None, None) if kind == "small" else P(q_ax, None)
+    fn = jax.shard_map(
+        local_search, mesh=mesh,
+        in_specs=(P(d_ax, None), P(d_ax, None), P(d_ax, None), P(d_ax),
+                  P(d_ax), q_spec),
+        out_specs=(out_spec, out_spec),
+        check_vma=False)
+    return jax.jit(fn)

@@ -1,0 +1,320 @@
+"""Two-stage graph diversification (the paper's §3).
+
+Stage 1 — *relaxed GD* (Eq. 2): greedy occlusion pruning of each k-NN list
+with relaxation α > 1.  Edge ⟨x0,xj⟩ is dropped iff some already-kept closer
+neighbor xi satisfies  α·m(x0,xi) < m(x0,xj)  ∧  α·m(xi,xj) < m(x0,xj).
+α = 1 recovers plain GD/HNSW pruning (a tested invariant).
+
+Symmetrize — reverse edges of surviving lists are appended (capped), turning
+the graph undirected before stage 2 (paper §3.3 ¶1).
+
+Stage 2 — *soft GD*: every surviving edge gets an occlusion factor
+λ_j = #{ i ≠ j kept : m(x0,xi) < m(x0,xj) ∧ m(xi,xj) < m(x0,xj) }  (Eq. 1).
+Edges are sorted per node by (λ asc, dist asc); λ > λ0 dropped.  The stored
+λ-sorted order is what lets the search pick a *prefix* of each list at
+query time — one graph, every batch regime (the paper's key flexibility).
+
+All stages are batched over node tiles: the inner objects are [T, K, K]
+pairwise-distance blocks computed by one GEMM per tile — the GPU
+parallelization of §3.3 mapped onto the MXU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics as M
+from repro.core.knn_build import reverse_neighbors
+
+INF = jnp.float32(3.4e38)
+
+
+# --------------------------------------------------------------------------
+# stage 1: relaxed GD
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("metric", "alpha"))
+def relaxed_gd_tile(X, node_ids, nbr_ids, nbr_dists, *, alpha: float,
+                    metric: str):
+    """Greedy occlusion pruning for a tile of nodes.
+
+    node_ids [T]; nbr_ids/nbr_dists [T, K] sorted ascending by distance.
+    Returns keep mask [T, K].
+    """
+    T, K = nbr_ids.shape
+    N = X.shape[0]
+    valid = nbr_ids < N
+    vecs = X[jnp.clip(nbr_ids, 0, N - 1)]                     # [T, K, d]
+    # pairwise distances among the K neighbors (one GEMM per tile)
+    if metric in ("ip", "cos"):
+        pair = -jnp.einsum("tkd,tld->tkl", vecs, vecs)
+    else:
+        sq = jnp.sum(vecs * vecs, axis=-1)
+        pair = sq[:, :, None] + sq[:, None, :] \
+            - 2 * jnp.einsum("tkd,tld->tkl", vecs, vecs)
+    # occ[t, i, j]: (kept) edge i occludes candidate j   (Eq. 2)
+    # ip/cos distances are negative (-<x,y>): a plain α-multiply would make
+    # the occluder condition *easier* (α·m more negative), inverting the
+    # relaxation.  Sign-aware scaling keeps Eq. 2's semantics ("xi must be
+    # α-times closer") in every metric encoding.
+    def _relax(m):
+        return jnp.where(m >= 0, alpha * m, m / alpha)
+
+    occ = (_relax(nbr_dists[:, :, None]) < nbr_dists[:, None, :]) \
+        & (_relax(pair) < nbr_dists[:, None, :])
+
+    def body(keep, j):
+        occluded = jnp.any(keep & occ[:, :, j], axis=1)
+        keep = keep.at[:, j].set(~occluded & valid[:, j])
+        return keep, None
+
+    keep0 = jnp.zeros((T, K), bool).at[:, 0].set(valid[:, 0])
+    keep, _ = jax.lax.scan(body, keep0, jnp.arange(1, K))
+    return keep
+
+
+def relaxed_gd(X, ids, dists, *, alpha: float, metric: str,
+               tile: int = 2048, unroll: bool = False):
+    """Stage 1 over the whole graph (tiled). Returns keep mask [N, K]."""
+    from repro.core.knn_build import tiled_map
+
+    N, K = ids.shape
+    n_tiles = -(-N // tile)
+    pad = n_tiles * tile - N
+    ids_p = jnp.pad(ids, ((0, pad), (0, 0)), constant_values=N)
+    d_p = jnp.pad(dists, ((0, pad), (0, 0)), constant_values=INF)
+
+    def one(i):
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i * tile, tile, 0)
+        rows = i * tile + jnp.arange(tile)
+        return relaxed_gd_tile(X, rows, sl(ids_p), sl(d_p),
+                               alpha=alpha, metric=metric)
+
+    keep = tiled_map(one, n_tiles, unroll)
+    return keep.reshape(-1, K)[:N]
+
+
+# --------------------------------------------------------------------------
+# symmetrize: append reverse edges of the stage-1 graph
+# --------------------------------------------------------------------------
+
+def append_reverse(X, ids, dists, keep, *, rev_cap: int, metric: str):
+    """Undirected candidate lists: kept forward edges ++ reverse edges.
+
+    Returns (adj_ids [N, K+rev_cap], adj_dists) with sentinel N / INF, each
+    row deduplicated.
+    """
+    N, K = ids.shape
+    fwd_ids = jnp.where(keep, ids, N)
+    fwd_d = jnp.where(keep, dists, INF)
+    rev = reverse_neighbors(fwd_ids, fwd_ids < N, cap=rev_cap)  # [N, rev_cap]
+    rvecs = X[jnp.clip(rev, 0, N - 1)]
+    rd = M.batched_rowwise(X, rvecs, metric)
+    rd = jnp.where(rev < N, rd, INF)
+    all_ids = jnp.concatenate([fwd_ids, rev], axis=1)
+    all_d = jnp.concatenate([fwd_d, rd], axis=1)
+    # dedup by id (duplicates -> sentinel)
+    order = jnp.argsort(all_ids, axis=1)
+    sid = jnp.take_along_axis(all_ids, order, axis=1)
+    sd = jnp.take_along_axis(all_d, order, axis=1)
+    dup = jnp.concatenate(
+        [jnp.zeros((N, 1), bool), sid[:, 1:] == sid[:, :-1]], axis=1)
+    sid = jnp.where(dup, N, sid)
+    sd = jnp.where(dup, INF, sd)
+    # re-sort by distance so stage 2 sees ascending lists
+    order2 = jnp.argsort(sd, axis=1)
+    return (jnp.take_along_axis(sid, order2, axis=1),
+            jnp.take_along_axis(sd, order2, axis=1))
+
+
+# --------------------------------------------------------------------------
+# stage 2: soft GD (occlusion factors)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def occlusion_factors_tile(X, nbr_ids, nbr_dists, *, metric: str):
+    """λ_j = #occluders of edge j within its node's list (Eq. 1, α = 1)."""
+    T, K = nbr_ids.shape
+    N = X.shape[0]
+    valid = nbr_ids < N
+    vecs = X[jnp.clip(nbr_ids, 0, N - 1)]
+    if metric in ("ip", "cos"):
+        pair = -jnp.einsum("tkd,tld->tkl", vecs, vecs)
+    else:
+        sq = jnp.sum(vecs * vecs, axis=-1)
+        pair = sq[:, :, None] + sq[:, None, :] \
+            - 2 * jnp.einsum("tkd,tld->tkl", vecs, vecs)
+    occ = (nbr_dists[:, :, None] < nbr_dists[:, None, :]) \
+        & (pair < nbr_dists[:, None, :]) \
+        & valid[:, :, None] & valid[:, None, :]
+    lam = jnp.sum(occ, axis=1).astype(jnp.int32)              # [T, K]
+    return jnp.where(valid, lam, jnp.int32(2 ** 30))
+
+
+def soft_gd(X, adj_ids, adj_dists, *, lambda0: int, max_degree: int,
+            metric: str, tile: int = 2048, unroll: bool = False):
+    """Stage 2: λ per edge, sort by (λ, dist), threshold λ0, truncate to M.
+
+    Returns (neighbors [N, M], lambdas [N, M], degrees [N]).
+    """
+    N, K = adj_ids.shape
+    n_tiles = -(-N // tile)
+    pad = n_tiles * tile - N
+    ids_p = jnp.pad(adj_ids, ((0, pad), (0, 0)), constant_values=N)
+    d_p = jnp.pad(adj_dists, ((0, pad), (0, 0)), constant_values=INF)
+
+    from repro.core.knn_build import tiled_map
+
+    def one(i):
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i * tile, tile, 0)
+        return occlusion_factors_tile(X, sl(ids_p), sl(d_p), metric=metric)
+
+    lam = tiled_map(one, n_tiles, unroll).reshape(-1, K)[:N]
+
+    # sort by (λ asc, dist asc) — lexsort via two stable argsorts
+    order_d = jnp.argsort(adj_dists, axis=1, stable=True)
+    lam_d = jnp.take_along_axis(lam, order_d, axis=1)
+    order_l = jnp.argsort(lam_d, axis=1, stable=True)
+    order = jnp.take_along_axis(order_d, order_l, axis=1)
+
+    sid = jnp.take_along_axis(adj_ids, order, axis=1)
+    slam = jnp.take_along_axis(lam, order, axis=1)
+    ok = (slam <= lambda0) & (sid < N)
+    sid = jnp.where(ok, sid, N)
+    slam = jnp.where(ok, slam, jnp.int32(2 ** 30))
+    degrees = jnp.sum(ok[:, :max_degree], axis=1).astype(jnp.int32)
+    return (sid[:, :max_degree].astype(jnp.int32),
+            slam[:, :max_degree], degrees)
+
+
+# --------------------------------------------------------------------------
+# packed graph + end-to-end build
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedGraph:
+    """λ-sorted fixed-width adjacency (sentinel id = N).
+
+    `hubs` (optional) — beyond-paper connectivity augmentation: a random
+    sample of nodes cross-linked by an exact hub-k-NN graph, also offered to
+    the search procedures as seed candidates.  k-NN graphs of strongly
+    clustered data are disconnected (no amount of diversification fixes
+    that); HNSW solves it with its hierarchy, NSG with a spanning tree — the
+    hub graph is the flat, TPU-friendly equivalent.  Disabled
+    (bridge_hubs=0) for paper-faithful runs.
+    """
+
+    neighbors: jax.Array  # [N, M] int32
+    lambdas: jax.Array    # [N, M] int32 (ascending per row)
+    degrees: jax.Array    # [N] int32
+    hubs: jax.Array | None = None  # [n_hubs] int32
+
+    @property
+    def n(self) -> int:
+        return self.neighbors.shape[0]
+
+    @property
+    def max_degree(self) -> int:
+        return self.neighbors.shape[1]
+
+    def avg_degree(self) -> float:
+        return float(jnp.mean(self.degrees.astype(jnp.float32)))
+
+    def degree_at(self, lambda_limit: int) -> jax.Array:
+        """Per-node prefix length visiting only edges with λ < limit."""
+        return jnp.sum(self.lambdas < lambda_limit, axis=1).astype(jnp.int32)
+
+    def tree_flatten(self):
+        return (self.neighbors, self.lambdas, self.degrees, self.hubs), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def add_bridges(X, nbrs, lams, *, n_hubs: int, hub_k: int, metric: str,
+                seed: int = 0):
+    """Beyond-paper: cross-link a random hub sample with its exact hub-k-NN
+    graph (symmetric), splicing hub edges into the packed rows with λ = 1.
+    Returns (neighbors, lambdas, hubs)."""
+    N, Mdeg = nbrs.shape
+    key = jax.random.key(seed)
+    hubs = jax.random.choice(key, N, (n_hubs,), replace=False).astype(jnp.int32)
+    hd = M.pairwise(X[hubs], X[hubs], metric)
+    hd = jnp.where(jnp.eye(n_hubs, dtype=bool), INF, hd)
+    near_k = max(1, hub_k // 2)
+    rand_k = hub_k - near_k
+    _, hnn = jax.lax.top_k(-hd, near_k)                       # nearest hubs
+    hub_edges = hubs[hnn]
+    if rand_k:  # Kleinberg-style long links make the hub graph an expander
+        rnd = jax.random.randint(jax.random.fold_in(key, 7),
+                                 (n_hubs, rand_k), 0, n_hubs)
+        hub_edges = jnp.concatenate([hub_edges, hubs[rnd]], axis=1)
+    # no self-loops: a random link may hit its own hub -> sentinel it out
+    hub_edges = jnp.where(hub_edges == hubs[:, None], N, hub_edges)
+    # symmetric: each hub row gets fwd + rev hub edges (rev of an exact
+    # symmetric-ish kNN is approximated by the fwd list of the other side)
+    # splice: overwrite the tail (highest-λ) columns of each hub row
+    tail = jnp.arange(Mdeg - hub_k, Mdeg)
+    new_nbrs = nbrs.at[hubs[:, None], tail[None, :]].set(hub_edges)
+    new_lams = lams.at[hubs[:, None], tail[None, :]].set(1)
+    # restore (λ, ·) sort order per touched row
+    order = jnp.argsort(new_lams[hubs], axis=1, stable=True)
+    new_nbrs = new_nbrs.at[hubs].set(
+        jnp.take_along_axis(new_nbrs[hubs], order, axis=1))
+    new_lams = new_lams.at[hubs].set(
+        jnp.take_along_axis(new_lams[hubs], order, axis=1))
+    return new_nbrs, new_lams, hubs
+
+
+def build_tsdg(X, cfg, knn_ids=None, knn_dists=None, *,
+               tile: int = 2048) -> PackedGraph:
+    """Full paper pipeline: k-NN graph -> stage 1 -> reverse -> stage 2
+    (-> optional hub bridges)."""
+    from repro.core.knn_build import nn_descent
+
+    unroll = getattr(cfg, "unroll_scans", False)
+    X = M.preprocess(jnp.asarray(X), cfg.metric)
+    if knn_ids is None:
+        knn_ids, knn_dists = nn_descent(X, cfg.k_graph, metric=cfg.metric,
+                                        unroll=unroll)
+    keep = relaxed_gd(X, knn_ids, knn_dists, alpha=cfg.alpha,
+                      metric=cfg.metric, tile=tile, unroll=unroll)
+    adj_ids, adj_d = append_reverse(X, knn_ids, knn_dists, keep,
+                                    rev_cap=cfg.k_graph, metric=cfg.metric)
+    nbrs, lams, degs = soft_gd(X, adj_ids, adj_d, lambda0=cfg.lambda0,
+                               max_degree=cfg.max_degree, metric=cfg.metric,
+                               tile=tile, unroll=unroll)
+    hubs = None
+    n_hubs = getattr(cfg, "bridge_hubs", 0)
+    if n_hubs:
+        n_hubs = min(n_hubs, X.shape[0] // 4)
+        hub_k = min(getattr(cfg, "bridge_k", 8), cfg.max_degree // 2)
+        nbrs, lams, hubs = add_bridges(X, nbrs, lams, n_hubs=n_hubs,
+                                       hub_k=hub_k, metric=cfg.metric)
+        degs = jnp.sum(nbrs < X.shape[0], axis=1).astype(jnp.int32)
+    return PackedGraph(neighbors=nbrs, lambdas=lams, degrees=degs, hubs=hubs)
+
+
+def build_gd_baseline(X, cfg, knn_ids=None, knn_dists=None) -> PackedGraph:
+    """Plain GD (α=1, no soft stage) — the paper's GD [36] baseline."""
+    from repro.core.knn_build import nn_descent
+
+    X = M.preprocess(jnp.asarray(X), cfg.metric)
+    if knn_ids is None:
+        knn_ids, knn_dists = nn_descent(X, cfg.k_graph, metric=cfg.metric)
+    keep = relaxed_gd(X, knn_ids, knn_dists, alpha=1.0, metric=cfg.metric)
+    adj_ids, adj_d = append_reverse(X, knn_ids, knn_dists, keep,
+                                    rev_cap=cfg.k_graph, metric=cfg.metric)
+    N, K = adj_ids.shape
+    order = jnp.argsort(adj_d, axis=1)
+    sid = jnp.take_along_axis(adj_ids, order, axis=1)[:, :cfg.max_degree]
+    degs = jnp.sum(sid < N, axis=1).astype(jnp.int32)
+    lams = jnp.where(sid < N, 0, 2 ** 30).astype(jnp.int32)
+    return PackedGraph(neighbors=sid.astype(jnp.int32), lambdas=lams,
+                       degrees=degs)

@@ -1,0 +1,46 @@
+"""Distance metrics for the ANN core (paper Table 1: L2 / Cosine / IP).
+
+Smaller = closer, uniformly: inner-product and cosine are negated so a single
+ascending comparison serves all three (the paper's footnote 1 convention).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def preprocess(X, metric: str):
+    """Dataset-side preprocessing (cosine -> unit norm)."""
+    if metric == "cos":
+        return X / jnp.maximum(jnp.linalg.norm(X, axis=-1, keepdims=True),
+                               1e-12)
+    return X
+
+
+def pairwise(Q, X, metric: str):
+    """[B, d] x [N, d] -> [B, N] (smaller = closer)."""
+    if metric in ("ip", "cos"):
+        return -jnp.matmul(Q, X.T, preferred_element_type=jnp.float32)
+    # squared L2 via the Gram trick (one GEMM; the MXU hot path)
+    qn = jnp.sum(Q * Q, axis=-1, keepdims=True)
+    xn = jnp.sum(X * X, axis=-1)
+    return qn + xn[None, :] - 2.0 * jnp.matmul(
+        Q, X.T, preferred_element_type=jnp.float32)
+
+
+def batched_rowwise(Q, V, metric: str):
+    """Q [S, d] against per-row candidate vecs V [S, C, d] -> [S, C]."""
+    dots = jnp.einsum("scd,sd->sc", V, Q,
+                      preferred_element_type=jnp.float32)
+    if metric in ("ip", "cos"):
+        return -dots
+    qn = jnp.sum((Q * Q).astype(jnp.float32), axis=-1)[:, None]
+    vn = jnp.sum((V * V).astype(jnp.float32), axis=-1)
+    return qn + vn - 2.0 * dots
+
+
+def point_pairs(A, B, metric: str):
+    """Rowwise distance between A [.., d] and B [.., d] -> [..]."""
+    dots = jnp.sum(A * B, axis=-1)
+    if metric in ("ip", "cos"):
+        return -dots
+    return jnp.sum(jnp.square(A - B), axis=-1)

@@ -1,0 +1,217 @@
+"""Large-batch NN search — paper Algorithm 2, TPU adaptation.
+
+One best-first search per query, vmapped over the batch (the TPU analogue of
+one-thread-block-per-query).  The paper's three data structures are kept with
+their exact hashed-segment layouts:
+
+  R — top-`ef` ranking array, fixed size, Δ-relaxed termination
+      ``m(u,q) > m(f,q) + Δ`` (f = furthest element of a full R);
+  C — expansion queue: `m` segments (segment = id % m) of fixed width;
+      insertion evicts the most distant entry of the segment, pop takes the
+      global min over segment heads;
+  V — visited table: `mv` circular unsorted segments (id % mv), lossy by
+      design — only expanded nodes are recorded (paper: "only the nodes used
+      in the expansion are pushed into V").
+
+TPU adaptation (DESIGN.md §2): the CUDA motivation for *sorted* segments was
+O(1) warp-wide pops; on TPU an [m x seg] masked argmin is a single vector op,
+so segments are stored unsorted with validity masks — same behaviour (hash
+placement, per-segment eviction), one less sort per hop.  R-merges dedup by
+id (strictly better than the paper under a lossy V; noted in EXPERIMENTS).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metrics as M
+from repro.core.diversify import PackedGraph
+
+INF = jnp.float32(3.4e38)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "ef", "hops", "lambda_limit", "metric",
+                     "n_seeds", "m_seg", "seg", "mv_seg", "segv",
+                     "push_all_seeds", "unroll", "gather_limit",
+                     "exact_visited"))
+def large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
+                       ef: int = 64, hops: int = 128, lambda_limit: int = 5,
+                       metric: str = "l2", n_seeds: int = 32,
+                       m_seg: int = 8, seg: int = 32, mv_seg: int = 8,
+                       segv: int = 32, delta: float = 0.0, seed: int = 0,
+                       push_all_seeds: bool = True, unroll: bool = False,
+                       gather_limit: int = 0, exact_visited: bool = False):
+    """Returns (ids [B, k], dists [B, k]).
+
+    `gather_limit` > 0 fetches only that many λ-sorted columns per row (the
+    rows are λ-ascending, so this is the paper's dynamic-degree prefix
+    pushed down into the gather itself — beyond-paper, see EXPERIMENTS §Perf).
+
+    `exact_visited=True` (beyond-paper, EXPERIMENTS §Perf cell 3) replaces
+    the paper's lossy circular V with an exact per-query byte table in HBM:
+    every *evaluated* node is marked, so the per-hop membership tests
+    collapse from three structure scans (V rows, C rows, R array) to one
+    [M]-byte gather — the CUDA shared-memory capacity constraint that
+    forced the lossy V does not exist on TPU.
+    """
+    N, d = X.shape
+    B = Q.shape[0]
+    key = jax.random.key(seed)
+    seeds = jax.random.randint(key, (B, n_seeds), 0, N, jnp.int32)
+    if graph.hubs is not None:
+        nh = graph.hubs.shape[0]
+        hub_pick = jax.random.randint(jax.random.fold_in(key, 1),
+                                      (B, n_seeds // 2), 0, nh)
+        seeds = seeds.at[:, : n_seeds // 2].set(graph.hubs[hub_pick])
+
+    nbrs_all, lams_all = graph.neighbors, graph.lambdas
+    if gather_limit and gather_limit < nbrs_all.shape[1]:
+        nbrs_all = nbrs_all[:, :gather_limit]
+        lams_all = lams_all[:, :gather_limit]
+    Mdeg = nbrs_all.shape[1]
+
+    def one_query(q, seed_ids):
+        # ---- init: best of 32 random seeds -> R = C = {u}  (paper), or
+        # push every *already evaluated* seed (beyond-paper, free) ----------
+        sd = M.batched_rowwise(q[None], X[seed_ids][None], metric)[0]
+        # dedup repeated seed ids so they can't occupy several R slots
+        so = jnp.argsort(seed_ids)
+        ss_ids, ss_d = seed_ids[so], sd[so]
+        dupm = jnp.concatenate([jnp.zeros((1,), bool),
+                                ss_ids[1:] == ss_ids[:-1]])
+        ss_d = jnp.where(dupm, INF, ss_d)
+        if not push_all_seeds:
+            b = jnp.argmin(ss_d)
+            keep1 = jnp.arange(n_seeds) == b
+            ss_d = jnp.where(keep1, ss_d, INF)
+        o = jnp.argsort(ss_d)
+        init_ids = jnp.where(ss_d[o] < INF, ss_ids[o], N)
+        init_d = ss_d[o]
+
+        R_ids = jnp.full((ef,), N, jnp.int32)
+        R_d = jnp.full((ef,), INF)
+        n_init = min(ef, n_seeds)
+        R_ids = R_ids.at[:n_init].set(init_ids[:n_init])
+        R_d = R_d.at[:n_init].set(init_d[:n_init])
+        # C: hashed-segment batch insert of the seeds
+        C_ids = jnp.full((m_seg, seg), N, jnp.int32)
+        C_d = jnp.full((m_seg, seg), INF)
+        seg_of = jnp.clip(init_ids, 0, N - 1) % m_seg
+        smask = (init_d < INF)[None, :] \
+            & (seg_of[None, :] == jnp.arange(m_seg)[:, None])
+        cd = jnp.where(smask, init_d[None, :], INF)
+        ci = jnp.where(smask, init_ids[None, :], N)
+        alld = jnp.concatenate([C_d, cd], axis=1)
+        alli = jnp.concatenate([C_ids, ci], axis=1)
+        os_ = jnp.argsort(alld, axis=1)
+        C_d = jnp.take_along_axis(alld, os_, axis=1)[:, :seg]
+        C_ids = jnp.take_along_axis(alli, os_, axis=1)[:, :seg]
+        if exact_visited:
+            # mark the evaluated seeds; V_ptr is unused in this mode
+            V = jnp.zeros((N,), jnp.uint8).at[
+                jnp.clip(init_ids, 0, N - 1)].set(
+                jnp.where(init_d < INF, 1, 0).astype(jnp.uint8))
+            V_ptr = jnp.zeros((1,), jnp.int32)
+        else:
+            V = jnp.full((mv_seg, segv), N, jnp.int32)
+            V_ptr = jnp.zeros((mv_seg,), jnp.int32)
+
+        def step(state, _):
+            R_ids, R_d, C_ids, C_d, V, V_ptr, done = state
+
+            # ---- pop global min from C (argmin over m x seg lanes) -------
+            flat = C_d.reshape(-1)
+            pidx = jnp.argmin(flat)
+            u_d = flat[pidx]
+            u = C_ids.reshape(-1)[pidx]
+            empty = u_d >= INF
+            C_d2 = C_d.reshape(-1).at[pidx].set(INF).reshape(m_seg, seg)
+            C_ids2 = C_ids.reshape(-1).at[pidx].set(N).reshape(m_seg, seg)
+
+            # ---- Δ-relaxed termination (only once R is full) -------------
+            r_full = R_d[ef - 1] < INF
+            worst = jnp.where(r_full, R_d[ef - 1], INF)
+            terminate = empty | (r_full & (u_d > worst + delta))
+            now_done = done | terminate
+            u_safe = jnp.clip(u, 0, N - 1)
+
+            # ---- neighbors of u, λ-prefix masked --------------------------
+            e = nbrs_all[u_safe]                               # [M]
+            lam = lams_all[u_safe]
+            ok = (lam < lambda_limit) & (e < N) & ~now_done
+            e_safe = jnp.clip(e, 0, N - 1)
+            # drop repeats within this neighbor list (bridge splicing can
+            # duplicate an existing edge) — keep the first occurrence
+            dup_here = jnp.any(
+                jnp.tril(e_safe[:, None] == e_safe[None, :], k=-1), axis=1)
+
+            if exact_visited:
+                # one byte-gather replaces all three membership scans;
+                # evaluated nodes are marked immediately below
+                in_any = V[e_safe] == 1
+                new = ok & ~in_any & ~dup_here
+                V2 = V.at[e_safe].set(
+                    jnp.where(new & ~now_done, 1, V[e_safe])
+                    .astype(jnp.uint8))
+                V_ptr2 = V_ptr
+            else:
+                # ---- V.add(u) (circular segment insert, paper Alg.2) -----
+                vs = u_safe % mv_seg
+                V2 = V.at[vs, V_ptr[vs] % segv].set(u_safe)
+                V_ptr2 = V_ptr.at[vs].add(1)
+                V2 = jnp.where(now_done, V, V2)
+                V_ptr2 = jnp.where(now_done, V_ptr, V_ptr2)
+                # membership tests: e ∉ V and e ∉ C (paper line 15)
+                in_V = jnp.any(V2[e_safe % mv_seg] == e_safe[:, None],
+                               axis=1)
+                c_rows_ids = C_ids2[e_safe % m_seg]            # [M, seg]
+                c_rows_d = C_d2[e_safe % m_seg]
+                in_C = jnp.any((c_rows_ids == e_safe[:, None])
+                               & (c_rows_d < INF), axis=1)
+                in_R = jnp.any((R_ids[None, :] == e_safe[:, None])
+                               & (R_d[None, :] < INF), axis=1)
+                new = ok & ~in_V & ~in_C & ~in_R & ~dup_here
+
+            # ---- distances for new candidates (gather + matvec) ----------
+            ev = X[e_safe]                                     # [M, d]
+            ed = M.batched_rowwise(q[None], ev[None], metric)[0]
+            ed = jnp.where(new, ed, INF)
+            admit = (ed < worst) | ~r_full                     # paper line 17
+            ed = jnp.where(admit, ed, INF)
+
+            # ---- push into R: dedup merge-sort, keep ef smallest ----------
+            cat_d = jnp.concatenate([R_d, ed])
+            cat_i = jnp.concatenate([R_ids, jnp.where(ed < INF, e, N)])
+            o = jnp.argsort(cat_d)
+            R_d3 = cat_d[o][:ef]
+            R_ids3 = cat_i[o][:ef]
+
+            # ---- push into C: per-segment insert, evict most distant ------
+            seg_of_e = e_safe % m_seg
+            cand_mask = (ed < INF)[None, :] \
+                & (seg_of_e[None, :] == jnp.arange(m_seg)[:, None])
+            cand_d = jnp.where(cand_mask, ed[None, :], INF)    # [m, M]
+            cand_i = jnp.where(cand_mask, e[None, :], N)
+            all_d = jnp.concatenate([C_d2, cand_d], axis=1)    # [m, seg+M]
+            all_i = jnp.concatenate([C_ids2, cand_i], axis=1)
+            oseg = jnp.argsort(all_d, axis=1)
+            C_d3 = jnp.take_along_axis(all_d, oseg, axis=1)[:, :seg]
+            C_ids3 = jnp.take_along_axis(all_i, oseg, axis=1)[:, :seg]
+
+            R_d4 = jnp.where(now_done, R_d, R_d3)
+            R_ids4 = jnp.where(now_done, R_ids, R_ids3)
+            C_d4 = jnp.where(now_done, C_d, C_d3)
+            C_ids4 = jnp.where(now_done, C_ids, C_ids3)
+            return (R_ids4, R_d4, C_ids4, C_d4, V2, V_ptr2, now_done), None
+
+        state = (R_ids, R_d, C_ids, C_d, V, V_ptr, jnp.zeros((), bool))
+        (R_ids, R_d, *_), _ = jax.lax.scan(step, state, None, length=hops,
+                                           unroll=unroll)
+        return R_ids[:k], R_d[:k]
+
+    ids, dists = jax.vmap(one_query)(Q, seeds)
+    return ids.astype(jnp.int32), dists

@@ -1,0 +1,77 @@
+"""Reference CPU best-first search (numpy) — the NSG-style procedure the
+paper uses for its CPU evaluation (§5.3), with 32 random starting seeds.
+
+Serves three roles: (a) the paper's CPU search for Fig. 4-style benchmarks,
+(b) a correctness oracle for the TPU search procedures, (c) an unbounded
+upper bound on what a given graph can reach (no hashed-structure losses).
+"""
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+
+def _dist(q, x, metric):
+    if metric in ("ip", "cos"):
+        return -float(np.dot(q, x))
+    diff = q - x
+    return float(np.dot(diff, diff))
+
+
+def best_first_search(X: np.ndarray, neighbors: np.ndarray,
+                      lambdas: np.ndarray, q: np.ndarray, *, k: int = 10,
+                      ef: int = 64, lambda_limit: int = 10,
+                      metric: str = "l2", n_seeds: int = 32,
+                      rng: np.random.Generator | None = None):
+    """Single-query best-first search. Returns (ids [k], dists [k])."""
+    N = X.shape[0]
+    rng = rng or np.random.default_rng(0)
+    seeds = rng.integers(0, N, size=n_seeds)
+    visited = set()
+    cand: list = []   # min-heap of (dist, id)
+    top: list = []    # max-heap of (-dist, id), size <= ef
+    for s in set(seeds.tolist()):
+        d = _dist(q, X[s], metric)
+        heapq.heappush(cand, (d, s))
+        heapq.heappush(top, (-d, s))
+        visited.add(s)
+    while len(top) > ef:
+        heapq.heappop(top)
+
+    while cand:
+        d_u, u = heapq.heappop(cand)
+        if len(top) == ef and d_u > -top[0][0]:
+            break
+        for e, lam in zip(neighbors[u], lambdas[u]):
+            e = int(e)
+            if e >= N or lam >= lambda_limit or e in visited:
+                continue
+            visited.add(e)
+            d_e = _dist(q, X[e], metric)
+            if len(top) < ef or d_e < -top[0][0]:
+                heapq.heappush(cand, (d_e, e))
+                heapq.heappush(top, (-d_e, e))
+                if len(top) > ef:
+                    heapq.heappop(top)
+    out = sorted([(-nd, i) for nd, i in top])[:k]
+    ids = np.array([i for _, i in out], np.int32)
+    ds = np.array([d for d, _ in out], np.float32)
+    return ids, ds
+
+
+def search_batch(X, graph, Q, *, k=10, ef=64, lambda_limit=10, metric="l2",
+                 seed=0):
+    """Batch wrapper; graph is a PackedGraph (device or numpy arrays)."""
+    nbrs = np.asarray(graph.neighbors)
+    lams = np.asarray(graph.lambdas)
+    Xn = np.asarray(X)
+    rng = np.random.default_rng(seed)
+    ids, ds = [], []
+    for q in np.asarray(Q):
+        i, d = best_first_search(Xn, nbrs, lams, q, k=k, ef=ef,
+                                 lambda_limit=lambda_limit, metric=metric,
+                                 rng=rng)
+        ids.append(i)
+        ds.append(d)
+    return np.stack(ids), np.stack(ds)

@@ -1,0 +1,101 @@
+"""GraphSAGE fanout neighbor sampler (the `minibatch_lg` substrate).
+
+Host-side CSR + with-replacement layered sampling, producing *fixed-shape*
+subgraph batches (padded/self-looped) so the device step compiles once.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class NeighborSampler:
+    def __init__(self, edge_src: np.ndarray, edge_dst: np.ndarray,
+                 n_nodes: int):
+        order = np.argsort(edge_dst, kind="stable")
+        self.nbr = edge_src[order]  # neighbors grouped by dst
+        counts = np.bincount(edge_dst, minlength=n_nodes)
+        self.offsets = np.concatenate([[0], np.cumsum(counts)])
+        self.n_nodes = n_nodes
+
+    def sample_neighbors(self, nodes: np.ndarray, fanout: int,
+                         rng: np.random.Generator) -> np.ndarray:
+        """[B] -> [B, fanout] sampled in-neighbors (self-loop when isolated)."""
+        starts = self.offsets[nodes]
+        degs = self.offsets[nodes + 1] - starts
+        r = rng.integers(0, 2 ** 31, size=(len(nodes), fanout))
+        idx = starts[:, None] + r % np.maximum(degs, 1)[:, None]
+        out = self.nbr[np.minimum(idx, len(self.nbr) - 1)]
+        return np.where(degs[:, None] > 0, out, nodes[:, None])
+
+    def sample_subgraph(self, seeds: np.ndarray, fanouts,
+                        rng: np.random.Generator):
+        """Layered fanout sample -> packed local subgraph (fixed shapes).
+
+        Nodes: [seeds | layer-1 samples | layer-2 samples | ...] with
+        duplicates kept (fixed shapes); edges point sampled->parent.
+        """
+        layers = [seeds.astype(np.int64)]
+        src_l, dst_l = [], []
+        base = 0
+        for f in fanouts:
+            parents = layers[-1]
+            nbrs = self.sample_neighbors(parents, f, rng)     # [P, f]
+            child_base = base + len(parents)
+            src = (child_base
+                   + np.arange(parents.size * f)).astype(np.int64)
+            dst = (base + np.repeat(np.arange(parents.size), f)).astype(
+                np.int64)
+            src_l.append(src)
+            dst_l.append(dst)
+            layers.append(nbrs.reshape(-1))
+            base = child_base
+        nodes = np.concatenate(layers)
+        seed_mask = np.zeros(len(nodes), bool)
+        seed_mask[: len(seeds)] = True
+        return {
+            "node_ids": nodes.astype(np.int64),
+            "edge_src": np.concatenate(src_l).astype(np.int32),
+            "edge_dst": np.concatenate(dst_l).astype(np.int32),
+            "seed_mask": seed_mask,
+        }
+
+
+def subgraph_sizes(batch_nodes: int, fanouts) -> tuple:
+    """(n_sub_nodes, n_sub_edges) for fixed-shape compilation."""
+    n, e, layer = batch_nodes, 0, batch_nodes
+    for f in fanouts:
+        e += layer * f
+        layer *= f
+        n += layer
+    return n, e
+
+
+class SampledStream:
+    """Iterator of device-ready minibatches over a big host graph."""
+
+    def __init__(self, graph: dict, batch_nodes: int, fanouts,
+                 seed: int = 0):
+        self.g = graph
+        self.sampler = NeighborSampler(graph["edge_src"], graph["edge_dst"],
+                                       graph["node_feat"].shape[0])
+        self.batch_nodes = batch_nodes
+        self.fanouts = tuple(fanouts)
+        self.rng = np.random.default_rng(seed)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        n = self.g["node_feat"].shape[0]
+        seeds = self.rng.integers(0, n, size=self.batch_nodes)
+        sub = self.sampler.sample_subgraph(seeds, self.fanouts, self.rng)
+        ids = sub["node_ids"]
+        return {
+            "node_feat": self.g["node_feat"][ids],
+            "edge_src": sub["edge_src"],
+            "edge_dst": sub["edge_dst"],
+            "edge_mask": np.ones(len(sub["edge_src"]), bool),
+            "node_mask": np.ones(len(ids), bool),
+            "labels": self.g["labels"][ids],
+            "seed_mask": sub["seed_mask"],
+        }

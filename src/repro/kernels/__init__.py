@@ -1,0 +1,3 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU; ops.py wrappers
+fall back to the jnp ref path off-TPU)."""
+from repro.kernels import ops, ref  # noqa: F401

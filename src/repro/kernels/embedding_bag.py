@@ -1,0 +1,63 @@
+"""EmbeddingBag Pallas kernel — the recsys hot path (taxonomy §RecSys).
+
+JAX has no nn.EmbeddingBag; the jnp path is take + mean (ref.py).  This
+kernel keeps the table in HBM (`pl.ANY` memory space — 10^6-10^9 rows never
+fit VMEM) and DMA-gathers the `bag` rows of each lookup into VMEM, reducing
+on the fly.  Grid: one bag-tile per step; ids tile is VMEM-resident.
+
+TPU-target note: production TBE kernels double-buffer the row DMAs
+(async_copy + semaphores) to hide HBM latency behind the reduce; the
+sequential fori_loop here is the portable core validated in interpret mode,
+with the DMA schedule left to Mosaic's automatic pipelining.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bag_kernel(ids_ref, table_ref, o_ref, *, bag: int, rows: int,
+                combine: str):
+    E = o_ref.shape[-1]
+
+    def one_row(r, _):
+        acc0 = jnp.zeros((E,), jnp.float32)
+
+        def body(t, acc):
+            rid = ids_ref[r, t]
+            row = table_ref[pl.ds(rid, 1), :]
+            return acc + row[0].astype(jnp.float32)
+
+        acc = jax.lax.fori_loop(0, bag, body, acc0)
+        if combine == "mean":
+            acc = acc / bag
+        o_ref[r, :] = acc.astype(o_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, rows, one_row, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("combine", "br", "interpret"))
+def embedding_bag_pallas(table, ids, *, combine: str = "mean", br: int = 8,
+                         interpret: bool = False):
+    """table [V, E]; ids [B, bag] -> [B, E]."""
+    B, bag = ids.shape
+    V, E = table.shape
+    Bp = -(-B // br) * br
+    idp = jnp.pad(ids, ((0, Bp - B), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_bag_kernel, bag=bag, rows=br, combine=combine),
+        grid=(Bp // br,),
+        in_specs=[
+            pl.BlockSpec((br, bag), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),    # table stays in HBM
+        ],
+        out_specs=pl.BlockSpec((br, E), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, E), table.dtype),
+        interpret=interpret,
+    )(idp, table)
+    return out[:B]

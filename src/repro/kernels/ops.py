@@ -1,0 +1,81 @@
+"""Public jit'd wrappers: Pallas on TPU, interpret-mode on CPU, jnp ref as
+the always-available fallback.  Model code calls these, never pallas_call."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import embedding_bag as _eb
+from repro.kernels import flash_attention as _fa
+from repro.kernels import l2dist as _l2dist
+from repro.kernels import ref as _ref
+from repro.kernels import segment_matmul as _sm
+from repro.kernels import topk as _topk
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def distance_matrix(Q, X, *, metric: str = "l2", use_pallas: bool = True,
+                    interpret: bool | None = None):
+    """[B, d] x [N, d] -> [B, N]; smaller = closer."""
+    if not use_pallas:
+        return _ref.distance_matrix_ref(Q, X, metric=metric)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _l2dist.distance_matrix_pallas(Q, X, metric=metric,
+                                          interpret=interpret)
+
+
+def bitonic_sort(dists, ids, *, use_pallas: bool = True,
+                 interpret: bool | None = None):
+    if not use_pallas:
+        return _ref.sort_ref(dists, ids)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _topk.bitonic_sort_pallas(dists, ids, interpret=interpret)
+
+
+def bitonic_topk(dists, ids, k: int, *, use_pallas: bool = True,
+                 interpret: bool | None = None):
+    if not use_pallas:
+        return _ref.topk_ref(dists, ids, k)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _topk.bitonic_topk_pallas(dists, ids, k, interpret=interpret)
+
+
+def flash_attention(q, k, v, *, window: int = 0, q_offset: int = 0,
+                    use_pallas: bool = True, interpret: bool | None = None):
+    if not use_pallas:
+        return _ref.attention_ref(q, k, v, window=window, q_offset=q_offset)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _fa.flash_attention_pallas(q, k, v, window=window,
+                                      q_offset=q_offset, interpret=interpret)
+
+
+def embedding_bag(table, ids, *, combine: str = "mean",
+                  use_pallas: bool = True, interpret: bool | None = None):
+    if not use_pallas:
+        return _ref.embedding_bag_ref(table, ids, combine=combine)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _eb.embedding_bag_pallas(table, ids, combine=combine,
+                                    interpret=interpret)
+
+
+def packed_spmm(neighbors, feat, w, *, combine: str = "sum",
+                use_pallas: bool = True, interpret: bool | None = None):
+    if not use_pallas:
+        import jax.numpy as _jnp
+
+        Nf = feat.shape[0]
+        ok = neighbors < Nf
+        rows = feat[_jnp.clip(neighbors, 0, Nf - 1)]
+        rows = _jnp.where(ok[..., None], rows, 0.0)
+        agg = rows.sum(1)
+        if combine == "mean":
+            agg = agg / _jnp.maximum(ok.sum(1, keepdims=True), 1)
+        return agg @ w
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _sm.packed_spmm_pallas(neighbors, feat, w, combine=combine,
+                                  interpret=interpret)

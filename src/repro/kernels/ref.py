@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metrics as M
+
+
+def distance_matrix_ref(Q, X, *, metric: str = "l2"):
+    return M.pairwise(Q.astype(jnp.float32), X.astype(jnp.float32), metric)
+
+
+def sort_ref(dists, ids):
+    """Row-wise ascending (dist, id) lexicographic sort."""
+    order = jnp.lexsort((ids, dists), axis=1)
+    return (jnp.take_along_axis(dists, order, axis=1),
+            jnp.take_along_axis(ids, order, axis=1))
+
+
+def topk_ref(dists, ids, k: int):
+    sd, si = sort_ref(dists, ids)
+    return sd[:, :k], si[:, :k]
+
+
+def attention_ref(q, k, v, *, window: int = 0, q_offset: int = 0):
+    """Exact softmax attention (fp32), causal + optional window, GQA."""
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    scale = hd ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, Sq, KV, G, hd) * scale
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k.astype(jnp.float32))
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Skv)
+    mask = k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= k_pos[None, :] > (q_pos[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def embedding_bag_ref(table, ids, *, combine: str = "mean"):
+    emb = jnp.take(table, ids, axis=0)
+    return emb.sum(-2) if combine == "sum" else emb.mean(-2)
+
+
+def segment_matmul_ref(feat, src, dst, w, n_nodes: int):
+    """GNN gather-GEMM-scatter: sum_{e: dst=i} (feat[src_e] @ w)."""
+    msg = feat[src] @ w
+    return jax.ops.segment_sum(msg, dst, n_nodes)

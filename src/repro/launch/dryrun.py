@@ -1,0 +1,107 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first
+# init).  Everything below is ordinary code.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record memory/cost/collective statistics.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi
+
+Results land in benchmarks/artifacts/dryrun/<arch>__<shape>__<mesh>.json and
+feed EXPERIMENTS.md §Dry-run / §Roofline.
+"""
+import argparse
+import json
+import time
+import traceback
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "benchmarks", "artifacts", "dryrun")
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str,
+             roofline: bool = False) -> dict:
+    import jax
+
+    from repro.analysis import roofline as rl
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import get_bundle
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+           "chips": int(n_chips), "roofline_mode": roofline}
+    t0 = time.time()
+    bundle = get_bundle(arch, shape, mesh, roofline=roofline)
+    lowered = bundle.lower(mesh)
+    rec["lower_s"] = round(time.time() - t0, 1)
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 1)
+    rec["memory"] = rl.memory_summary(compiled)
+    print(f"[{arch}:{shape}:{mesh_kind}] memory_analysis:",
+          rec["memory"], flush=True)
+    roof = rl.analyze(compiled, n_chips)
+    rec["roofline"] = roof.as_dict()
+    print(f"[{arch}:{shape}:{mesh_kind}] cost_analysis: "
+          f"flops={roof.flops:.3e} bytes={roof.bytes_accessed:.3e} "
+          f"coll={roof.coll_bytes:.3e} dominant={roof.dominant}", flush=True)
+    rec["meta"] = {k: (int(v) if isinstance(v, (int,)) else v)
+                   for k, v in bundle.meta.items()}
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--roofline", action="store_true",
+                    help="unroll scans so cost_analysis counts every trip")
+    ap.add_argument("--out", default=ARTIFACTS)
+    args = ap.parse_args()
+
+    from repro.launch.steps import all_cells
+
+    if args.all:
+        cells = all_cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch, shape in cells:
+        for mk in meshes:
+            tag = f"{arch}__{shape}__{mk}" \
+                + ("__roofline" if args.roofline else "")
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[skip] {tag} (cached)", flush=True)
+                continue
+            try:
+                rec = run_cell(arch, shape, mk, roofline=args.roofline)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                print(f"[ok] {tag} lower={rec['lower_s']}s "
+                      f"compile={rec['compile_s']}s", flush=True)
+            except Exception as e:  # noqa: BLE001
+                failures.append((tag, repr(e)))
+                traceback.print_exc()
+                print(f"[FAIL] {tag}: {e}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(" ", tag, err)
+        raise SystemExit(1)
+    print("\nall requested cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,485 @@
+"""Step builders: one StepBundle per (arch x shape x mesh) cell.
+
+A bundle carries everything the dry-run / launcher needs:
+  fn            — the step function to jit
+  args          — ShapeDtypeStruct pytree (no allocation; weak-type-correct)
+  in_shardings / out_shardings — resolved against the mesh
+  donate        — argnums whose buffers the step consumes
+  meta          — model-FLOPs etc. for the roofline report
+
+Per-arch choices documented in DESIGN.md §4: kimi-k2 uses Adafactor
+(momentum off, factored second moments) because AdamW-fp32 state for 1T
+params cannot fit 512 x 16 GB; big archs use grad-accumulation microbatches
+sized to keep the scanned residual-stream carry within HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ANNConfig, GNNConfig, RecsysConfig,
+                                ShapeSpec, TransformerConfig, get_arch,
+                                shapes_for)
+from repro.models import gnn as gnn_lib
+from repro.models import mace as mace_lib
+from repro.models import recsys as recsys_lib
+from repro.models import transformer as tfm
+from repro.models.module import schema_shapes
+from repro.optim.api import OptimizerConfig, make_optimizer
+from repro.parallel.opt_sharding import opt_pspecs
+from repro.parallel.sharding import logical_to_pspec, schema_pspecs
+from repro.train.trainer import make_train_step
+
+
+@dataclasses.dataclass
+class StepBundle:
+    name: str
+    fn: Callable
+    args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    donate: tuple = ()
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def lower(self, mesh: Mesh):
+        if self.in_shardings is None:  # pre-jitted (shard_map) function
+            with mesh:
+                return self.fn.lower(*self.args)
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=self.donate)
+        with mesh:
+            return jitted.lower(*self.args)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _shard_tree(tree_axes, tree_shapes, mesh):
+    """logical-axes pytree + ShapeDtypeStruct pytree -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda ax, s: NamedSharding(
+            mesh, logical_to_pspec(s.shape, ax, mesh)),
+        tree_axes, tree_shapes,
+        is_leaf=lambda x: isinstance(x, tuple) or x is None)
+
+
+# ==========================================================================
+# LM family
+# ==========================================================================
+
+def _lm_optimizer(cfg: TransformerConfig) -> OptimizerConfig:
+    if cfg.name.startswith("kimi"):
+        # 1T params: factored second moments, no momentum (DESIGN.md §4)
+        return OptimizerConfig(name="adafactor", lr=1e-3, momentum=0.0)
+    return OptimizerConfig(name="adamw", lr=3e-4)
+
+
+def _lm_microbatches(cfg: TransformerConfig, shape: ShapeSpec,
+                     mesh: Mesh) -> int:
+    """Grad-accum factor keeping the per-device scanned carry bounded."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    B, S = shape.dims["global_batch"], shape.dims["seq_len"]
+    per_dev_tokens = B * S / dp
+    # target <= ~8k tokens per device per microbatch
+    mb = max(1, int(per_dev_tokens // 8192))
+    while B % mb != 0:  # microbatch count must divide the global batch
+        mb -= 1
+    return mb
+
+
+def build_lm_bundle(cfg: TransformerConfig, shape: ShapeSpec,
+                    mesh: Mesh, roofline: bool = False) -> StepBundle:
+    if roofline:
+        # unroll every scan so cost_analysis counts all trips (XLA costs a
+        # while body once); grad-accum dropped — its cost scales linearly
+        cfg = dataclasses.replace(cfg, unroll=True)
+    if cfg.moe is not None and cfg.moe.dispatch_groups == 1:
+        # group-local MoE dispatch aligned with the data-parallel shards
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        dp = sizes.get("pod", 1) * sizes.get("data", 1)
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch_groups=dp))
+    schema = tfm.schema(cfg)
+    p_shapes = schema_shapes(schema)
+    p_ps = schema_pspecs(schema, mesh)
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_ps,
+                           is_leaf=lambda x: isinstance(x, P))
+    S = shape.dims["seq_len"]
+    B = shape.dims["global_batch"]
+    meta = {
+        "n_params": cfg.n_params(),
+        "n_active_params": cfg.n_active_params(),
+        "tokens": B * S if shape.kind != "decode" else B,
+    }
+
+    if shape.kind == "train":
+        opt = make_optimizer(_lm_optimizer(cfg))
+        o_shapes = jax.eval_shape(opt.init, p_shapes)
+        o_shard = jax.tree.map(lambda p: NamedSharding(mesh, p),
+                               opt_pspecs(schema, opt, mesh),
+                               is_leaf=lambda x: isinstance(x, P))
+        mb = 1 if roofline else _lm_microbatches(cfg, shape, mesh)
+        tok_shape = ((mb, B // mb, S + 1) if mb > 1 else (B, S + 1))
+        tok_axes = ((None, "batch", None) if mb > 1 else ("batch", None))
+        batch_shapes = {"tokens": _sds(tok_shape, jnp.int32)}
+        batch_shard = {"tokens": NamedSharding(
+            mesh, logical_to_pspec(tok_shape, tok_axes, mesh))}
+        step = make_train_step(
+            lambda p, b: tfm.loss_fn(p, cfg, b), opt, microbatches=mb)
+        metrics_shard = jax.tree.map(
+            lambda _: NamedSharding(mesh, P()),
+            jax.eval_shape(step, p_shapes, o_shapes, batch_shapes)[2])
+        meta["microbatches"] = mb
+        return StepBundle(
+            name=f"{cfg.name}:{shape.name}",
+            fn=step,
+            args=(p_shapes, o_shapes, batch_shapes),
+            in_shardings=(p_shard, o_shard, batch_shard),
+            out_shardings=(p_shard, o_shard, metrics_shard),
+            donate=(0, 1),
+            meta=meta)
+
+    if shape.kind == "prefill":
+        toks = _sds((B, S), jnp.int32)
+        toks_shard = NamedSharding(mesh, logical_to_pspec(
+            (B, S), ("batch", None), mesh))
+
+        def prefill_fn(params, tokens):
+            return tfm.prefill(params, cfg, tokens)
+
+        out_shape = jax.eval_shape(prefill_fn, p_shapes, toks)
+        cache_ax = tfm.cache_logical_axes(cfg)
+        logits_shard = NamedSharding(mesh, logical_to_pspec(
+            out_shape[0].shape, ("batch", "vocab"), mesh))
+        cache_shard = jax.tree.map(
+            lambda s: NamedSharding(
+                mesh, logical_to_pspec(s.shape, cache_ax, mesh)),
+            out_shape[1])
+        return StepBundle(
+            name=f"{cfg.name}:{shape.name}", fn=prefill_fn,
+            args=(p_shapes, toks),
+            in_shardings=(p_shard, toks_shard),
+            out_shardings=(logits_shard, cache_shard),
+            meta=meta)
+
+    # decode
+    cache_shapes = jax.eval_shape(
+        lambda: tfm.init_cache(cfg, B, S))
+    cache_ax = tfm.cache_logical_axes(cfg)
+    cache_shard = jax.tree.map(
+        lambda s: NamedSharding(mesh,
+                                logical_to_pspec(s.shape, cache_ax, mesh)),
+        cache_shapes)
+    tok = _sds((B,), jnp.int32)
+    tok_shard = NamedSharding(mesh, logical_to_pspec((B,), ("batch",), mesh))
+    pos = _sds((), jnp.int32)
+    pos_shard = NamedSharding(mesh, P())
+
+    def decode_fn(params, cache, token, p):
+        return tfm.decode_step(params, cfg, cache, token, p)
+
+    out_shape = jax.eval_shape(decode_fn, p_shapes, cache_shapes, tok, pos)
+    logits_shard = NamedSharding(mesh, logical_to_pspec(
+        out_shape[0].shape, ("batch", "vocab"), mesh))
+    return StepBundle(
+        name=f"{cfg.name}:{shape.name}", fn=decode_fn,
+        args=(p_shapes, cache_shapes, tok, pos),
+        in_shardings=(p_shard, cache_shard, tok_shard, pos_shard),
+        out_shardings=(logits_shard, cache_shard),
+        donate=(1,),
+        meta=meta)
+
+
+# ==========================================================================
+# GNN family
+# ==========================================================================
+
+GNN_N_CLASSES = {"full_graph_sm": 16, "minibatch_lg": 41,
+                 "ogb_products": 47, "molecule": 8}
+
+
+def _pad512(n: int) -> int:
+    """Graph inputs are padded (masks carry validity) so node/edge axes
+    shard exactly on the 16x16 / 2x16x16 meshes."""
+    return -(-n // 512) * 512
+
+
+def _gnn_batch_specs(cfg: GNNConfig, shape: ShapeSpec):
+    d = shape.dims
+    if cfg.kind == "mace":
+        if shape.name == "molecule":
+            G, Nn, Ne = d["batch"], d["n_nodes"], d["n_edges"]
+        elif shape.name == "minibatch_lg":
+            # sampled-training shape: the step consumes the sampled
+            # subgraph (as for the other GNNs), not the full 115M-edge graph
+            from repro.data.sampler import subgraph_sizes
+
+            Nn, Ne = subgraph_sizes(d["batch_nodes"], d["fanout"])
+            G = 1
+        else:
+            # full-batch point-cloud interpretation of the big graph shapes
+            G, Nn, Ne = 1, d["n_nodes"], d["n_edges"]
+        N, E = _pad512(G * Nn), _pad512(G * Ne)
+        shapes = {
+            "positions": _sds((N, 3), jnp.float32),
+            "species": _sds((N,), jnp.int32),
+            "edge_src": _sds((E,), jnp.int32),
+            "edge_dst": _sds((E,), jnp.int32),
+            "edge_mask": _sds((E,), jnp.bool_),
+            "node_mask": _sds((N,), jnp.bool_),
+            "graph_ids": _sds((N,), jnp.int32),
+            "energies": _sds((G,), jnp.float32),
+        }
+        axes = {
+            "positions": ("nodes", None), "species": ("nodes",),
+            "edge_src": ("edges",), "edge_dst": ("edges",),
+            "edge_mask": ("edges",), "node_mask": ("nodes",),
+            "graph_ids": ("nodes",), "energies": ("batch",),
+        }
+        return shapes, axes, 1
+
+    if shape.name == "minibatch_lg":
+        from repro.data.sampler import subgraph_sizes
+
+        N, E = subgraph_sizes(d["batch_nodes"], d["fanout"])
+        d_feat = d["d_feat"]
+    elif shape.name == "molecule":
+        N = d["batch"] * d["n_nodes"]
+        E = d["batch"] * d["n_edges"]
+        d_feat = 16
+    else:
+        N, E, d_feat = d["n_nodes"], d["n_edges"], d["d_feat"]
+    N, E = _pad512(N), _pad512(E)
+    n_classes = GNN_N_CLASSES[shape.name]
+    shapes = {
+        "node_feat": _sds((N, d_feat), jnp.float32),
+        "edge_src": _sds((E,), jnp.int32),
+        "edge_dst": _sds((E,), jnp.int32),
+        "edge_mask": _sds((E,), jnp.bool_),
+        "node_mask": _sds((N,), jnp.bool_),
+    }
+    axes = {
+        "node_feat": ("nodes", None), "edge_src": ("edges",),
+        "edge_dst": ("edges",), "edge_mask": ("edges",),
+        "node_mask": ("nodes",),
+    }
+    if shape.name == "molecule":
+        shapes["graph_ids"] = _sds((N,), jnp.int32)
+        shapes["labels"] = _sds((d["batch"],), jnp.int32)
+        axes["graph_ids"] = ("nodes",)
+        axes["labels"] = ("batch",)
+    else:
+        shapes["labels"] = _sds((N,), jnp.int32)
+        axes["labels"] = ("nodes",)
+        if shape.name == "minibatch_lg":
+            shapes["seed_mask"] = _sds((N,), jnp.bool_)
+            axes["seed_mask"] = ("nodes",)
+    return shapes, axes, n_classes
+
+
+def build_gnn_bundle(cfg: GNNConfig, shape: ShapeSpec,
+                     mesh: Mesh) -> StepBundle:
+    batch_shapes, batch_axes, n_classes = _gnn_batch_specs(cfg, shape)
+    if cfg.kind == "mace":
+        schema = mace_lib.schema(cfg)
+        loss = lambda p, b: mace_lib.loss_fn(p, cfg, b)
+    else:
+        d_feat = batch_shapes["node_feat"].shape[1]
+        schema = gnn_lib.schema(cfg, d_feat, n_classes)
+        loss = lambda p, b: gnn_lib.loss_fn(p, cfg, b)
+
+    p_shapes = schema_shapes(schema)
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                           schema_pspecs(schema, mesh),
+                           is_leaf=lambda x: isinstance(x, P))
+    opt = make_optimizer(OptimizerConfig(name="adamw", lr=1e-3))
+    o_shapes = jax.eval_shape(opt.init, p_shapes)
+    o_shard = jax.tree.map(lambda p: NamedSharding(mesh, p),
+                           opt_pspecs(schema, opt, mesh),
+                           is_leaf=lambda x: isinstance(x, P))
+    batch_shard = {
+        k: NamedSharding(mesh, logical_to_pspec(batch_shapes[k].shape,
+                                                batch_axes[k], mesh))
+        for k in batch_shapes}
+    step = make_train_step(loss, opt)
+    metrics_shard = jax.tree.map(
+        lambda _: NamedSharding(mesh, P()),
+        jax.eval_shape(step, p_shapes, o_shapes, batch_shapes)[2])
+    return StepBundle(
+        name=f"{cfg.name}:{shape.name}", fn=step,
+        args=(p_shapes, o_shapes, batch_shapes),
+        in_shardings=(p_shard, o_shard, batch_shard),
+        out_shardings=(p_shard, o_shard, metrics_shard),
+        donate=(0, 1),
+        meta={"n_nodes": batch_shapes[
+            "node_feat" if cfg.kind != "mace" else "positions"].shape[0],
+            "n_edges": batch_shapes["edge_src"].shape[0]})
+
+
+# ==========================================================================
+# recsys family
+# ==========================================================================
+
+def build_recsys_bundle(cfg: RecsysConfig, shape: ShapeSpec,
+                        mesh: Mesh) -> StepBundle:
+    schema = recsys_lib.schema(cfg)
+    p_shapes = schema_shapes(schema)
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                           schema_pspecs(schema, mesh),
+                           is_leaf=lambda x: isinstance(x, P))
+    B = shape.dims["batch"]
+    n_multi = len(cfg.multi_hot_fields)
+    batch_shapes = {
+        "sparse_ids": _sds((B, cfg.n_sparse), jnp.int32),
+        "bags": _sds((B, n_multi, cfg.bag_size), jnp.int32),
+        "dense": _sds((B, cfg.n_dense), jnp.float32),
+    }
+    batch_axes = {
+        "sparse_ids": ("batch", None), "bags": ("batch", None, None),
+        "dense": ("batch", None),
+    }
+    if shape.kind == "train":
+        batch_shapes["labels"] = _sds((B,), jnp.float32)
+        batch_axes["labels"] = ("batch",)
+    batch_shard = {
+        k: NamedSharding(mesh, logical_to_pspec(batch_shapes[k].shape,
+                                                batch_axes[k], mesh))
+        for k in batch_shapes}
+    meta = {"n_params": sum(v * cfg.embed_dim for v in cfg.vocab_sizes)}
+
+    if shape.kind == "train":
+        opt = make_optimizer(OptimizerConfig(name="adamw", lr=1e-3))
+        o_shapes = jax.eval_shape(opt.init, p_shapes)
+        o_shard = jax.tree.map(lambda p: NamedSharding(mesh, p),
+                               opt_pspecs(schema, opt, mesh),
+                               is_leaf=lambda x: isinstance(x, P))
+        step = make_train_step(
+            lambda p, b: recsys_lib.loss_fn(p, cfg, b), opt)
+        metrics_shard = jax.tree.map(
+            lambda _: NamedSharding(mesh, P()),
+            jax.eval_shape(step, p_shapes, o_shapes, batch_shapes)[2])
+        return StepBundle(
+            name=f"{cfg.name}:{shape.name}", fn=step,
+            args=(p_shapes, o_shapes, batch_shapes),
+            in_shardings=(p_shard, o_shard, batch_shard),
+            out_shardings=(p_shard, o_shard, metrics_shard),
+            donate=(0, 1), meta=meta)
+
+    if shape.kind == "serve":
+        def serve_fn(params, batch):
+            return recsys_lib.serve_step(params, cfg, batch)
+
+        out_shard = NamedSharding(mesh, logical_to_pspec(
+            (B,), ("batch",), mesh))
+        return StepBundle(
+            name=f"{cfg.name}:{shape.name}", fn=serve_fn,
+            args=(p_shapes, batch_shapes),
+            in_shardings=(p_shard, batch_shard),
+            out_shardings=out_shard, meta=meta)
+
+    # retrieval: one user vs n_candidates item vectors
+    n_cand = shape.dims["n_candidates"]
+    batch_shapes["item_vectors"] = _sds((n_cand, recsys_lib.RETRIEVAL_DIM),
+                                        jnp.float32)
+    batch_axes["item_vectors"] = ("db", None)
+    batch_shard["item_vectors"] = NamedSharding(
+        mesh, logical_to_pspec((n_cand, recsys_lib.RETRIEVAL_DIM),
+                               ("db", None), mesh))
+
+    def retrieval_fn(params, batch):
+        return recsys_lib.retrieval_step(params, cfg, batch)
+
+    out_shard = (NamedSharding(mesh, P()), NamedSharding(mesh, P()))
+    return StepBundle(
+        name=f"{cfg.name}:{shape.name}", fn=retrieval_fn,
+        args=(p_shapes, batch_shapes),
+        in_shardings=(p_shard, batch_shard),
+        out_shardings=out_shard, meta=meta)
+
+
+# ==========================================================================
+# ANN family (the paper's own system)
+# ==========================================================================
+
+def build_ann_bundle(cfg: ANNConfig, shape: ShapeSpec,
+                     mesh: Mesh, roofline: bool = False) -> StepBundle:
+    from repro.core import distributed as dist
+
+    if roofline:
+        cfg = dataclasses.replace(cfg, unroll_scans=True)
+    d = shape.dims
+    N, dim = d["n"], d["d"]
+    db_spec = logical_to_pspec((N, dim), ("db", None), mesh)
+    X_sds = _sds((N, dim), jnp.float32)
+    X_shard = NamedSharding(mesh, db_spec)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_db = sizes.get("pod", 1) * sizes.get("data", 1)
+    meta = {"n": N, "d": dim, "db_shards": n_db}
+
+    if shape.kind == "build":
+        fn = dist.make_build_fn(mesh, cfg)
+        # the jitted shard_map fn carries its own shardings
+        return StepBundle(
+            name=f"tsdg:{shape.name}", fn=fn, args=(X_sds,),
+            in_shardings=None, out_shardings=None, meta=meta)
+
+    B = d["batch"]
+    kind = "small" if B * d.get("t0", 1) < cfg.small_batch_threshold * n_db \
+        else "large"
+    kind = "small" if shape.name == "search_small" else "large"
+    fn = dist.make_search_fn(mesh, cfg, kind=kind, k=10)
+    Mdeg = cfg.max_degree
+    nbrs = _sds((N, Mdeg), jnp.int32)
+    lams = _sds((N, Mdeg), jnp.int32)
+    degs = _sds((N,), jnp.int32)
+    n_hubs = min(cfg.bridge_hubs, (N // n_db) // 4) * n_db
+    hubs = _sds((n_hubs,), jnp.int32)
+    Q = _sds((B, dim), jnp.float32)
+    meta["search_kind"] = kind
+    return StepBundle(
+        name=f"tsdg:{shape.name}", fn=fn,
+        args=(X_sds, nbrs, lams, degs, hubs, Q),
+        in_shardings=None, out_shardings=None, meta=meta)
+
+
+# ==========================================================================
+# entry point
+# ==========================================================================
+
+def get_bundle(arch_id: str, shape_name: str, mesh: Mesh,
+               cfg=None, roofline: bool = False) -> StepBundle:
+    cfg = cfg or get_arch(arch_id)
+    shape = shapes_for(cfg)[shape_name]
+    if cfg.family == "lm":
+        return build_lm_bundle(cfg, shape, mesh, roofline=roofline)
+    if cfg.family == "gnn":
+        return build_gnn_bundle(cfg, shape, mesh)  # no scans in GNN steps
+    if cfg.family == "recsys":
+        return build_recsys_bundle(cfg, shape, mesh)
+    if cfg.family == "ann":
+        return build_ann_bundle(cfg, shape, mesh, roofline=roofline)
+    raise ValueError(cfg.family)
+
+
+def all_cells(include_ann: bool = True):
+    """The assigned 40 cells (+ the paper's own 4)."""
+    from repro.configs.base import _ARCH_MODULES
+
+    cells = []
+    for m in _ARCH_MODULES:
+        arch = m.replace("_", "-")
+        cfg = get_arch(arch)
+        if cfg.family == "ann" and not include_ann:
+            continue
+        for shape in shapes_for(cfg):
+            cells.append((arch, shape))
+    return cells

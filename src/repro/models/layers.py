@@ -1,0 +1,242 @@
+"""Transformer building blocks: norms, RoPE, chunked (flash-style) attention.
+
+Attention never materializes the full [S, S] score matrix: the XLA path is a
+running-softmax over KV chunks (the jnp formulation of FlashAttention), which
+is also the oracle the Pallas kernel (`repro.kernels.flash_attention`) is
+checked against.  Window masking covers starcoder2's sliding window and
+gemma3's 5:1 local:global pattern.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def rms_norm(x, scale=None, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * (1.0 + scale.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def nonparametric_ln(x, eps: float = 1e-5):
+    """OLMo-style LayerNorm without learnable scale/bias."""
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def make_norm(cfg):
+    if cfg.nonparametric_ln:
+        return lambda x, scale=None: nonparametric_ln(x)
+    return rms_norm
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., None, :]  # broadcast over heads
+    cos = cos[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# chunked (memory-bounded) attention
+# --------------------------------------------------------------------------
+
+def _chunk_mask(q_pos, k_pos, window):
+    """causal + optional sliding window; q_pos [Cq], k_pos [Ck] -> [Cq, Ck].
+
+    `window` may be a traced scalar (per-layer window under scan): <=0 means
+    full causal attention, >0 is a sliding window — expressed arithmetically
+    so it stays jit/scan-friendly.
+    """
+    w = jnp.asarray(window)
+    m = k_pos[None, :] <= q_pos[:, None]
+    in_window = (w <= 0) | (k_pos[None, :] > (q_pos[:, None] - w))
+    return m & in_window
+
+
+def chunked_attention(q, k, v, *, window: int = 0, q_offset: int = 0,
+                      chunk_q: int = 512, chunk_kv: int = 1024,
+                      kv_valid: int | jax.Array | None = None,
+                      unroll: bool = False):
+    """FlashAttention-style running softmax over KV chunks (pure jnp).
+
+    q: [B, Sq, H, hd]; k/v: [B, Skv, KV, hd] (GQA: H = KV * G).
+    window: 0/negative = full causal; >0 = sliding window.
+    q_offset: absolute position of q[0] (decode / chunked prefill).
+    kv_valid: number of valid KV slots (decode with padded cache).
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    scale = hd ** -0.5
+
+    nq = -(-Sq // chunk_q)
+    nkv = -(-Skv // chunk_kv)
+    pad_q = nq * chunk_q - Sq
+    pad_kv = nkv * chunk_kv - Skv
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+
+    # [B, nq, Cq, KV, G, hd] view of q
+    qp = qp.reshape(B, nq, chunk_q, KV, G, hd) * scale
+    kp = kp.reshape(B, nkv, chunk_kv, KV, hd)
+    vp = vp.reshape(B, nkv, chunk_kv, KV, hd)
+
+    q_pos = q_offset + jnp.arange(nq * chunk_q).reshape(nq, chunk_q)
+    k_pos = jnp.arange(nkv * chunk_kv).reshape(nkv, chunk_kv)
+    valid = jnp.asarray(Skv if kv_valid is None else kv_valid)
+
+    def kv_step(carry, ikv):
+        acc, m_run, l_run = carry
+        kc, vc = kp[:, ikv], vp[:, ikv]
+        kpos = k_pos[ikv]
+        # scores: [B, nq, Cq, KV, G, Ck]
+        s = jnp.einsum("bqckgh,bzkh->bqckgz", qp, kc,
+                       preferred_element_type=jnp.float32)
+        mask = _chunk_mask(q_pos.reshape(-1), kpos, window)
+        mask = mask.reshape(nq, chunk_q, chunk_kv)[None, :, :, None, None, :]
+        mask = mask & (kpos < valid)[None, None, None, None, None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqckgz,bzkh->bqckgh", p.astype(vc.dtype), vc,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, nq, chunk_q, KV, G, hd), jnp.float32)
+    m0 = jnp.full((B, nq, chunk_q, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, nq, chunk_q, KV, G), jnp.float32)
+    (acc, m_run, l_run), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+                                          jnp.arange(nkv), unroll=unroll)
+    out = acc / jnp.maximum(l_run, 1e-30)[..., None]
+    out = out.reshape(B, nq * chunk_q, H, hd)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+def windowed_chunked_attention(q, k, v, *, window: int, q_offset: int = 0,
+                               chunk_q: int = 1024, chunk_kv: int = 1024):
+    """Sliding-window attention with *static* chunk skipping.
+
+    Requires `window` to be a python int (per-layer-uniform archs like
+    starcoder2, or gemma3's local layers on the unrolled path).  Each query
+    chunk only touches KV chunks inside [q_lo - window, q_hi]: at 32k prefill
+    with a 4k window this is ~8x fewer attention FLOPs than mask-only
+    chunking — and the skipping is visible to `cost_analysis` because the
+    loop bounds are static (EXPERIMENTS §Perf cell 4).
+    """
+    assert isinstance(window, int) and window > 0
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    scale = hd ** -0.5
+    nq = -(-Sq // chunk_q)
+    nkv = -(-Skv // chunk_kv)
+    pad_q = nq * chunk_q - Sq
+    pad_kv = nkv * chunk_kv - Skv
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    kp = kp.reshape(B, nkv, chunk_kv, KV, hd)
+    vp = vp.reshape(B, nkv, chunk_kv, KV, hd)
+
+    outs = []
+    for iq in range(nq):  # static python loop: bounds below are compile-time
+        q_lo = q_offset + iq * chunk_q
+        q_hi = q_offset + (iq + 1) * chunk_q - 1
+        c_lo = max(0, (q_lo - window + 1) // chunk_kv)
+        c_hi = min(nkv - 1, q_hi // chunk_kv)
+        qc = qp[:, iq * chunk_q:(iq + 1) * chunk_q] \
+            .reshape(B, chunk_q, KV, G, hd) * scale
+        q_pos = q_lo + jnp.arange(chunk_q)
+        acc = jnp.zeros((B, chunk_q, KV, G, hd), jnp.float32)
+        m_run = jnp.full((B, chunk_q, KV, G), NEG_INF, jnp.float32)
+        l_run = jnp.zeros((B, chunk_q, KV, G), jnp.float32)
+        for ikv in range(c_lo, c_hi + 1):  # only in-window chunks
+            kc, vc = kp[:, ikv], vp[:, ikv]
+            k_pos = ikv * chunk_kv + jnp.arange(chunk_kv)
+            s = jnp.einsum("bckgh,bzkh->bckgz", qc, kc,
+                           preferred_element_type=jnp.float32)
+            mask = _chunk_mask(q_pos, k_pos, window) \
+                & (k_pos < Skv)[None, :]
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_run = l_run * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bckgz,bzkh->bckgh", p.astype(vc.dtype), vc,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            m_run = m_new
+        out = acc / jnp.maximum(l_run, 1e-30)[..., None]
+        outs.append(out.reshape(B, chunk_q, H, hd))
+    return jnp.concatenate(outs, axis=1)[:, :Sq].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, pos, slot_pos=None,
+                     window: int = 0):
+    """Single-token attention against a (possibly ring-buffer) KV cache.
+
+    q: [B, 1, H, hd]; k_cache/v_cache: [B, S, KV, hd].
+    pos: current absolute position, scalar or [B].
+    slot_pos: [B, S] absolute position stored in each cache slot (ring
+      buffers); None means slot i holds position i.
+    """
+    B, S, KV, hd = k_cache.shape
+    H = q.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    qg = q.reshape(B, KV, G, hd) * scale
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32)
+    pos = jnp.asarray(pos)
+    pos_b = jnp.broadcast_to(pos, (B,))
+    if slot_pos is None:
+        slot_pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    w = jnp.asarray(window)
+    m = slot_pos <= pos_b[:, None]
+    m &= slot_pos >= 0
+    m &= (w <= 0) | (slot_pos > (pos_b[:, None] - w))
+    s = jnp.where(m[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)

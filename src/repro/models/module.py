@@ -1,0 +1,94 @@
+"""Minimal functional param/module system.
+
+No flax in this environment; models are pure functions over pytree param
+dicts.  Each model declares a *schema*: a nested dict whose leaves are
+:class:`ParamSpec` (shape + logical axis names + initializer).  From one
+schema we derive
+  - ``init_params``    : materialized param pytree (jit-able, shard-aware),
+  - ``schema_pspecs``  : a matching pytree of ``PartitionSpec`` resolved
+                         against the active mesh via the logical-axis rules in
+                         ``repro.parallel.sharding``.
+Keeping shapes and shardings in one declaration is what keeps the 40-cell
+dry-run coherent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Initializer = Callable[[jax.Array, tuple, Any], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative description of one parameter tensor."""
+
+    shape: tuple
+    logical_axes: tuple  # one logical axis name (or None) per dim
+    init: str = "normal"  # normal | fan_in | zeros | ones | embed
+    scale: float = 1.0
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical_axes), (
+            f"shape {self.shape} vs logical axes {self.logical_axes}"
+        )
+
+
+def _init_leaf(key: jax.Array, spec: ParamSpec, dtype=None) -> jax.Array:
+    dtype = dtype or spec.dtype
+    shape = spec.shape
+    if spec.init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(shape, dtype)
+    if spec.init == "normal":
+        return (spec.scale * jax.random.normal(key, shape)).astype(dtype)
+    if spec.init == "embed":
+        return (spec.scale * jax.random.normal(key, shape)).astype(dtype)
+    if spec.init == "fan_in":
+        fan_in = shape[0] if len(shape) <= 2 else int(np.prod(shape[:-1]))
+        std = spec.scale / math.sqrt(max(1, fan_in))
+        return (std * jax.random.normal(key, shape)).astype(dtype)
+    raise ValueError(f"unknown init {spec.init}")
+
+
+def is_param_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(schema, key: jax.Array, dtype=None):
+    """Materialize a schema into a param pytree with per-leaf fold_in keys."""
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=is_param_spec)
+    out = []
+    for i, spec in enumerate(leaves):
+        out.append(_init_leaf(jax.random.fold_in(key, i), spec, dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def schema_shapes(schema, dtype=None):
+    """ShapeDtypeStruct pytree for AOT lowering (no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype or s.dtype),
+        schema,
+        is_leaf=is_param_spec,
+    )
+
+
+def param_count(schema) -> int:
+    leaves = jax.tree.leaves(schema, is_leaf=is_param_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+def param_bytes(schema, bytes_per_param=None) -> int:
+    leaves = jax.tree.leaves(schema, is_leaf=is_param_spec)
+    total = 0
+    for s in leaves:
+        bp = bytes_per_param or jnp.dtype(s.dtype).itemsize
+        total += int(np.prod(s.shape)) * bp
+    return total

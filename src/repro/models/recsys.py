@@ -1,0 +1,139 @@
+"""Wide & Deep [arXiv:1606.07792] with a real EmbeddingBag substrate.
+
+JAX has no nn.EmbeddingBag: bags are `jnp.take` + mean-reduce (the fused
+Pallas variant lives in repro.kernels.embedding_bag).  Tables are sharded
+over the `model` axis (vocab dim) — the standard table-sharding layout for
+10^6–10^9-row embeddings; the lookup becomes the hot collective.
+
+The wide branch hashes raw ids and id-pair crosses into one bucketed table
+(the paper's cross-product transformation, hash-trick form).  The retrieval
+head (`retrieval_cand` shape) scores one user against 10^6 candidates with a
+single GEMM — and is exactly the workload the TSDG index accelerates
+(examples/recsys_retrieval.py wires them together).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RecsysConfig
+from repro.models.module import ParamSpec
+from repro.parallel.sharding import with_logical
+
+RETRIEVAL_DIM = 64
+
+
+def schema(cfg: RecsysConfig) -> dict:
+    E = cfg.embed_dim
+    tables = {
+        f"field_{i}": ParamSpec((v, E), ("table", None), init="embed",
+                                scale=0.05)
+        for i, v in enumerate(cfg.vocab_sizes)
+    }
+    deep_in = cfg.n_sparse * E + cfg.n_dense
+    dims = (deep_in,) + tuple(cfg.mlp)
+    mlp = {}
+    for i in range(len(cfg.mlp)):
+        mlp[f"w{i}"] = ParamSpec((dims[i], dims[i + 1]), ("fsdp", "mlp"))
+        mlp[f"b{i}"] = ParamSpec((dims[i + 1],), (None,), init="zeros")
+    return {
+        "tables": tables,
+        "wide": ParamSpec((cfg.wide_hash_buckets, 1), ("table", None),
+                          init="zeros"),
+        "mlp": mlp,
+        "head": ParamSpec((cfg.mlp[-1], 1), (None, None)),
+        "retrieval_proj": ParamSpec((cfg.mlp[-1], RETRIEVAL_DIM),
+                                    (None, None)),
+    }
+
+
+# --------------------------------------------------------------------------
+# embedding bag (gather + segment mean) — the JAX-native EmbeddingBag
+# --------------------------------------------------------------------------
+
+def embedding_bag(table, ids, *, combine: str = "mean"):
+    """table [V, E]; ids [..., bag] -> [..., E]."""
+    emb = jnp.take(table, ids, axis=0)                        # [..., bag, E]
+    if combine == "sum":
+        return jnp.sum(emb, axis=-2)
+    if combine == "mean":
+        return jnp.mean(emb, axis=-2)
+    raise ValueError(combine)
+
+
+def _hash(x, a, buckets):
+    return ((x.astype(jnp.uint32) * np.uint32(2654435761) + np.uint32(a))
+            % np.uint32(buckets)).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# towers
+# --------------------------------------------------------------------------
+
+def user_tower(params, cfg: RecsysConfig, batch):
+    """-> deep activations [B, mlp[-1]] plus the wide logit [B]."""
+    embs = []
+    sparse = batch["sparse_ids"]                              # [B, n_sparse]
+    for i in range(cfg.n_sparse):
+        t = params["tables"][f"field_{i}"]
+        if i in cfg.multi_hot_fields:
+            bag = batch["bags"][:, list(cfg.multi_hot_fields).index(i)]
+            embs.append(embedding_bag(t, bag))                # [B, E]
+        else:
+            embs.append(jnp.take(t, sparse[:, i], axis=0))
+    x = jnp.concatenate(embs + [batch["dense"]], axis=-1)
+    x = with_logical(x, ("batch", None))
+    mp = params["mlp"]
+    for i in range(len(cfg.mlp)):
+        x = jax.nn.relu(x @ mp[f"w{i}"] + mp[f"b{i}"])
+        x = with_logical(x, ("batch", "mlp"))
+    # wide branch: unary hashes + pairwise crosses of the first 8 fields
+    B = sparse.shape[0]
+    wide_idx = [_hash(sparse[:, i] + np.int32(7919 * i), 13 * i + 1,
+                      cfg.wide_hash_buckets) for i in range(cfg.n_sparse)]
+    nc = min(8, cfg.n_sparse)
+    for i in range(nc):
+        for j in range(i + 1, nc):
+            cross = sparse[:, i] * np.int32(31) + sparse[:, j]
+            wide_idx.append(_hash(cross, 97 * (i * nc + j) + 3,
+                                  cfg.wide_hash_buckets))
+    widx = jnp.stack(wide_idx, axis=1)                        # [B, n_wide]
+    wide_logit = jnp.sum(jnp.take(params["wide"], widx, axis=0)[..., 0],
+                         axis=1)
+    return x, wide_logit
+
+
+def forward(params, cfg: RecsysConfig, batch):
+    """CTR logit [B]."""
+    deep, wide_logit = user_tower(params, cfg, batch)
+    logit = (deep @ params["head"])[:, 0] + wide_logit
+    return logit
+
+
+def loss_fn(params, cfg: RecsysConfig, batch):
+    logit = forward(params, cfg, batch).astype(jnp.float32)
+    y = batch["labels"].astype(jnp.float32)
+    loss = jnp.mean(jnp.maximum(logit, 0) - logit * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+    auc_proxy = jnp.mean((logit > 0) == (y > 0.5))
+    return loss, {"loss": loss, "acc": auc_proxy}
+
+
+def serve_step(params, cfg: RecsysConfig, batch):
+    """Online/bulk inference: calibrated CTR."""
+    return jax.nn.sigmoid(forward(params, cfg, batch))
+
+
+def retrieval_step(params, cfg: RecsysConfig, batch):
+    """Score 1 user against `n_candidates` item vectors in one GEMM; top-100.
+
+    batch: user features (batch=1) + item_vectors [n_cand, RETRIEVAL_DIM].
+    """
+    deep, _ = user_tower(params, cfg, batch)
+    u = deep @ params["retrieval_proj"]                       # [1, Dv]
+    items = batch["item_vectors"]
+    items = with_logical(items, ("db", None))
+    scores = (u @ items.T)[0]                                 # [n_cand]
+    top, idx = jax.lax.top_k(scores, 100)
+    return idx.astype(jnp.int32), top

@@ -1,0 +1,338 @@
+"""Decoder-only transformer covering all five assigned LM architectures.
+
+Features driven entirely by :class:`TransformerConfig`:
+  * GQA attention + RoPE, optional QK-norm
+  * sliding-window (starcoder2) and 5:1 local:global (gemma3) masking via a
+    per-layer window vector scanned alongside the stacked layer params
+  * MoE FFN (olmoe / kimi-k2) with sort-based capacity dispatch + shared
+    experts, or dense SwiGLU FFN
+  * non-parametric LN (olmo) vs RMSNorm
+  * train path: lax.scan over stacked layer params + optional remat
+  * serve path: unrolled layers with per-layer KV caches (uniform full caches
+    by default; ring-buffer local caches are the documented hillclimb)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TransformerConfig
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models.module import ParamSpec
+from repro.parallel.sharding import with_logical
+
+
+def _dt(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+# --------------------------------------------------------------------------
+# schema
+# --------------------------------------------------------------------------
+
+def schema(cfg: TransformerConfig) -> dict:
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    H, KV, hd, Ln = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim, cfg.n_layers
+    pdt = _dt(cfg.param_dtype)
+    emb_std = 1.0 / np.sqrt(d)
+
+    def P(shape, axes, init="fan_in", scale=1.0):
+        return ParamSpec(tuple(shape), tuple(axes), init=init, scale=scale,
+                         dtype=pdt)
+
+    block: dict = {
+        "wq": P((Ln, d, H, hd), ("layers", "fsdp", "heads", None)),
+        "wk": P((Ln, d, KV, hd), ("layers", "fsdp", "kv_heads", None)),
+        "wv": P((Ln, d, KV, hd), ("layers", "fsdp", "kv_heads", None)),
+        "wo": P((Ln, H, hd, d), ("layers", "heads", None, "fsdp")),
+    }
+    if not cfg.nonparametric_ln:
+        block["ln1"] = P((Ln, d), ("layers", None), init="zeros")
+        block["ln2"] = P((Ln, d), ("layers", None), init="zeros")
+    if cfg.moe is not None:
+        E, fe = cfg.moe.n_experts, cfg.moe.d_expert
+        block["moe"] = {
+            "router": P((Ln, d, E), ("layers", None, "expert"),
+                        init="normal", scale=emb_std),
+            "w_gate": P((Ln, E, d, fe), ("layers", "expert", "fsdp", None)),
+            "w_up": P((Ln, E, d, fe), ("layers", "expert", "fsdp", None)),
+            "w_down": P((Ln, E, fe, d), ("layers", "expert", None, "fsdp")),
+        }
+        if cfg.moe.n_shared:
+            fs = cfg.moe.d_expert * cfg.moe.n_shared
+            block["shared"] = {
+                "w_gate": P((Ln, d, fs), ("layers", "fsdp", "mlp")),
+                "w_up": P((Ln, d, fs), ("layers", "fsdp", "mlp")),
+                "w_down": P((Ln, fs, d), ("layers", "mlp", "fsdp")),
+            }
+    elif cfg.gated_ffn:
+        block["mlp"] = {
+            "w_gate": P((Ln, d, f), ("layers", "fsdp", "mlp")),
+            "w_up": P((Ln, d, f), ("layers", "fsdp", "mlp")),
+            "w_down": P((Ln, f, d), ("layers", "mlp", "fsdp")),
+        }
+    else:  # plain 2-matrix GELU MLP (starcoder2)
+        block["mlp"] = {
+            "w_up": P((Ln, d, f), ("layers", "fsdp", "mlp")),
+            "w_down": P((Ln, f, d), ("layers", "mlp", "fsdp")),
+        }
+
+    sch: dict = {
+        "embed": ParamSpec((v, d), ("vocab", "fsdp"), init="embed",
+                           scale=emb_std, dtype=pdt),
+        "blocks": block,
+    }
+    if not cfg.nonparametric_ln:
+        sch["final_ln"] = P((d,), (None,), init="zeros")
+    if not cfg.tie_embeddings:
+        sch["lm_head"] = P((d, v), ("fsdp", "vocab"))
+    return sch
+
+
+def layer_windows(cfg: TransformerConfig) -> np.ndarray:
+    """Per-layer attention window; <=0 = full causal."""
+    if cfg.local_global_ratio:
+        r = cfg.local_global_ratio
+        w = [cfg.local_window if (i + 1) % (r + 1) != 0 else 0
+             for i in range(cfg.n_layers)]
+    elif cfg.window:
+        w = [cfg.window] * cfg.n_layers
+    else:
+        w = [0] * cfg.n_layers
+    return np.asarray(w, np.int32)
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+
+def _norm(cfg, x, scale):
+    if cfg.nonparametric_ln:
+        return L.nonparametric_ln(x)
+    return L.rms_norm(x, scale)
+
+
+def _qk_norm(x):
+    x32 = x.astype(jnp.float32)
+    return (x32 * jax.lax.rsqrt(
+        jnp.mean(jnp.square(x32), -1, keepdims=True) + 1e-6)).astype(x.dtype)
+
+
+def attention_block(cfg, p, x, *, window, positions, kv_cache=None, pos=None,
+                    slot_pos=None):
+    """Returns (out, (k, v)) — k/v for cache collection during prefill."""
+    cdt = _dt(cfg.compute_dtype)
+    h = _norm(cfg, x, p.get("ln1"))
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(cdt))
+    q = with_logical(q, ("batch", None, "heads", None))
+    k = with_logical(k, ("batch", None, "kv_heads", None))
+    if getattr(cfg, "qk_norm", False):
+        q, k = _qk_norm(q), _qk_norm(k)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+
+    if kv_cache is None:  # train / prefill: attend within the sequence
+        if isinstance(window, int) and window > 0:
+            # static window -> skip out-of-window KV chunks entirely
+            out = L.windowed_chunked_attention(q, k, v, window=window)
+        else:
+            out = L.chunked_attention(q, k, v, window=window,
+                                      unroll=cfg.unroll)
+    else:  # decode: single token against cache
+        kc, vc = kv_cache
+        out = L.decode_attention(q, kc, vc, pos=pos, slot_pos=slot_pos,
+                                 window=window)
+    out = with_logical(out, ("batch", None, "heads", None))
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cdt))
+    return out, (k, v)
+
+
+def ffn_block(cfg, p, x):
+    """Returns (out, aux)."""
+    cdt = _dt(cfg.compute_dtype)
+    h = _norm(cfg, x, p.get("ln2"))
+    aux = {}
+    if cfg.moe is not None:
+        B, S, d = h.shape
+        flat = h.reshape(B * S, d)
+        mp = {k2: v2.astype(cdt) for k2, v2 in p["moe"].items()}
+        y, aux = moe_lib.moe_ffn(flat, mp, cfg.moe)
+        y = y.reshape(B, S, d)
+        if cfg.moe.n_shared:
+            sp = p["shared"]
+            y = y + L.swiglu(h, sp["w_gate"].astype(cdt),
+                             sp["w_up"].astype(cdt), sp["w_down"].astype(cdt))
+    elif cfg.gated_ffn:
+        mp = p["mlp"]
+        y = L.swiglu(h, mp["w_gate"].astype(cdt), mp["w_up"].astype(cdt),
+                     mp["w_down"].astype(cdt))
+        y = with_logical(y, ("batch", None, None))
+    else:
+        mp = p["mlp"]
+        u = jnp.einsum("...d,df->...f", h, mp["w_up"].astype(cdt))
+        y = jnp.einsum("...f,fd->...d", jax.nn.gelu(u),
+                       mp["w_down"].astype(cdt))
+        y = with_logical(y, ("batch", None, None))
+    return y, aux
+
+
+def block(cfg, p, x, *, window, positions):
+    a, kv = attention_block(cfg, p, x, window=window, positions=positions)
+    x = x + a
+    f, aux = ffn_block(cfg, p, x)
+    x = x + f
+    return x, kv, aux
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def forward(params, cfg: TransformerConfig, tokens, *, collect_cache=False):
+    """tokens [B, S] -> logits [B, S, V] (and stacked KV caches if asked)."""
+    cdt = _dt(cfg.compute_dtype)
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cdt)
+    x = with_logical(x, ("batch", None, None))
+    positions = jnp.arange(S)[None, :]
+    windows_np = layer_windows(cfg)
+    windows = jnp.asarray(windows_np)
+    # uniform window -> pass it statically so out-of-window KV chunks are
+    # skipped at compile time (starcoder2's 4k window at 32k prefill: ~8x
+    # fewer attention FLOPs; EXPERIMENTS §Perf cell 4)
+    uniform_w = int(windows_np[0]) if len(set(windows_np.tolist())) == 1 \
+        else None
+
+    def body(x, scanned):
+        p_layer, window = scanned
+        if uniform_w is not None:
+            window = uniform_w
+        y, kv, aux = block(cfg, p_layer, x, window=window, positions=positions)
+        moe_aux = aux.get("load_balance_loss", jnp.zeros((), jnp.float32)) \
+            + aux.get("router_z_loss", jnp.zeros((), jnp.float32))
+        out = (kv, moe_aux) if collect_cache else (None, moe_aux)
+        return y, out
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if cfg.scan_layers:
+        x, (caches, moe_aux) = jax.lax.scan(body, x,
+                                            (params["blocks"], windows),
+                                            unroll=cfg.unroll)
+        moe_loss = jnp.sum(moe_aux)
+    else:
+        caches_list, moe_loss = [], 0.0
+        for i in range(cfg.n_layers):
+            p_layer = jax.tree.map(lambda q: q[i], params["blocks"])
+            x, (kv, aux) = body(x, (p_layer, windows[i]))
+            caches_list.append(kv)
+            moe_loss = moe_loss + aux
+        caches = caches_list if collect_cache else None
+
+    x = _norm(cfg, x, params.get("final_ln"))
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cdt))
+    logits = with_logical(logits, ("batch", None, "vocab"))
+    if collect_cache:
+        return logits, caches, moe_loss
+    return logits, moe_loss
+
+
+def loss_fn(params, cfg: TransformerConfig, batch):
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    logits, moe_loss = forward(params, cfg, inputs)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = jnp.mean(logz - gold)
+    loss = nll + moe_loss
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"loss": loss, "nll": nll, "moe_loss": moe_loss, "acc": acc}
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + decode with per-layer caches
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int):
+    """Uniform full KV caches, sequence-sharded over the data axis (SP)."""
+    KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    cdt = _dt(cfg.compute_dtype)
+    cache = {}
+    for i in range(cfg.n_layers):
+        cache[f"layer_{i}"] = {
+            "k": jnp.zeros((batch, max_len, KV, hd), cdt),
+            "v": jnp.zeros((batch, max_len, KV, hd), cdt),
+        }
+    return cache
+
+
+def cache_logical_axes(cfg: TransformerConfig):
+    return ("batch", "kv_seq", "kv_heads", None)
+
+
+def prefill(params, cfg: TransformerConfig, tokens):
+    """Returns (last_logits [B, V], cache dict)."""
+    logits, caches, _ = forward(params, cfg, tokens, collect_cache=True)
+    cache = {}
+    if cfg.scan_layers:
+        k_all, v_all = caches  # [L, B, S, KV, hd]
+        for i in range(cfg.n_layers):
+            cache[f"layer_{i}"] = {"k": k_all[i], "v": v_all[i]}
+    else:
+        for i, (k, v) in enumerate(caches):
+            cache[f"layer_{i}"] = {"k": k, "v": v}
+    return logits[:, -1], cache
+
+
+def decode_step(params, cfg: TransformerConfig, cache, token, pos):
+    """token [B] int32, pos scalar int32 (position being generated).
+
+    Writes K/V at `pos`, attends over slots <= pos.  Layers are unrolled so
+    per-layer cache shapes may differ (ring-buffer local caches plug in here).
+    Returns (logits [B, V], new_cache).
+    """
+    cdt = _dt(cfg.compute_dtype)
+    B = token.shape[0]
+    x = params["embed"][token][:, None, :].astype(cdt)  # [B, 1, d]
+    positions = jnp.full((B, 1), pos)
+    windows = layer_windows(cfg)
+    new_cache = {}
+    for i in range(cfg.n_layers):
+        p_layer = jax.tree.map(lambda q: q[i], params["blocks"])
+        lc = cache[f"layer_{i}"]
+        h = _norm(cfg, x, p_layer.get("ln1"))
+        q = jnp.einsum("bsd,dhk->bshk", h, p_layer["wq"].astype(cdt))
+        k = jnp.einsum("bsd,dhk->bshk", h, p_layer["wk"].astype(cdt))
+        v = jnp.einsum("bsd,dhk->bshk", h, p_layer["wv"].astype(cdt))
+        if getattr(cfg, "qk_norm", False):
+            q, k = _qk_norm(q), _qk_norm(k)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        S_max = lc["k"].shape[1]
+        slot = pos % S_max  # full cache: slot == pos; ring buffer: wraps
+        kc = jax.lax.dynamic_update_slice_in_dim(lc["k"], k, slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(lc["v"], v, slot, axis=1)
+        kc = with_logical(kc, cache_logical_axes(cfg))
+        vc = with_logical(vc, cache_logical_axes(cfg))
+        new_cache[f"layer_{i}"] = {"k": kc, "v": vc}
+        out = L.decode_attention(q, kc, vc, pos=pos, window=int(windows[i]))
+        out = jnp.einsum("bshk,hkd->bsd", out, p_layer["wo"].astype(cdt))
+        x = x + out
+        f, _ = ffn_block(cfg, p_layer, x)
+        x = x + f
+    x = _norm(cfg, x, params.get("final_ln"))
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cdt))[:, 0]
+    return with_logical(logits, ("batch", "vocab")), new_cache

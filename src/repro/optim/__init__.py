@@ -1,0 +1,3 @@
+"""Optimizers, schedules, clipping, gradient compression."""
+from repro.optim import adamw, adafactor  # noqa: F401
+from repro.optim.api import OptimizerConfig, make_optimizer  # noqa: F401

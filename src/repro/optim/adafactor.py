@@ -1,0 +1,91 @@
+"""Adafactor with factored second moments (Shazeer & Stern, 2018).
+
+Used for the trillion-parameter config (kimi-k2): AdamW fp32 state is
+8 TB for 1T params and cannot fit 512 x 16 GB; factored second moments are
+O(rows+cols) and momentum is optional/bf16.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-3
+    decay: float = 0.8  # beta2 hat via step^-decay schedule
+    eps1: float = 1e-30
+    eps2: float = 1e-3
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    momentum: float = 0.0  # 0 disables the first-moment buffer entirely
+    momentum_dtype: Any = jnp.bfloat16
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def init(cfg: AdafactorConfig, params):
+    def leaf(p):
+        st = {}
+        if _factored(p.shape):
+            st["vr"] = jnp.zeros(p.shape[:-1], jnp.float32)  # row stats
+            st["vc"] = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        else:
+            st["v"] = jnp.zeros(p.shape, jnp.float32)
+        if cfg.momentum > 0:
+            st["m"] = jnp.zeros(p.shape, cfg.momentum_dtype)
+        return st
+
+    return {
+        "slots": jax.tree.map(leaf, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def _rms(x):
+    return jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-30)
+
+
+def update(cfg: AdafactorConfig, grads, state, params, lr_scale=1.0):
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    beta2 = 1.0 - c ** (-cfg.decay)
+    lr = cfg.lr * lr_scale
+
+    def upd(g, st, p):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + cfg.eps1
+        new_st = dict(st)
+        if _factored(p.shape):
+            vr = beta2 * st["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * st["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            new_st["vr"], new_st["vc"] = vr, vc
+            r = vr / jnp.mean(vr, axis=-1, keepdims=True)
+            u = g32 / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :])
+        else:
+            v = beta2 * st["v"] + (1 - beta2) * g2
+            new_st["v"] = v
+            u = g32 / jnp.sqrt(v)
+        u = u / jnp.maximum(1.0, _rms(u) / cfg.clip_threshold)
+        if cfg.momentum > 0:
+            m = cfg.momentum * st["m"].astype(jnp.float32) + (1 - cfg.momentum) * u
+            new_st["m"] = m.astype(cfg.momentum_dtype)
+            u = m
+        step_size = lr * jnp.maximum(cfg.eps2, _rms(p.astype(jnp.float32)))
+        new_p = p.astype(jnp.float32) - step_size * u
+        if cfg.weight_decay > 0 and p.ndim >= 2:
+            new_p = new_p - lr * cfg.weight_decay * p.astype(jnp.float32)
+        return new_p.astype(p.dtype), new_st
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state["slots"])
+    out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_slots = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return new_params, {"slots": new_slots, "count": count}

@@ -1,0 +1,61 @@
+"""AdamW — pytree implementation (no optax in this environment).
+
+State layout mirrors the param tree so FSDP sharding rules apply unchanged to
+optimizer state (m/v inherit the param PartitionSpec).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: Any = jnp.float32  # bf16 halves optimizer HBM for huge models
+
+
+def init(cfg: AdamWConfig, params):
+    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def update(cfg: AdamWConfig, grads, state, params, lr_scale=1.0):
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** c
+    bc2 = 1.0 - cfg.b2 ** c
+    lr = cfg.lr * lr_scale
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (no decay on norms/bias/embeds-1d)
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * step
+        return new_p.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "count": count}

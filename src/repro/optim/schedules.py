@@ -1,0 +1,34 @@
+"""LR schedules as pure fns of the step counter."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(step, **_):
+    return jnp.ones_like(step, jnp.float32)
+
+
+def warmup_cosine(step, *, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(1.0, warmup_steps)
+    prog = (s - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup_steps, warm, cos)
+
+
+def warmup_linear(step, *, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.0):
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(1.0, warmup_steps)
+    prog = (s - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps)
+    lin = 1.0 - (1.0 - min_ratio) * jnp.clip(prog, 0.0, 1.0)
+    return jnp.where(s < warmup_steps, warm, lin)
+
+
+SCHEDULES = {
+    "constant": constant,
+    "warmup_cosine": warmup_cosine,
+    "warmup_linear": warmup_linear,
+}

@@ -1,0 +1,50 @@
+"""Optimizer-state sharding: slots mirror their parameter's sharding (ZeRO),
+scalars replicated, with divisibility-safe fallbacks.  Shared by the trainer
+and the dry-run step builder."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.module import schema_shapes
+from repro.parallel.sharding import schema_pspecs
+
+
+def _fit_spec(pspec: P, shape, mesh: Mesh) -> P:
+    """Truncate/repair a param PartitionSpec for a slot of `shape`."""
+    spec = list(pspec)
+    nd = len(shape)
+    spec = spec[:nd] + [None] * max(0, nd - len(spec))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    fixed = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axs = (ax,) if isinstance(ax, str) else tuple(ax)
+        prod = 1
+        for a in axs:
+            prod *= sizes[a]
+        fixed.append(ax if dim % prod == 0 else None)
+    return P(*fixed)
+
+
+def opt_pspecs(schema, optimizer, mesh: Mesh):
+    """PartitionSpec pytree for optimizer.init(params)'s state."""
+    param_ps = schema_pspecs(schema, mesh)
+    opt_shape = jax.eval_shape(optimizer.init, schema_shapes(schema))
+
+    def mirror(ps: P, sub):
+        if isinstance(sub, dict):  # adafactor slots {vr, vc, [m]}
+            return {k: _fit_spec(ps, v.shape, mesh) for k, v in sub.items()}
+        return _fit_spec(ps, sub.shape, mesh)
+
+    out = {}
+    for key, sub in opt_shape.items():
+        if key in ("m", "v", "slots"):
+            out[key] = jax.tree.map(
+                mirror, param_ps, sub,
+                is_leaf=lambda x: isinstance(x, P))
+        else:
+            out[key] = jax.tree.map(lambda _: P(), sub)
+    return out

@@ -1,0 +1,140 @@
+"""Logical-axis sharding rules (MaxText-style) with graceful fallback.
+
+A model annotates each tensor dim with a *logical* axis name ("batch",
+"heads", "mlp", ...).  Rules map logical names to mesh axes.  The resolver
+handles the awkward realities of the assigned architectures (36 heads on a
+16-way model axis, 8 KV heads, prime-ish GNN dims): a logical axis is sharded
+over the longest *prefix* of its mesh axes whose product divides the dim, and
+never re-uses a mesh axis already consumed by another dim of the same tensor.
+This keeps every (arch x shape x mesh) cell lowerable without per-arch
+special-casing, while still taking the maximal legal sharding.
+"""
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.module import ParamSpec, is_param_spec
+
+# Default logical -> mesh-axis rules.  Tuples are tried as a prefix.
+# "pod" appears first so multi-pod meshes extend data-parallel axes naturally.
+DEFAULT_RULES: dict = {
+    "batch": ("pod", "data"),
+    "fsdp": ("pod", "data"),          # ZeRO-3 param sharding axis
+    "seq": None,
+    "kv_seq": ("pod", "data"),        # sequence parallelism for long KV caches
+    "embed": None,
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "expert_mlp": None,
+    "table": ("model",),              # recsys embedding-table vocab shard
+    "nodes": ("pod", "data"),         # GNN node shard
+    # edges take the model axis too: GNNs have no TP, so the (huge) per-edge
+    # tensors spread over every chip; the edge->node scatter then all-reduces
+    # over `model` (§Perf mace iteration 4)
+    "edges": ("pod", "data", "model"),
+    "db": ("pod", "data"),            # ANN database shard (the paper's index)
+    "queries": ("model",),            # ANN query parallelism within a pod
+    None: None,
+}
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def resolve_dim(dim: int, logical: str | None, rules: Mapping, mesh: Mesh,
+                used: set, allow_uneven: bool = False) -> tuple:
+    """Return the tuple of mesh axes to shard `dim` over (possibly empty).
+
+    `allow_uneven` — activation *constraints* tolerate non-divisible dims
+    (GSPMD pads); explicit shardings (params, shard_map) stay exact.  This
+    matters: a 61.8M-edge GNN tensor must not fall back to replication just
+    because 61.8M % 16 != 0 (§Perf iteration 2).
+    """
+    spec = rules.get(logical, None)
+    if spec is None:
+        return ()
+    if isinstance(spec, str):
+        spec = (spec,)
+    sizes = mesh_axis_sizes(mesh)
+    # keep only axes present in this mesh and not already used by this tensor
+    axes = [a for a in spec if a in sizes and a not in used]
+    # longest prefix that divides dim (or merely fits, when uneven allowed)
+    best: tuple = ()
+    prod = 1
+    for a in axes:
+        prod *= sizes[a]
+        ok = (dim >= prod) if allow_uneven else (dim % prod == 0)
+        if ok:
+            best = tuple(axes[: axes.index(a) + 1])
+        else:
+            break
+    return best
+
+
+def logical_to_pspec(shape: Sequence[int], logical_axes: Sequence[str | None],
+                     mesh: Mesh, rules: Mapping | None = None,
+                     allow_uneven: bool = False) -> P:
+    rules = rules or DEFAULT_RULES
+    used: set = set()
+    parts = []
+    for dim, name in zip(shape, logical_axes):
+        axes = resolve_dim(dim, name, rules, mesh, used, allow_uneven)
+        used.update(axes)
+        if len(axes) == 0:
+            parts.append(None)
+        elif len(axes) == 1:
+            parts.append(axes[0])
+        else:
+            parts.append(tuple(axes))
+    return P(*parts)
+
+
+def schema_pspecs(schema, mesh: Mesh, rules: Mapping | None = None):
+    """PartitionSpec pytree matching a ParamSpec schema."""
+    return jax.tree.map(
+        lambda s: logical_to_pspec(s.shape, s.logical_axes, mesh, rules),
+        schema,
+        is_leaf=is_param_spec,
+    )
+
+
+def schema_shardings(schema, mesh: Mesh, rules: Mapping | None = None):
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, p),
+        schema_pspecs(schema, mesh, rules),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def with_logical(x: jax.Array, logical_axes: Sequence[str | None],
+                 mesh: Mesh | None = None, rules: Mapping | None = None):
+    """Apply a sharding constraint expressed in logical axes to an activation.
+
+    Inside jit we use ``lax.with_sharding_constraint`` against the ambient
+    mesh; outside (or with no mesh) this is the identity, so model code stays
+    mesh-agnostic.
+    """
+    mesh = mesh or _current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    pspec = logical_to_pspec(x.shape, logical_axes, mesh, rules,
+                             allow_uneven=True)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, pspec))
+
+
+def _current_mesh() -> Mesh | None:
+    try:
+        env = jax.sharding.get_abstract_mesh()
+    except Exception:
+        env = None
+    phys = getattr(jax.interpreters.pxla, "thread_resources", None)
+    if phys is not None and not phys.env.physical_mesh.empty:
+        return phys.env.physical_mesh
+    return None

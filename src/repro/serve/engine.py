@@ -1,0 +1,84 @@
+"""ANN serving engine: the paper's small/large-batch regime dispatch.
+
+The paper's empirical split  (a·SMs + b) / d  decides which procedure a
+batch takes; our TPU analogue compares the batch's *search population*
+(B·t0 for the small procedure) against the device's matmul occupancy target
+(`cfg.small_batch_threshold`, per DB shard).  One engine, one graph — the
+λ-prefix trick means both procedures share the index (paper §3.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ANNConfig
+from repro.core.diversify import PackedGraph, build_tsdg
+from repro.core.search_large import large_batch_search
+from repro.core.search_small import small_batch_search
+
+
+@dataclasses.dataclass
+class ServeStats:
+    n_queries: int = 0
+    n_batches: int = 0
+    small_batches: int = 0
+    large_batches: int = 0
+    total_s: float = 0.0
+
+    @property
+    def qps(self) -> float:
+        return self.n_queries / max(self.total_s, 1e-9)
+
+
+class ANNEngine:
+    """In-process serving: build once, answer batches of queries."""
+
+    def __init__(self, X, cfg: ANNConfig | None = None, *, k: int = 10,
+                 graph: PackedGraph | None = None):
+        self.cfg = cfg or ANNConfig()
+        self.X = jnp.asarray(X)
+        self.k = k
+        self.graph = graph if graph is not None else build_tsdg(self.X,
+                                                                self.cfg)
+        self.stats = ServeStats()
+        self._small = None
+        self._large = None
+
+    def regime(self, batch: int) -> str:
+        """Paper §4: the division threshold between small and large."""
+        return ("small" if batch * self.cfg.small_t0
+                < self.cfg.small_batch_threshold * 4 else "large")
+
+    def query(self, Q, *, k: int | None = None):
+        k = k or self.k
+        Q = jnp.asarray(Q)
+        B = Q.shape[0]
+        kind = self.regime(B)
+        t0 = time.perf_counter()
+        if kind == "small":
+            ids, dists = small_batch_search(
+                self.X, self.graph, Q, k=k, t0=self.cfg.small_t0,
+                hops=self.cfg.small_hops, hop_width=self.cfg.hop_width,
+                n_seeds=self.cfg.n_seeds, lambda_limit=10,
+                metric=self.cfg.metric)
+            self.stats.small_batches += 1
+        else:
+            ids, dists = large_batch_search(
+                self.X, self.graph, Q, k=k, ef=self.cfg.large_ef,
+                hops=self.cfg.large_hops, lambda_limit=5,
+                metric=self.cfg.metric,
+                n_seeds=getattr(self.cfg, "large_n_seeds",
+                                self.cfg.n_seeds),
+                m_seg=self.cfg.queue_segments, seg=self.cfg.segment_size,
+                mv_seg=self.cfg.visited_segments, delta=self.cfg.delta)
+            self.stats.large_batches += 1
+        ids.block_until_ready()
+        dt = time.perf_counter() - t0
+        self.stats.n_queries += B
+        self.stats.n_batches += 1
+        self.stats.total_s += dt
+        return np.asarray(ids), np.asarray(dists)

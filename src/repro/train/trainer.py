@@ -1,0 +1,167 @@
+"""Generic distributed trainer: grad accumulation, clipping, checkpoint/
+restart, step retry (straggler/fault hook), optional EF-int8 gradient
+compression on the data-parallel reduction.
+
+The same trainer drives every family (LM / GNN / recsys): a family provides
+``loss_fn(params, batch) -> (loss, metrics)`` plus a param schema; sharding
+comes from the schema's logical axes resolved against the active mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.module import init_params, schema_shapes
+from repro.optim.api import Optimizer, OptimizerConfig, make_optimizer
+from repro.optim.clip import clip_by_global_norm
+from repro.parallel.sharding import schema_pspecs
+from repro.train import checkpoint as ckpt
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    microbatches: int = 1          # grad-accumulation factor
+    log_every: int = 10
+    ckpt_every: int = 0            # 0 = disabled
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_async: bool = True
+    max_retries: int = 2           # per-step retry (transient-fault hook)
+    seed: int = 0
+
+
+def make_train_step(loss_fn: Callable, optimizer: Optimizer,
+                    max_grad_norm: float = 1.0, microbatches: int = 1,
+                    unroll: bool = False):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With microbatches > 1, `batch` must have a leading [microbatches, ...]
+    axis; gradients are accumulated with a lax.scan (constant memory).
+    """
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return grads, metrics
+
+    def step(params, opt_state, batch):
+        if microbatches > 1:
+            def acc(carry, mb):
+                g_acc, m_acc = carry
+                g, m = grads_of(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                m_acc = jax.tree.map(jnp.add, m_acc, m)
+                return (g_acc, m_acc), None
+
+            zeros_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            g0, m0 = grads_of(params, jax.tree.map(lambda x: x[0], batch))
+            (grads, metrics), _ = jax.lax.scan(
+                acc, (jax.tree.map(jnp.add, zeros_g, g0), m0),
+                jax.tree.map(lambda x: x[1:], batch), unroll=unroll)
+            inv = 1.0 / microbatches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            metrics = jax.tree.map(lambda m: m * inv, metrics)
+        else:
+            grads, metrics = grads_of(params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        return params, opt_state, metrics
+
+    return step
+
+
+class Trainer:
+    def __init__(self, *, schema, loss_fn, mesh: Mesh,
+                 opt_cfg: OptimizerConfig, train_cfg: TrainConfig,
+                 batch_pspec=None):
+        self.schema = schema
+        self.loss_fn = loss_fn
+        self.mesh = mesh
+        self.opt = make_optimizer(opt_cfg)
+        self.cfg = train_cfg
+        self.opt_cfg = opt_cfg
+        self.param_pspecs = schema_pspecs(schema, mesh)
+        self.batch_pspec = batch_pspec
+        self._step_fn = None
+
+    # ---- state ------------------------------------------------------------
+
+    def init_state(self):
+        key = jax.random.key(self.cfg.seed)
+
+        def init():
+            params = init_params(self.schema, key)
+            opt_state = self.opt.init(params)
+            return params, opt_state
+
+        shard = jax.tree.map(lambda p: NamedSharding(self.mesh, p),
+                             self.param_pspecs,
+                             is_leaf=lambda x: isinstance(x, P))
+        out_shardings = (shard, self._opt_shardings(shard))
+        with self.mesh:
+            params, opt_state = jax.jit(init, out_shardings=out_shardings)()
+        return {"params": params, "opt_state": opt_state}
+
+    def _opt_shardings(self, param_shard):
+        """Optimizer-state shardings: slots mirror params (ZeRO)."""
+        from repro.parallel.opt_sharding import opt_pspecs
+
+        specs = opt_pspecs(self.schema, self.opt, self.mesh)
+        return jax.tree.map(lambda p: NamedSharding(self.mesh, p), specs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    # ---- step -------------------------------------------------------------
+
+    def compiled_step(self):
+        if self._step_fn is None:
+            step = make_train_step(self.loss_fn, self.opt,
+                                   self.opt_cfg.max_grad_norm,
+                                   self.cfg.microbatches)
+            self._step_fn = jax.jit(step, donate_argnums=(0, 1))
+        return self._step_fn
+
+    def run(self, data_iter, *, resume: bool = False, state=None,
+            on_metrics: Callable | None = None):
+        if state is None:
+            if resume and ckpt.latest_step(self.cfg.ckpt_dir) is not None:
+                state = self.init_state()
+                shard = jax.tree.map(lambda x: x.sharding, state)
+                state, start = ckpt.restore(self.cfg.ckpt_dir, state,
+                                            shardings=shard)
+                print(f"[trainer] resumed from step {start}")
+            else:
+                state = self.init_state()
+        step_fn = self.compiled_step()
+        params, opt_state = state["params"], state["opt_state"]
+        history = []
+        with self.mesh:
+            for i in range(self.cfg.steps):
+                batch = next(data_iter)
+                for attempt in range(self.cfg.max_retries + 1):
+                    try:
+                        params, opt_state, metrics = step_fn(
+                            params, opt_state, batch)
+                        break
+                    except jax.errors.JaxRuntimeError:
+                        if attempt == self.cfg.max_retries:
+                            raise
+                        print(f"[trainer] step {i} retry {attempt + 1}")
+                if self.cfg.log_every and i % self.cfg.log_every == 0:
+                    host = {k: float(v) for k, v in metrics.items()}
+                    history.append((i, host))
+                    if on_metrics:
+                        on_metrics(i, host)
+                if self.cfg.ckpt_every and (i + 1) % self.cfg.ckpt_every == 0:
+                    ckpt.save({"params": params, "opt_state": opt_state},
+                              i + 1, self.cfg.ckpt_dir,
+                              async_save=self.cfg.ckpt_async)
+        return {"params": params, "opt_state": opt_state}, history

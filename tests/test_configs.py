@@ -1,0 +1,63 @@
+"""Registry + config sanity: all archs load; param counts match public
+figures; every (arch x shape) cell is constructible."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, get_reduced, list_archs, shapes_for
+
+
+def test_registry_complete():
+    archs = list_archs()
+    assert len(archs) == 11  # 10 assigned + the paper's own system
+    for a in archs:
+        cfg = get_arch(a)
+        assert cfg.family in ("lm", "gnn", "recsys", "ann")
+        get_reduced(a)  # must not raise
+
+
+@pytest.mark.parametrize("arch,total_b,active_b", [
+    ("olmoe-1b-7b", 7.0, 1.3),
+    ("kimi-k2-1t-a32b", 1040.0, 32.0),
+    ("starcoder2-7b", 7.2, 7.2),
+    ("gemma3-27b", 27.0, 27.0),
+    ("olmo-1b", 1.3, 1.3),
+])
+def test_lm_param_counts(arch, total_b, active_b):
+    cfg = get_arch(arch)
+    n = cfg.n_params() / 1e9
+    na = cfg.n_active_params() / 1e9
+    assert abs(n - total_b) / total_b < 0.25, f"{arch}: {n:.1f}B vs {total_b}B"
+    assert abs(na - active_b) / active_b < 0.35, f"{arch}: {na:.1f}B active"
+
+
+def test_cell_enumeration():
+    from repro.launch.steps import all_cells
+
+    cells = all_cells(include_ann=False)
+    assert len(cells) == 40  # the assigned 10 archs x 4 shapes
+    cells_all = all_cells()
+    assert len(cells_all) == 44  # + tsdg's own 4
+
+
+def test_shape_specs_complete():
+    for a in list_archs():
+        cfg = get_arch(a)
+        shapes = shapes_for(cfg)
+        assert len(shapes) == 4
+        for name, s in shapes.items():
+            assert s.kind in ("train", "prefill", "decode", "serve",
+                              "retrieval", "build", "search")
+
+
+def test_moe_configs():
+    olmoe = get_arch("olmoe-1b-7b")
+    assert olmoe.moe.n_experts == 64 and olmoe.moe.top_k == 8
+    kimi = get_arch("kimi-k2-1t-a32b")
+    assert kimi.moe.n_experts == 384 and kimi.moe.n_shared == 1
+
+
+def test_head_dims():
+    assert get_arch("starcoder2-7b").resolved_head_dim == 128
+    assert get_arch("gemma3-27b").resolved_head_dim == 128  # explicit
+    assert get_arch("olmo-1b").resolved_head_dim == 128

@@ -1,0 +1,141 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _arr(rng, shape, dtype):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32)).astype(dtype)
+
+
+# ----------------------------------------------------------------------
+# distance matrix
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,N,d", [(8, 16, 4), (70, 200, 48), (128, 256, 128),
+                                   (1, 300, 33)])
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_l2dist_shapes(rng, B, N, d, metric):
+    Q = _arr(rng, (B, d), jnp.float32)
+    X = _arr(rng, (N, d), jnp.float32)
+    a = ops.distance_matrix(Q, X, metric=metric, interpret=True)
+    b = ref.distance_matrix_ref(Q, X, metric=metric)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_l2dist_dtypes(rng, dtype):
+    Q = _arr(rng, (32, 64), dtype)
+    X = _arr(rng, (64, 64), dtype)
+    a = ops.distance_matrix(Q, X, metric="l2", interpret=True)
+    b = ref.distance_matrix_ref(Q.astype(jnp.float32),
+                                X.astype(jnp.float32), metric="l2")
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=tol, atol=tol * 64)
+
+
+# ----------------------------------------------------------------------
+# bitonic sort / top-k
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("R,W", [(3, 8), (37, 32), (64, 64), (17, 128),
+                                 (200, 16)])
+def test_bitonic_sort_shapes(rng, R, W):
+    d = _arr(rng, (R, W), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, 10_000, size=(R, W)).astype(np.int32))
+    sd, si = ops.bitonic_sort(d, ids, interpret=True)
+    rd, ri = ref.sort_ref(d, ids)
+    np.testing.assert_array_equal(np.asarray(sd), np.asarray(rd))
+    np.testing.assert_array_equal(np.asarray(si), np.asarray(ri))
+
+
+def test_bitonic_sort_with_duplicates(rng):
+    d = jnp.asarray(rng.integers(0, 4, size=(20, 32)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 8, size=(20, 32)).astype(np.int32))
+    sd, si = ops.bitonic_sort(d, ids, interpret=True)
+    rd, ri = ref.sort_ref(d, ids)
+    np.testing.assert_array_equal(np.asarray(sd), np.asarray(rd))
+    np.testing.assert_array_equal(np.asarray(si), np.asarray(ri))
+
+
+def test_bitonic_topk(rng):
+    d = _arr(rng, (16, 64), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, 1000, size=(16, 64)).astype(np.int32))
+    td, ti = ops.bitonic_topk(d, ids, 10, interpret=True)
+    rd2, ri2 = ref.topk_ref(d, ids, 10)
+    np.testing.assert_array_equal(np.asarray(td), np.asarray(rd2))
+
+
+# ----------------------------------------------------------------------
+# flash attention
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,KV,hd", [(1, 128, 4, 4, 16),
+                                         (2, 256, 4, 2, 32),
+                                         (1, 384, 8, 1, 64)])
+@pytest.mark.parametrize("window", [0, 64])
+def test_flash_attention_shapes(rng, B, S, H, KV, hd, window):
+    q = _arr(rng, (B, S, H, hd), jnp.float32)
+    k = _arr(rng, (B, S, KV, hd), jnp.float32)
+    v = _arr(rng, (B, S, KV, hd), jnp.float32)
+    a = ops.flash_attention(q, k, v, window=window, interpret=True)
+    b = ref.attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16(rng):
+    q = _arr(rng, (1, 128, 2, 32), jnp.bfloat16)
+    k = _arr(rng, (1, 128, 2, 32), jnp.bfloat16)
+    v = _arr(rng, (1, 128, 2, 32), jnp.bfloat16)
+    a = ops.flash_attention(q, k, v, interpret=True).astype(jnp.float32)
+    b = ref.attention_ref(q, k, v).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_flash_matches_chunked_model_path(rng):
+    """The model's XLA attention and the Pallas kernel must agree."""
+    from repro.models.layers import chunked_attention
+
+    q = _arr(rng, (2, 128, 4, 16), jnp.float32)
+    k = _arr(rng, (2, 128, 2, 16), jnp.float32)
+    v = _arr(rng, (2, 128, 2, 16), jnp.float32)
+    for w in (0, 32):
+        a = ops.flash_attention(q, k, v, window=w, interpret=True)
+        b = chunked_attention(q, k, v, window=w, chunk_q=64, chunk_kv=64)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# ----------------------------------------------------------------------
+# embedding bag / packed spmm
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("V,E,B,bag", [(100, 8, 8, 3), (500, 16, 19, 7),
+                                       (1000, 32, 64, 10)])
+@pytest.mark.parametrize("combine", ["mean", "sum"])
+def test_embedding_bag_shapes(rng, V, E, B, bag, combine):
+    table = _arr(rng, (V, E), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, V, size=(B, bag)).astype(np.int32))
+    a = ops.embedding_bag(table, ids, combine=combine, interpret=True)
+    b = ref.embedding_bag_ref(table, ids, combine=combine)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("N,M,d,f", [(50, 6, 24, 8), (100, 16, 32, 16)])
+@pytest.mark.parametrize("combine", ["sum", "mean"])
+def test_packed_spmm(rng, N, M, d, f, combine):
+    feat = _arr(rng, (N, d), jnp.float32)
+    nbrs = jnp.asarray(rng.integers(0, N + 30, size=(N, M)).astype(np.int32))
+    w = _arr(rng, (d, f), jnp.float32)
+    a = ops.packed_spmm(nbrs, feat, w, combine=combine, interpret=True)
+    b = ops.packed_spmm(nbrs, feat, w, combine=combine, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-4)

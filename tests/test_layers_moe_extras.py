@@ -1,0 +1,95 @@
+"""Equivalence tests for the §Perf optimizations: the optimized paths must
+compute the same math as their baselines."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoEConfig
+from repro.models import moe as moe_lib
+from repro.models.layers import chunked_attention, windowed_chunked_attention
+
+
+@pytest.mark.parametrize("window", [32, 100, 512])
+def test_windowed_chunk_skipping_exact(rng, window):
+    """Static-window chunk skipping == mask-only chunking (§Perf cell 4)."""
+    q = jnp.asarray(rng.normal(size=(2, 300, 4, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(2, 300, 2, 16)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, 300, 2, 16)).astype(np.float32))
+    a = windowed_chunked_attention(q, k, v, window=window, chunk_q=64,
+                                   chunk_kv=64)
+    b = chunked_attention(q, k, v, window=window, chunk_q=64, chunk_kv=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_windowed_attention_with_offset(rng):
+    q = jnp.asarray(rng.normal(size=(1, 128, 2, 8)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 256, 2, 8)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 256, 2, 8)).astype(np.float32))
+    a = windowed_chunked_attention(q, k, v, window=64, q_offset=128,
+                                   chunk_q=32, chunk_kv=32)
+    b = chunked_attention(q, k, v, window=64, q_offset=128, chunk_q=32,
+                          chunk_kv=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5,
+                               rtol=2e-5)
+
+
+def _moe_params(key, d, E, f):
+    ks = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d)
+    return {"router": jax.random.normal(ks[0], (d, E)) * s,
+            "w_gate": jax.random.normal(ks[1], (E, d, f)) * s,
+            "w_up": jax.random.normal(ks[2], (E, d, f)) * s,
+            "w_down": jax.random.normal(ks[3], (E, f, d)) / np.sqrt(f)}
+
+
+@pytest.mark.parametrize("groups", [2, 4, 8])
+def test_grouped_dispatch_bit_exact(groups):
+    """Group-local dispatch == global dispatch at ample capacity (§Perf
+    cell 2) — the 24x collective win costs zero accuracy."""
+    params = _moe_params(jax.random.key(0), 16, 8, 32)
+    x = jax.random.normal(jax.random.key(1), (64, 16))
+    base = MoEConfig(n_experts=8, top_k=2, d_expert=32, capacity_factor=8.0,
+                     dispatch_groups=1)
+    y1, a1 = moe_lib.moe_ffn(x, params, base)
+    yg, ag = moe_lib.moe_ffn(
+        x, params, dataclasses.replace(base, dispatch_groups=groups))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(yg), atol=1e-5)
+    assert float(ag["dropped_fraction"]) == 0.0
+
+
+def test_grouped_dispatch_falls_back_on_indivisible():
+    params = _moe_params(jax.random.key(0), 8, 4, 8)
+    x = jax.random.normal(jax.random.key(1), (30, 8))  # 30 % 4 != 0
+    cfg = MoEConfig(n_experts=4, top_k=2, d_expert=8, capacity_factor=8.0,
+                    dispatch_groups=4)
+    y, aux = moe_lib.moe_ffn(x, params, cfg)  # must not raise
+    assert jnp.all(jnp.isfinite(y))
+
+
+def test_large_seed_count_improves_recall():
+    """The wide-seeding beyond-paper default (EXPERIMENTS §Perf)."""
+    import dataclasses as dc
+
+    from repro.configs import get_arch
+    from repro.core.diversify import build_tsdg
+    from repro.core.knn_build import exact_knn
+    from repro.core.search_large import large_batch_search
+    from repro.data.synthetic import make_clustered, recall_at_k
+
+    ds = make_clustered(n=6000, d=24, n_queries=48, n_clusters=48,
+                        noise=0.5, seed=2)
+    X = jnp.asarray(ds.X)
+    ids_e, d_e = exact_knn(X, 16)
+    cfg = dc.replace(get_arch("tsdg-paper"), k_graph=16, max_degree=24,
+                     lambda0=8)
+    g = build_tsdg(X, cfg, knn_ids=ids_e, knn_dists=d_e)
+    r = {}
+    for ns in (32, 128):
+        out, _ = large_batch_search(X, g, jnp.asarray(ds.Q), k=10, ef=64,
+                                    hops=96, n_seeds=ns)
+        r[ns] = recall_at_k(np.asarray(out), ds.gt, 10)
+    assert r[128] >= r[32], r

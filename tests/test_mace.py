@@ -1,0 +1,85 @@
+"""MACE physics invariants: E(3) symmetry of predicted energies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.data import graphs as DG
+from repro.models import mace as MC
+from repro.models.module import init_params
+
+
+def _setup(l_max=2, corr=3):
+    import dataclasses
+
+    cfg = get_reduced("mace")
+    cfg = dataclasses.replace(cfg, l_max=l_max, correlation_order=corr,
+                              d_hidden=8)
+    mol = {k: jnp.asarray(v)
+           for k, v in DG.make_molecules(4, 8, 16, seed=1).items()}
+    params = init_params(MC.schema(cfg), jax.random.key(0))
+    return cfg, params, mol
+
+
+def _rotmat(seed):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(3, 3))
+    Q, _ = np.linalg.qr(A)
+    if np.linalg.det(Q) < 0:
+        Q[:, 0] *= -1
+    return Q.astype(np.float32)
+
+
+def test_rotation_invariance():
+    cfg, params, mol = _setup()
+    e1 = MC.forward(params, cfg, mol)
+    for seed in (1, 2, 3):
+        R = jnp.asarray(_rotmat(seed))
+        mol2 = dict(mol)
+        mol2["positions"] = mol["positions"] @ R.T
+        e2 = MC.forward(params, cfg, mol2)
+        np.testing.assert_allclose(np.asarray(e1), np.asarray(e2),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_translation_invariance():
+    cfg, params, mol = _setup()
+    e1 = MC.forward(params, cfg, mol)
+    mol2 = dict(mol)
+    mol2["positions"] = mol["positions"] + jnp.asarray([10.0, -3.0, 7.0])
+    e2 = MC.forward(params, cfg, mol2)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_reflection_changes_nothing_for_even_model():
+    # energies are scalars: O(3) invariance includes parity
+    cfg, params, mol = _setup()
+    e1 = MC.forward(params, cfg, mol)
+    mol2 = dict(mol)
+    mol2["positions"] = -mol["positions"]
+    e2 = MC.forward(params, cfg, mol2)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_forces_are_translation_free():
+    """Autodiff forces must sum to ~0 (Newton's third law under the
+    pairwise graph)."""
+    cfg, params, mol = _setup()
+
+    def energy(pos):
+        b = dict(mol)
+        b["positions"] = pos
+        return jnp.sum(MC.forward(params, cfg, b))
+
+    f = -jax.grad(energy)(mol["positions"])
+    # per-graph force sums vanish
+    tot = jax.ops.segment_sum(f, mol["graph_ids"], 4)
+    np.testing.assert_allclose(np.asarray(tot), 0.0, atol=1e-3)
+
+
+def test_l1_correlation2_variant():
+    cfg, params, mol = _setup(l_max=1, corr=2)
+    e = MC.forward(params, cfg, mol)
+    assert np.isfinite(np.asarray(e)).all()

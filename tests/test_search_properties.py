@@ -1,0 +1,94 @@
+"""Property-based tests (hypothesis) on the search invariants."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_arch
+from repro.core.diversify import PackedGraph, build_tsdg
+from repro.core.knn_build import exact_knn
+from repro.core.search_large import large_batch_search
+from repro.core.search_small import small_batch_search
+
+SETTINGS = dict(max_examples=8, deadline=None)
+
+
+def _full_graph(n: int):
+    """Complete graph: every node links every other (λ = 0)."""
+    nbrs = np.tile(np.arange(n, dtype=np.int32), (n, 1))
+    # drop self by shifting: row i lists all j != i, padded with sentinel
+    out = np.full((n, n - 1), n, np.int32)
+    for i in range(n):
+        out[i] = np.concatenate([np.arange(i), np.arange(i + 1, n)])
+    lam = np.zeros_like(out)
+    deg = np.full((n,), n - 1, np.int32)
+    return PackedGraph(neighbors=jnp.asarray(out), lambdas=jnp.asarray(lam),
+                       degrees=jnp.asarray(deg), hubs=None)
+
+
+@given(n=st.integers(20, 60), d=st.integers(2, 12),
+       seed=st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_complete_graph_finds_exact_nn_large(n, d, seed):
+    """On a complete graph, best-first search is exhaustive-equivalent:
+    the true nearest neighbor MUST be found."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    Q = rng.normal(size=(4, d)).astype(np.float32)
+    g = _full_graph(n)
+    ids, dists = large_batch_search(jnp.asarray(X), g, jnp.asarray(Q),
+                                    k=1, ef=16, hops=n + 8, seed=seed)
+    true = np.argmin(((X[None] - Q[:, None]) ** 2).sum(-1), axis=1)
+    np.testing.assert_array_equal(np.asarray(ids)[:, 0], true)
+
+
+@given(n=st.integers(20, 60), d=st.integers(2, 8),
+       seed=st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_small_batch_valid_outputs(n, d, seed):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    Q = rng.normal(size=(3, d)).astype(np.float32)
+    g = _full_graph(n)
+    k = 5
+    ids, dists = small_batch_search(jnp.asarray(X), g, jnp.asarray(Q),
+                                    k=k, t0=4, hops=4, hop_width=16,
+                                    width=16, n_seeds=8, seed=seed)
+    ids, dists = np.asarray(ids), np.asarray(dists)
+    assert ids.shape == (3, k)
+    valid = ids < n
+    assert valid[:, 0].all()                      # at least one result
+    # distances ascending among valid
+    for r in range(3):
+        dv = dists[r][valid[r]]
+        assert (np.diff(dv) >= -1e-5).all()
+        # reported distances match actual distances
+        actual = ((X[ids[r][valid[r]]] - Q[r]) ** 2).sum(-1)
+        np.testing.assert_allclose(dv, actual, rtol=1e-4, atol=1e-4)
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=4, deadline=None)
+def test_build_invariants_random_data(seed):
+    """TSDG build invariants hold on arbitrary gaussian data."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(300, 8)).astype(np.float32)
+    cfg = dataclasses.replace(get_arch("tsdg-paper"), k_graph=8,
+                              max_degree=12, lambda0=6, bridge_hubs=16,
+                              bridge_k=4)
+    g = build_tsdg(jnp.asarray(X), cfg)
+    nbrs = np.asarray(g.neighbors)
+    lam = np.asarray(g.lambdas)
+    n = X.shape[0]
+    assert nbrs.shape == (n, 12)
+    # no self loops among valid edges
+    rows = np.arange(n)[:, None]
+    assert not ((nbrs == rows) & (nbrs < n)).any()
+    # λ ascending per row over valid prefix
+    for r in range(0, n, 37):
+        row = lam[r][nbrs[r] < n]
+        assert (np.diff(row) >= 0).all()
+    # degrees within bounds
+    deg = np.asarray(g.degrees)
+    assert (deg >= 0).all() and (deg <= 12).all()

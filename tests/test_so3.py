@@ -1,0 +1,81 @@
+"""SO(3) machinery: CG/SH consistency and rotation equivariance."""
+import numpy as np
+import pytest
+
+from repro.utils.so3 import (cg_complex, irrep_slices, real_cg,
+                             spherical_harmonics)
+
+
+def _rotmat(rng):
+    A = rng.normal(size=(3, 3))
+    Q, _ = np.linalg.qr(A)
+    if np.linalg.det(Q) < 0:
+        Q[:, 0] *= -1
+    return Q
+
+
+def test_cg_complex_orthogonality():
+    # sum_{m1,m2} <j1 m1 j2 m2|j3 m3><j1 m1 j2 m2|j3' m3'> = delta
+    j1 = j2 = 1
+    for j3 in (0, 1, 2):
+        for j3p in (0, 1, 2):
+            for m3 in range(-j3, j3 + 1):
+                for m3p in range(-j3p, j3p + 1):
+                    s = sum(
+                        cg_complex(j1, m1, j2, m2, j3, m3)
+                        * cg_complex(j1, m1, j2, m2, j3p, m3p)
+                        for m1 in range(-1, 2) for m2 in range(-1, 2))
+                    expect = 1.0 if (j3 == j3p and m3 == m3p) else 0.0
+                    assert abs(s - expect) < 1e-12
+
+
+@pytest.mark.parametrize("l1,l2,l3", [(1, 1, 0), (1, 1, 2), (2, 1, 1),
+                                      (2, 2, 2), (2, 2, 0)])
+def test_real_cg_is_real(l1, l2, l3):
+    C = real_cg(l1, l2, l3)
+    assert C.dtype == np.float64
+    assert np.abs(C).max() > 0
+
+
+def test_sh_product_decomposition():
+    """Y1 x Y1 contracted with CG(1,1,2) is proportional to Y2 pointwise."""
+    rng = np.random.default_rng(0)
+    v = rng.normal(size=(20, 3))
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    Y = spherical_harmonics(v, 2)
+    C = real_cg(1, 1, 2)
+    T = np.einsum("ni,nj,ijk->nk", Y[:, 1:4], Y[:, 1:4], C)
+    ratio = T / Y[:, 4:9]
+    assert np.ptp(ratio) < 1e-10
+
+
+def test_invariant_contraction_is_dot():
+    rng = np.random.default_rng(1)
+    v = rng.normal(size=(10, 3))
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    w = rng.normal(size=(10, 3))
+    w /= np.linalg.norm(w, axis=1, keepdims=True)
+    C0 = real_cg(1, 1, 0)
+    Y1v = spherical_harmonics(v, 1)[:, 1:4]
+    Y1w = spherical_harmonics(w, 1)[:, 1:4]
+    inv = np.einsum("ni,nj,ijk->nk", Y1v, Y1w, C0)[:, 0]
+    dots = np.sum(v * w, axis=1)
+    ratio = inv / dots
+    assert np.ptp(ratio) < 1e-10
+
+
+@pytest.mark.parametrize("l", [1, 2, 3])
+def test_sh_rotation_invariant_norms(l):
+    """||Y_l(Rv)|| == ||Y_l(v)|| for any rotation (equivariance necessary
+    condition; the full MACE energy-invariance test is in test_mace)."""
+    rng = np.random.default_rng(2)
+    v = rng.normal(size=(16, 3))
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    R = _rotmat(rng)
+    sl = irrep_slices(l)
+    Y = spherical_harmonics(v, l)
+    YR = spherical_harmonics(v @ R.T, l)
+    for (ll, a, b) in sl:
+        n1 = np.linalg.norm(Y[:, a:b], axis=1)
+        n2 = np.linalg.norm(YR[:, a:b], axis=1)
+        np.testing.assert_allclose(n1, n2, rtol=1e-10)

@@ -1,0 +1,103 @@
+"""Transformer correctness: serve path must reproduce the train-path logits
+(the strongest KV-cache / RoPE / window-mask consistency check)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import transformer as T
+from repro.models.module import init_params
+
+
+def _consistency(arch: str, atol=2e-2):
+    cfg = get_reduced(arch)
+    cfg = dataclasses.replace(cfg, compute_dtype="float32", remat=False)
+    params = init_params(T.schema(cfg), jax.random.key(0))
+    S = 24
+    toks = jax.random.randint(jax.random.key(1), (2, S), 0, cfg.vocab)
+    logits_full, _ = T.forward(params, cfg, toks)
+
+    # prefill on the first S-4 tokens, decode the rest one by one
+    split = S - 4
+    last, cache = T.prefill(params, cfg, toks[:, :split])
+    cache = {k: {"k": jnp.pad(v["k"], ((0, 0), (0, 4), (0, 0), (0, 0))),
+                 "v": jnp.pad(v["v"], ((0, 0), (0, 4), (0, 0), (0, 0)))}
+             for k, v in cache.items()}
+    np.testing.assert_allclose(np.asarray(last),
+                               np.asarray(logits_full[:, split - 1]),
+                               atol=atol, rtol=1e-3)
+    for i in range(split, S):
+        logits, cache = T.decode_step(params, cfg, cache, toks[:, i],
+                                      jnp.int32(i))
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(logits_full[:, i]),
+                                   atol=atol, rtol=1e-3)
+
+
+def test_decode_matches_forward_dense():
+    _consistency("olmo-1b")
+
+
+def test_decode_matches_forward_gqa_window():
+    _consistency("starcoder2-7b")  # sliding window + GQA
+
+
+def test_decode_matches_forward_local_global():
+    _consistency("gemma3-27b")     # 5:1 local:global + tied embeddings
+
+
+def test_decode_matches_forward_moe():
+    # MoE routing is capacity-bound; use generous capacity so the train
+    # and decode paths route identically
+    cfg = get_reduced("olmoe-1b-7b")
+    cfg = dataclasses.replace(
+        cfg, compute_dtype="float32", remat=False,
+        moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = init_params(T.schema(cfg), jax.random.key(0))
+    S = 16
+    toks = jax.random.randint(jax.random.key(1), (2, S), 0, cfg.vocab)
+    logits_full, _ = T.forward(params, cfg, toks)
+    last, cache = T.prefill(params, cfg, toks[:, : S - 2])
+    cache = {k: {"k": jnp.pad(v["k"], ((0, 0), (0, 2), (0, 0), (0, 0))),
+                 "v": jnp.pad(v["v"], ((0, 0), (0, 2), (0, 0), (0, 0)))}
+             for k, v in cache.items()}
+    for i in range(S - 2, S):
+        logits, cache = T.decode_step(params, cfg, cache, toks[:, i],
+                                      jnp.int32(i))
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(logits_full[:, i]),
+                                   atol=5e-2, rtol=1e-3)
+
+
+def test_layer_windows_pattern():
+    cfg = get_reduced("gemma3-27b")  # 6 layers, ratio 5:1
+    w = T.layer_windows(cfg)
+    assert list(w > 0) == [True] * 5 + [False]   # 5 local then 1 global
+    cfg2 = get_reduced("starcoder2-7b")
+    assert (T.layer_windows(cfg2) == cfg2.window).all()
+
+
+def test_scan_vs_unrolled_layers_agree():
+    cfg = get_reduced("olmo-1b")
+    cfg = dataclasses.replace(cfg, compute_dtype="float32", remat=False)
+    params = init_params(T.schema(cfg), jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 12), 0, cfg.vocab)
+    a, _ = T.forward(params, cfg, toks)
+    b, _ = T.forward(params, dataclasses.replace(cfg, scan_layers=False),
+                     toks)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_unroll_mode_identical_math():
+    cfg = get_reduced("olmo-1b")
+    cfg = dataclasses.replace(cfg, compute_dtype="float32", remat=False)
+    params = init_params(T.schema(cfg), jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (1, 16), 0, cfg.vocab)
+    a, _ = T.forward(params, cfg, toks)
+    b, _ = T.forward(params, dataclasses.replace(cfg, unroll=True), toks)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4,
+                               rtol=1e-4)
