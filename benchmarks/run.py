@@ -256,6 +256,65 @@ def serve_engine_mixed():
          f"large={eng.stats.large_batches}")
 
 
+def serve_bucketed_vs_raw():
+    """Mixed-batch-size stream: shape-bucketed engine (compiles once per
+    (regime, bucket), steady state never re-traces) vs calling the search
+    kernels directly on raw shapes (every distinct B re-traces/compiles)."""
+    from repro.core.search_large import large_batch_search
+    from repro.core.search_small import small_batch_search
+    from repro.serve.engine import ANNEngine
+
+    ds = _dataset(nq=600)
+    cfg = _cfg(serve_buckets=(8, 32, 128, 512),
+               large_hops=32 if QUICK else 64)
+    eng = ANNEngine(ds.X, cfg, k=10)
+    X, graph = eng.X, eng.graph
+    rng = np.random.default_rng(0)
+    # bursty traffic over many *distinct* batch sizes — the serving reality
+    # the bucket ladder exists for
+    sizes = [1, 7, 33, 100, 513] if not QUICK else [1, 7, 33]
+    stream = []
+    for rep in range(3 if QUICK else 6):
+        for B in sizes:
+            B_jit = min(max(1, B + int(rng.integers(-3, 4))), len(ds.Q))
+            stream.append(rng.integers(0, len(ds.Q), B_jit))
+
+    def raw_call(Q):
+        Q = jnp.asarray(Q)
+        if eng.regime(Q.shape[0]) == "small":
+            out = small_batch_search(
+                X, graph, Q, k=10, t0=cfg.small_t0, hops=cfg.small_hops,
+                hop_width=cfg.hop_width, n_seeds=cfg.n_seeds,
+                lambda_limit=10, metric=cfg.metric)
+        else:
+            out = large_batch_search(
+                X, graph, Q, k=10, ef=cfg.large_ef, hops=cfg.large_hops,
+                lambda_limit=5, metric=cfg.metric, n_seeds=cfg.large_n_seeds,
+                m_seg=cfg.queue_segments, seg=cfg.segment_size,
+                mv_seg=cfg.visited_segments, delta=cfg.delta)
+        jax.block_until_ready(out[0])
+        return out
+
+    # raw path: each distinct (regime, B) pays its own trace+compile
+    t0 = time.perf_counter()
+    n_raw = 0
+    for sel in stream:
+        raw_call(ds.Q[sel])
+        n_raw += len(sel)
+    raw_us = (time.perf_counter() - t0) / n_raw * 1e6
+    emit("serve/raw_shapes_stream", raw_us,
+         f"distinct_shapes={len({len(s) for s in stream})}")
+
+    # bucketed engine: same stream; steady-state excludes the few warmups
+    for sel in stream:
+        eng.query(ds.Q[sel])
+    st = eng.stats
+    eng_us = 1e6 / max(st.qps, 1e-9)
+    emit("serve/bucketed_engine_steady", eng_us,
+         f"compiles={st.compiles};hit_rate={st.bucket_hit_rate:.2f};"
+         f"speedup_vs_raw={raw_us / max(eng_us, 1e-9):.1f}x")
+
+
 # ==========================================================================
 # kernel microbenches (XLA path timing; Pallas validated in tests)
 # ==========================================================================
@@ -305,12 +364,18 @@ def roofline_table():
 
 BENCHES = [table2_diversification_time, fig4_cpu_search, fig5_degree_sweep,
            fig6_small_batch, fig10_large_batch, ablation_alpha_lambda,
-           serve_engine_mixed, kernel_micro, roofline_table]
+           serve_engine_mixed, serve_bucketed_vs_raw, kernel_micro,
+           roofline_table]
 
 
 def main() -> None:
+    # REPRO_BENCH_ONLY=serve runs just the benches whose name contains the
+    # substring (the CI serving smoke uses this)
+    only = os.environ.get("REPRO_BENCH_ONLY", "")
     print("name,us_per_call,derived")
     for bench in BENCHES:
+        if only and only not in bench.__name__:
+            continue
         try:
             bench()
         except Exception as e:  # noqa: BLE001

@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Quick CI tier: the fast test suite + a serving smoke benchmark.
+#
+# Excludes @slow tests and the multi-minute distributed subprocess tests
+# (those run in the full tier: `PYTHONPATH=src python -m pytest -q`).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== quick test tier =="
+python -m pytest -q -m "not slow" --ignore=tests/test_distributed.py
+
+echo "== serving smoke bench =="
+REPRO_BENCH_QUICK=1 REPRO_BENCH_ONLY=serve python -m benchmarks.run

@@ -226,6 +226,17 @@ class ANNConfig:
     # exact per-query visited byte-table in HBM replacing the lossy circular
     # V (+ the then-redundant C/R membership scans) — see EXPERIMENTS §Perf
     exact_visited: bool = False
+    # --- serving engine (repro.serve.engine) ---
+    # shape-bucket ladder for the compile cache: batches are padded up to the
+    # smallest bucket >= B so steady-state traffic hits one persistent
+    # compiled callable per (regime, bucket, k).  () disables bucketing
+    # (every distinct raw batch size compiles its own entry).
+    serve_buckets: tuple = (8, 32, 128, 512, 2048)
+    # micro-batching queue (repro.serve.queue): coalesce concurrent small
+    # requests into one device dispatch, waiting at most this long for
+    # co-riders and never exceeding this many queries per dispatch
+    queue_max_wait_ms: float = 2.0
+    queue_max_batch: int = 512
     family: str = "ann"
 
 

@@ -25,6 +25,7 @@ from repro.core import metrics as M
 from repro.core.diversify import PackedGraph, build_tsdg
 from repro.core.search_large import large_batch_search
 from repro.core.search_small import small_batch_search
+from repro.utils.compat import shard_map
 
 
 def db_axes(mesh: Mesh) -> tuple:
@@ -51,7 +52,7 @@ def make_build_fn(mesh: Mesh, cfg: ANNConfig):
         return g.neighbors, g.lambdas, g.degrees, \
             (g.hubs if g.hubs is not None else jnp.zeros((0,), jnp.int32))
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local_build, mesh=mesh,
         in_specs=(P(d_ax, None),),
         out_specs=(P(d_ax, None), P(d_ax, None), P(d_ax), P(d_ax)),
@@ -138,7 +139,7 @@ def make_search_fn(mesh: Mesh, cfg: ANNConfig, *, kind: str = "large",
 
     q_spec = P(None, None) if kind == "small" else P(q_ax, None)
     out_spec = P(None, None) if kind == "small" else P(q_ax, None)
-    fn = jax.shard_map(
+    fn = shard_map(
         local_search, mesh=mesh,
         in_specs=(P(d_ax, None), P(d_ax, None), P(d_ax, None), P(d_ax),
                   P(d_ax), q_spec),

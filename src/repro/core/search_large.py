@@ -60,12 +60,21 @@ def large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
     """
     N, d = X.shape
     B = Q.shape[0]
+    if k > ef:
+        raise ValueError(f"k={k} exceeds the ranking array size ef={ef}; "
+                         "raise ef or lower k")
     key = jax.random.key(seed)
-    seeds = jax.random.randint(key, (B, n_seeds), 0, N, jnp.int32)
+    # per-row keys: row i's seeds depend only on (seed, i), never on B, so
+    # padded batches (serving shape buckets) match unpadded calls bitwise
+    row_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(B))
+    seeds = jax.vmap(
+        lambda rk: jax.random.randint(rk, (n_seeds,), 0, N, jnp.int32))(
+        row_keys)                                             # [B, n_seeds]
     if graph.hubs is not None:
         nh = graph.hubs.shape[0]
-        hub_pick = jax.random.randint(jax.random.fold_in(key, 1),
-                                      (B, n_seeds // 2), 0, nh)
+        hub_pick = jax.vmap(
+            lambda rk: jax.random.randint(jax.random.fold_in(rk, 1),
+                                          (n_seeds // 2,), 0, nh))(row_keys)
         seeds = seeds.at[:, : n_seeds // 2].set(graph.hubs[hub_pick])
 
     nbrs_all, lams_all = graph.neighbors, graph.lambdas

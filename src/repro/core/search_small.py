@@ -46,22 +46,36 @@ def small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
                        width: int = 32, seed: int = 0,
                        unroll: bool = False, seed_offset=0):
     """Returns (ids [B, k], dists [B, k]).  `seed_offset` may be traced
-    (distributed small-batch: each model column runs different searches)."""
+    (distributed small-batch: each model column runs different searches).
+
+    Random seeds are derived per search row (`fold_in` by row index), so row
+    i's draws depend only on (seed, seed_offset, i) — never on the batch
+    size.  Appending padding queries (the serving engine's shape buckets)
+    therefore leaves the real rows bitwise-identical to an unpadded call.
+    """
     N, d = X.shape
     B = Q.shape[0]
     S = B * t0
+    if k > t0 * width:
+        raise ValueError(
+            f"k={k} exceeds the candidate pool t0*width={t0 * width}; "
+            "raise t0/width or lower k")
     half = width // 2
     key = jax.random.fold_in(jax.random.key(seed), seed_offset)
+    row_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(S))
 
     Qs = jnp.repeat(Q, t0, axis=0)                            # [S, d]
 
     # --- seeds: best of n_seeds randoms (paper: as good as hierarchies);
     # half are drawn from the hub set when bridges are enabled ---------------
-    seeds = jax.random.randint(key, (S, n_seeds), 0, N, jnp.int32)
+    seeds = jax.vmap(
+        lambda rk: jax.random.randint(rk, (n_seeds,), 0, N, jnp.int32))(
+        row_keys)                                             # [S, n_seeds]
     if graph.hubs is not None:
         nh = graph.hubs.shape[0]
-        hub_pick = jax.random.randint(jax.random.fold_in(key, 1),
-                                      (S, n_seeds // 2), 0, nh)
+        hub_pick = jax.vmap(
+            lambda rk: jax.random.randint(jax.random.fold_in(rk, 1),
+                                          (n_seeds // 2,), 0, nh))(row_keys)
         seeds = seeds.at[:, : n_seeds // 2].set(graph.hubs[hub_pick])
     sd = M.batched_rowwise(Qs, X[seeds], metric)              # [S, n_seeds]
     best = jnp.argmin(sd, axis=1)

@@ -70,8 +70,11 @@ def main() -> None:
     s = engine.stats
     print(f"[serve] {s.n_queries} queries / {s.n_batches} batches "
           f"({s.small_batches} small, {s.large_batches} large), "
-          f"{s.qps:.0f} QPS"
+          f"{s.qps:.0f} QPS steady-state"
           + (f", weighted recall {hits / total:.3f}" if total else ""))
+    print(f"[serve] compiles={s.compiles} "
+          f"bucket_hit_rate={s.bucket_hit_rate:.2f} "
+          f"padded_queries={s.padded_queries}")
 
 
 if __name__ == "__main__":

@@ -1,14 +1,39 @@
-"""ANN serving engine: the paper's small/large-batch regime dispatch.
+"""ANN serving engine: regime dispatch + shape-bucketed compile cache.
 
 The paper's empirical split  (a·SMs + b) / d  decides which procedure a
 batch takes; our TPU analogue compares the batch's *search population*
 (B·t0 for the small procedure) against the device's matmul occupancy target
 (`cfg.small_batch_threshold`, per DB shard).  One engine, one graph — the
 λ-prefix trick means both procedures share the index (paper §3.3).
+
+Serving additions on top of the paper:
+
+* **Shape buckets** — an incoming batch of B queries is padded up to the
+  smallest bucket in ``cfg.serve_buckets`` that fits (edge-replicated rows),
+  searched at the bucket shape, and sliced back to B rows.  Each
+  (regime, bucket, k) triple is AOT-lowered and compiled exactly once and
+  the executable is kept for the life of the engine, so steady-state
+  traffic never re-traces or re-compiles.  Both search kernels derive their
+  randomness per row (``fold_in`` by row index), so the padded call is
+  bitwise-identical to the unpadded one on the real rows — padding is free
+  in ids/recall, it only rounds up compute.
+* **Mesh backend** — pass ``mesh=`` and the engine builds the sharded
+  sub-indices with :func:`repro.core.distributed.make_build_fn` and serves
+  through the shard-mapped search fns, behind the same ``query()`` API and
+  the same bucketing/compile-cache/stats machinery.
+* **Stats v2** — per-regime latency records (percentiles/histograms),
+  compile and bucket-hit counters, and warmup (compile-triggering) batches
+  excluded from steady-state QPS.
+
+Thread-safety: ``query()`` may be called from many threads (the
+micro-batching queue in :mod:`repro.serve.queue` does); the compile cache
+and stats are lock-protected.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import threading
 import time
 
 import jax
@@ -20,65 +45,280 @@ from repro.core.diversify import PackedGraph, build_tsdg
 from repro.core.search_large import large_batch_search
 from repro.core.search_small import small_batch_search
 
+# small_batch_search's compiled-in ranking width (its `width` kwarg default):
+# the per-query candidate pool is t0 * width entries
+_SMALL_WIDTH = 32
+
+
+@dataclasses.dataclass
+class RegimeStats:
+    """Latency/throughput record for one regime, warmup split out."""
+
+    n_batches: int = 0
+    n_queries: int = 0
+    total_s: float = 0.0            # steady-state wall time
+    warmup_batches: int = 0
+    warmup_s: float = 0.0           # compile-triggering calls (excluded)
+    # bounded window of recent batch latencies (long-running engines must
+    # not grow memory per request); totals above cover the full history
+    latencies_s: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=8192))
+
+    def record(self, n: int, dt: float, *, warmup: bool) -> None:
+        if warmup:
+            self.warmup_batches += 1
+            self.warmup_s += dt
+            return
+        self.n_batches += 1
+        self.n_queries += n
+        self.total_s += dt
+        self.latencies_s.append(dt)
+
+    def percentiles(self, qs=(50, 90, 99)) -> dict:
+        if not self.latencies_s:
+            return {f"p{q}": float("nan") for q in qs}
+        arr = np.asarray(self.latencies_s)
+        return {f"p{q}": float(np.percentile(arr, q)) for q in qs}
+
+    def histogram(self, bins: int = 16):
+        """(counts, edges_s) over steady-state batch latencies."""
+        if not self.latencies_s:
+            return np.zeros((bins,), np.int64), np.zeros((bins + 1,))
+        return np.histogram(np.asarray(self.latencies_s), bins=bins)
+
 
 @dataclasses.dataclass
 class ServeStats:
-    n_queries: int = 0
+    n_queries: int = 0              # all queries, warmup included
     n_batches: int = 0
     small_batches: int = 0
     large_batches: int = 0
-    total_s: float = 0.0
+    total_s: float = 0.0            # steady-state wall time (both regimes)
+    steady_queries: int = 0
+    compiles: int = 0
+    bucket_hits: int = 0            # calls served by a cached executable
+    bucket_misses: int = 0          # calls that had to compile
+    padded_queries: int = 0         # wasted rows added by bucketing
+    per_regime: dict = dataclasses.field(
+        default_factory=lambda: {"small": RegimeStats(),
+                                 "large": RegimeStats()})
 
     @property
     def qps(self) -> float:
-        return self.n_queries / max(self.total_s, 1e-9)
+        """Steady-state queries/s — warmup (compile) batches excluded."""
+        return self.steady_queries / max(self.total_s, 1e-9)
+
+    @property
+    def bucket_hit_rate(self) -> float:
+        total = self.bucket_hits + self.bucket_misses
+        return self.bucket_hits / max(total, 1)
+
+    def snapshot(self) -> dict:
+        out = {
+            "n_queries": self.n_queries, "n_batches": self.n_batches,
+            "small_batches": self.small_batches,
+            "large_batches": self.large_batches,
+            "qps": self.qps, "compiles": self.compiles,
+            "bucket_hit_rate": self.bucket_hit_rate,
+            "padded_queries": self.padded_queries,
+        }
+        for name, reg in self.per_regime.items():
+            for key, val in reg.percentiles().items():
+                out[f"{name}_{key}_ms"] = val * 1e3
+        return out
 
 
 class ANNEngine:
-    """In-process serving: build once, answer batches of queries."""
+    """In-process serving: build once, answer batches of queries.
+
+    Single-device by default; pass ``mesh=`` to shard the database over the
+    mesh's ``data``(+``pod``) axes and fan queries/searches over ``model``
+    (see :mod:`repro.core.distributed`).  In mesh mode ``X`` is placed with
+    the DB sharding and the sub-indices are built shard-locally.
+    """
 
     def __init__(self, X, cfg: ANNConfig | None = None, *, k: int = 10,
-                 graph: PackedGraph | None = None):
+                 graph: PackedGraph | None = None, mesh=None):
         self.cfg = cfg or ANNConfig()
-        self.X = jnp.asarray(X)
         self.k = k
-        self.graph = graph if graph is not None else build_tsdg(self.X,
-                                                                self.cfg)
+        self.mesh = mesh
         self.stats = ServeStats()
-        self._small = None
-        self._large = None
+        self._lock = threading.Lock()
+        self._compiled: dict = {}   # (regime, bucket, k) -> executable
+        self.buckets = tuple(sorted(self.cfg.serve_buckets))
+        if mesh is None:
+            self.X = jnp.asarray(X)
+            self.graph = graph if graph is not None \
+                else build_tsdg(self.X, self.cfg)
+        else:
+            if graph is not None:
+                raise ValueError("mesh mode builds its own sharded graph; "
+                                 "graph= is only for single-device engines")
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            from repro.core import distributed as D
+            self._D = D
+            d_ax = D.db_axes(mesh)
+            self.X = jax.device_put(
+                jnp.asarray(X), NamedSharding(mesh, P(d_ax, None)))
+            nbrs, lams, degs, hubs = D.make_build_fn(mesh, self.cfg)(self.X)
+            jax.block_until_ready(nbrs)
+            self._db_parts = (nbrs, lams, degs, hubs)
+            self.graph = PackedGraph(
+                neighbors=nbrs, lambdas=lams, degrees=degs,
+                hubs=hubs if hubs.shape[0] else None)
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            self._n_q_shards = 1
+            for a in D.query_axes(mesh):
+                self._n_q_shards *= sizes[a]
+
+    # -- regime & buckets ---------------------------------------------------
 
     def regime(self, batch: int) -> str:
         """Paper §4: the division threshold between small and large."""
         return ("small" if batch * self.cfg.small_t0
                 < self.cfg.small_batch_threshold * 4 else "large")
 
-    def query(self, Q, *, k: int | None = None):
-        k = k or self.k
-        Q = jnp.asarray(Q)
-        B = Q.shape[0]
-        kind = self.regime(B)
-        t0 = time.perf_counter()
-        if kind == "small":
-            ids, dists = small_batch_search(
-                self.X, self.graph, Q, k=k, t0=self.cfg.small_t0,
-                hops=self.cfg.small_hops, hop_width=self.cfg.hop_width,
-                n_seeds=self.cfg.n_seeds, lambda_limit=10,
-                metric=self.cfg.metric)
-            self.stats.small_batches += 1
+    def bucket_for(self, batch: int) -> int:
+        """Smallest ladder bucket >= batch; beyond the ladder, the next
+        multiple of the largest bucket (bounded shape variety either way).
+        No ladder -> raw batch size (one cache entry per distinct B)."""
+        if not self.buckets:
+            bucket = batch
         else:
-            ids, dists = large_batch_search(
-                self.X, self.graph, Q, k=k, ef=self.cfg.large_ef,
-                hops=self.cfg.large_hops, lambda_limit=5,
-                metric=self.cfg.metric,
-                n_seeds=getattr(self.cfg, "large_n_seeds",
-                                self.cfg.n_seeds),
-                m_seg=self.cfg.queue_segments, seg=self.cfg.segment_size,
-                mv_seg=self.cfg.visited_segments, delta=self.cfg.delta)
-            self.stats.large_batches += 1
+            bucket = next((b for b in self.buckets if b >= batch), None)
+            if bucket is None:
+                top = self.buckets[-1]
+                bucket = -(-batch // top) * top
+        if self.mesh is not None and self._n_q_shards > 1:
+            # sharded large-batch search splits B over the model axis
+            s = self._n_q_shards
+            bucket = -(-bucket // s) * s
+        return bucket
+
+    def _validate_k(self, k, kind: str) -> int:
+        if k is None:
+            k = self.k
+        if not isinstance(k, int) or isinstance(k, bool) or k <= 0:
+            raise ValueError(f"k must be a positive int, got {k!r}")
+        if kind == "large" and k > self.cfg.large_ef:
+            raise ValueError(
+                f"k={k} exceeds large-batch ranking size ef="
+                f"{self.cfg.large_ef}; raise cfg.large_ef or lower k")
+        if kind == "small" and k > self.cfg.small_t0 * _SMALL_WIDTH:
+            raise ValueError(
+                f"k={k} exceeds small-batch candidate pool t0*width="
+                f"{self.cfg.small_t0 * _SMALL_WIDTH}; raise cfg.small_t0 "
+                "or lower k")
+        return k
+
+    # -- compile cache ------------------------------------------------------
+
+    def _search_args(self, kind: str, Q, k: int):
+        """(jitted fn, positional args, static kwargs) for one dispatch."""
+        cfg = self.cfg
+        if self.mesh is not None:
+            fn = self._D.make_search_fn(self.mesh, cfg, kind=kind, k=k)
+            return fn, (self.X, *self._db_parts, Q), {}
+        if kind == "small":
+            kwargs = dict(k=k, t0=cfg.small_t0, hops=cfg.small_hops,
+                          hop_width=cfg.hop_width, n_seeds=cfg.n_seeds,
+                          lambda_limit=10, metric=cfg.metric)
+            return small_batch_search, (self.X, self.graph, Q), kwargs
+        kwargs = dict(k=k, ef=cfg.large_ef, hops=cfg.large_hops,
+                      lambda_limit=5, metric=cfg.metric,
+                      n_seeds=getattr(cfg, "large_n_seeds", cfg.n_seeds),
+                      m_seg=cfg.queue_segments, seg=cfg.segment_size,
+                      mv_seg=cfg.visited_segments, delta=cfg.delta)
+        return large_batch_search, (self.X, self.graph, Q), kwargs
+
+    def _get_executable(self, kind: str, bucket: int, k: int, Qpad):
+        """Cached AOT executable for (regime, bucket, k); compiles on miss.
+
+        Returns (callable taking the padded query batch, compiled_now).
+        """
+        cache_key = (kind, bucket, k)
+        with self._lock:
+            hit = self._compiled.get(cache_key)
+        if hit is not None:
+            return hit, False
+        fn, pos, kwargs = self._search_args(kind, Qpad, k)
+        compiled = fn.lower(*pos, **kwargs).compile()
+        # kwargs that are traced (not static) must be re-supplied per call
+        dyn = {key: val for key, val in kwargs.items()
+               if key in ("delta", "seed", "seed_offset")}
+        if self.mesh is not None:
+            exe = lambda Q: compiled(self.X, *self._db_parts, Q,  # noqa: E731
+                                     **dyn)
+        else:
+            exe = lambda Q: compiled(self.X, self.graph, Q,       # noqa: E731
+                                     **dyn)
+        with self._lock:
+            # a racing thread may have compiled the same key; keep the first
+            prior = self._compiled.get(cache_key)
+            if prior is not None:
+                return prior, False
+            self._compiled[cache_key] = exe
+            self.stats.compiles += 1
+        return exe, True
+
+    # -- serving ------------------------------------------------------------
+
+    def query(self, Q, *, k: int | None = None):
+        """Answer a batch: (ids [B, k], dists [B, k]) numpy arrays."""
+        Q = jnp.asarray(Q)
+        if Q.ndim != 2 or Q.shape[1] != self.X.shape[1]:
+            raise ValueError(
+                f"Q must be [B, {self.X.shape[1]}], got {tuple(Q.shape)}")
+        B = Q.shape[0]
+        if B == 0:
+            raise ValueError("empty query batch")
+        kind = self.regime(B)
+        k = self._validate_k(k, kind)
+        bucket = self.bucket_for(B)
+        if bucket > B:
+            Qpad = jnp.pad(Q, ((0, bucket - B), (0, 0)), mode="edge")
+        else:
+            Qpad = Q
+        exe, compiled_now = self._get_executable(kind, bucket, k, Qpad)
+        t0 = time.perf_counter()
+        ids, dists = exe(Qpad)
         ids.block_until_ready()
         dt = time.perf_counter() - t0
-        self.stats.n_queries += B
-        self.stats.n_batches += 1
-        self.stats.total_s += dt
-        return np.asarray(ids), np.asarray(dists)
+        with self._lock:
+            st = self.stats
+            st.n_queries += B
+            st.n_batches += 1
+            st.padded_queries += bucket - B
+            if kind == "small":
+                st.small_batches += 1
+            else:
+                st.large_batches += 1
+            if compiled_now:
+                st.bucket_misses += 1
+            else:
+                st.bucket_hits += 1
+                st.total_s += dt
+                st.steady_queries += B
+            st.per_regime[kind].record(B, dt, warmup=compiled_now)
+        # padded rows are discarded before any caller-visible merge
+        return np.asarray(ids[:B]), np.asarray(dists[:B])
+
+    def warmup(self, k: int | None = None) -> int:
+        """Pre-compile every reachable (regime, ladder bucket, k) pair so
+        the first real request is steady-state.  A bucket can be reached by
+        both regimes when the regime boundary falls inside its range, so
+        each bucket is probed at its smallest and largest mapped batch.
+        Returns the number of fresh compiles."""
+        before = self.stats.compiles
+        d = self.X.shape[1]
+        done = set()
+        prev = 0
+        for b in self.buckets or (1,):
+            for probe in (prev + 1, b):
+                pair = (self.regime(probe), b)
+                if pair not in done:
+                    done.add(pair)
+                    self.query(np.zeros((probe, d), np.float32), k=k)
+            prev = b
+        return self.stats.compiles - before

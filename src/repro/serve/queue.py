@@ -1,0 +1,190 @@
+"""Async micro-batching queue: coalesce concurrent requests into one dispatch.
+
+The GPU serving systems the paper competes with (CAGRA, GGNN) get their
+throughput from request coalescing — many concurrent callers, one device
+launch.  :class:`MicroBatcher` is the thread-based TPU/JAX equivalent: a
+single dispatcher thread drains a submission queue, concatenates requests
+that share `k` into one batch (up to ``max_batch`` queries, waiting at most
+``max_wait`` for co-riders), answers them with one ``engine.query()`` call,
+and resolves each caller's :class:`~concurrent.futures.Future` with its own
+rows.  Coalesced singles ride the engine's shape buckets, so steady-state
+traffic stays on persistent compiled executables.
+
+    engine = ANNEngine(X, cfg, k=10)
+    with MicroBatcher(engine) as mb:
+        futs = [mb.submit(q) for q in queries]       # from any thread(s)
+        results = [f.result() for f in futs]         # (ids [k], dists [k])
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import queue as _queue
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class _Request:
+    Q: np.ndarray          # [b, d] float32
+    k: int | None
+    single: bool           # caller passed a bare vector -> return [k] rows
+    future: Future
+
+
+@dataclasses.dataclass
+class BatcherStats:
+    n_requests: int = 0
+    n_queries: int = 0
+    n_dispatches: int = 0
+    # recent dispatch sizes only (bounded; the means use the counters)
+    dispatch_sizes: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=8192))
+
+    @property
+    def mean_coalesced(self) -> float:
+        return self.n_queries / max(self.n_dispatches, 1)
+
+
+class MicroBatcher:
+    """Coalesces concurrent `submit()`s into batched `engine.query()` calls.
+
+    Requests with different `k` never share a dispatch (they need different
+    compiled shapes); a `k` change flushes the in-flight group.  Errors from
+    the engine propagate to every future of the failed dispatch.
+    """
+
+    def __init__(self, engine, *, max_wait_ms: float | None = None,
+                 max_batch: int | None = None):
+        cfg = engine.cfg
+        self.engine = engine
+        self.max_wait_s = (cfg.queue_max_wait_ms if max_wait_ms is None
+                           else max_wait_ms) / 1e3
+        self.max_batch = (cfg.queue_max_batch if max_batch is None
+                          else max_batch)
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.stats = BatcherStats()
+        self._q: _queue.Queue = _queue.Queue()
+        self._carry: _Request | None = None
+        self._closed = False
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="repro-microbatcher")
+        self._thread.start()
+
+    # -- client side --------------------------------------------------------
+
+    def submit(self, Q, *, k: int | None = None) -> Future:
+        """Enqueue one request; `Q` is a single vector [d] or a batch [b, d].
+
+        Returns a Future resolving to (ids, dists) — shaped [k]/[b, k] to
+        match the input rank.
+        """
+        if self._closed:
+            raise RuntimeError("MicroBatcher is closed")
+        Q = np.asarray(Q, np.float32)
+        single = Q.ndim == 1
+        if single:
+            Q = Q[None]
+        d = self.engine.X.shape[1]
+        if Q.ndim != 2 or Q.shape[0] == 0 or Q.shape[1] != d:
+            # reject here so a malformed request can't poison the group it
+            # would be concatenated with in the dispatcher
+            raise ValueError(f"Q must be [{d}] or [b, {d}], got {Q.shape}")
+        fut: Future = Future()
+        self._q.put(_Request(Q=Q, k=k, single=single, future=fut))
+        return fut
+
+    def close(self, *, drain: bool = True) -> None:
+        """Stop the dispatcher; by default after draining pending work."""
+        if self._closed:
+            return
+        self._closed = True
+        if not drain:
+            # fail whatever is still queued
+            try:
+                while True:
+                    req = self._q.get_nowait()
+                    req.future.set_exception(
+                        RuntimeError("MicroBatcher closed"))
+            except _queue.Empty:
+                pass
+        self._q.put(None)  # sentinel wakes the dispatcher
+        self._thread.join(timeout=60)
+        # a submit() racing close() may have enqueued behind the sentinel;
+        # fail those futures rather than leaving callers hanging
+        try:
+            while True:
+                req = self._q.get_nowait()
+                if req is not None:
+                    req.future.set_exception(
+                        RuntimeError("MicroBatcher closed"))
+        except _queue.Empty:
+            pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- dispatcher side ----------------------------------------------------
+
+    def _next_group(self) -> list | None:
+        """Block for the first request, then coalesce same-k co-riders until
+        `max_batch` queries are aboard or `max_wait` elapses.  Returns None
+        on shutdown."""
+        first = self._carry
+        self._carry = None
+        if first is None:
+            first = self._q.get()
+            if first is None:
+                return None
+        group = [first]
+        total = first.Q.shape[0]
+        deadline = time.monotonic() + self.max_wait_s
+        while total < self.max_batch:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                break
+            try:
+                nxt = self._q.get(timeout=remaining)
+            except _queue.Empty:
+                break
+            if nxt is None:  # shutdown after serving what we have
+                self._q.put(None)
+                break
+            if nxt.k != first.k:
+                self._carry = nxt  # different compiled shape: next group
+                break
+            group.append(nxt)
+            total += nxt.Q.shape[0]
+        return group
+
+    def _loop(self) -> None:
+        while True:
+            group = self._next_group()
+            if group is None:
+                return
+            st = self.stats
+            st.n_requests += len(group)
+            st.n_dispatches += 1
+            try:
+                Q = np.concatenate([r.Q for r in group], axis=0)
+                st.n_queries += Q.shape[0]
+                st.dispatch_sizes.append(Q.shape[0])
+                ids, dists = self.engine.query(Q, k=group[0].k)
+            except Exception as e:  # noqa: BLE001 — deliver, don't die
+                for r in group:
+                    r.future.set_exception(e)
+                continue
+            row = 0
+            for r in group:
+                b = r.Q.shape[0]
+                out = (ids[row], dists[row]) if r.single \
+                    else (ids[row:row + b], dists[row:row + b])
+                r.future.set_result(out)
+                row += b

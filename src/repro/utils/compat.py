@@ -1,0 +1,30 @@
+"""JAX version-compatibility shims.
+
+The codebase targets the modern ``jax.shard_map`` API (jax >= 0.6) but must
+also run on the 0.4.x line, where the function lives in
+``jax.experimental.shard_map`` and the replication-check kwarg is spelled
+``check_rep`` instead of ``check_vma``.  Everything that shard-maps goes
+through :func:`shard_map` below so the version split lives in exactly one
+place.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.6: top-level export, kwarg `check_vma`
+    _shard_map = jax.shard_map
+    _CHECK_KWARG = "check_vma"
+except AttributeError:  # jax 0.4.x: experimental module, kwarg `check_rep`
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KWARG = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """`jax.shard_map` resolved across JAX versions.
+
+    `check_vma` follows the modern spelling; on 0.4.x it is forwarded as
+    `check_rep` (same semantics: verify per-axis replication of outputs).
+    """
+    kwargs = {} if check_vma is None else {_CHECK_KWARG: check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)

@@ -3,7 +3,11 @@ import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="optional dev dep (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs import get_arch
 from repro.core.diversify import PackedGraph, build_tsdg

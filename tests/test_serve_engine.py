@@ -1,0 +1,305 @@
+"""Serving engine: regime dispatch, shape buckets, compile cache, queue."""
+import dataclasses
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.search_large import large_batch_search
+from repro.core.search_small import small_batch_search
+from repro.data.synthetic import make_clustered, recall_at_k
+from repro.serve.engine import ANNEngine
+from repro.serve.queue import MicroBatcher
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_clustered(n=3000, d=16, n_queries=128, n_clusters=24,
+                          noise=0.6, seed=0)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return dataclasses.replace(get_arch("tsdg-paper"), k_graph=12,
+                               max_degree=16, lambda0=8, bridge_hubs=32,
+                               bridge_k=8, large_ef=48, large_hops=64,
+                               serve_buckets=(8, 32, 128))
+
+
+@pytest.fixture(scope="module")
+def engine(ds, cfg):
+    return ANNEngine(ds.X, cfg, k=10)
+
+
+# ----------------------------------------------------------------------
+# regime dispatch
+# ----------------------------------------------------------------------
+
+def test_regime_dispatch_boundary(engine, cfg):
+    """small iff B * t0 < 4 * threshold, exactly at the configured split."""
+    boundary = (4 * cfg.small_batch_threshold) // cfg.small_t0
+    assert engine.regime(1) == "small"
+    assert engine.regime(boundary - 1) == "small"
+    assert engine.regime(boundary) == "large"
+    assert engine.regime(boundary + 1) == "large"
+    assert engine.regime(4096) == "large"
+
+
+def test_regime_dispatch_updates_stats(ds, cfg, engine):
+    before_small = engine.stats.small_batches
+    before_large = engine.stats.large_batches
+    engine.query(ds.Q[:2])
+    engine.query(ds.Q[:64])
+    assert engine.stats.small_batches == before_small + 1
+    assert engine.stats.large_batches == before_large + 1
+
+
+# ----------------------------------------------------------------------
+# k validation (the `k or self.k` footgun)
+# ----------------------------------------------------------------------
+
+def test_k_none_uses_default(ds, engine):
+    ids, _ = engine.query(ds.Q[:2], k=None)
+    assert ids.shape == (2, 10)
+
+
+@pytest.mark.parametrize("bad", [0, -1, 2.5, "7", True])
+def test_k_invalid_raises(ds, engine, bad):
+    with pytest.raises(ValueError, match="k must be a positive int"):
+        engine.query(ds.Q[:2], k=bad)
+
+
+def test_k_beyond_ef_raises_not_truncates(ds, cfg, engine):
+    with pytest.raises(ValueError, match="exceeds large-batch ranking"):
+        engine.query(ds.Q[:64], k=cfg.large_ef + 1)
+
+
+def test_k_beyond_small_pool_raises(ds, cfg, engine):
+    with pytest.raises(ValueError, match="exceeds small-batch candidate"):
+        engine.query(ds.Q[:2], k=cfg.small_t0 * 32 + 1)
+
+
+def test_kernel_k_validation():
+    X = jnp.zeros((64, 4))
+    from repro.core.diversify import PackedGraph
+    g = PackedGraph(neighbors=jnp.zeros((64, 4), jnp.int32),
+                    lambdas=jnp.zeros((64, 4), jnp.int32),
+                    degrees=jnp.zeros((64,), jnp.int32), hubs=None)
+    with pytest.raises(ValueError, match="exceeds the ranking array"):
+        large_batch_search(X, g, X[:2], k=17, ef=16)
+    with pytest.raises(ValueError, match="exceeds the candidate pool"):
+        small_batch_search(X, g, X[:2], k=200, t0=2, hops=2, width=16)
+
+
+# ----------------------------------------------------------------------
+# shape buckets: padding correctness + compile cache
+# ----------------------------------------------------------------------
+
+def test_bucket_for_ladder(engine):
+    assert engine.bucket_for(1) == 8
+    assert engine.bucket_for(8) == 8
+    assert engine.bucket_for(9) == 32
+    assert engine.bucket_for(100) == 128
+    assert engine.bucket_for(129) == 256   # beyond ladder: multiple of max
+    assert engine.bucket_for(513) == 640
+
+
+def test_padded_small_bitwise_matches_raw(ds, cfg, engine):
+    """Bucket padding must not change the real rows' ids at all."""
+    B = 5  # pads to bucket 8
+    ids, dists = engine.query(ds.Q[:B])
+    raw_ids, raw_d = small_batch_search(
+        engine.X, engine.graph, jnp.asarray(ds.Q[:B]), k=10,
+        t0=cfg.small_t0, hops=cfg.small_hops, hop_width=cfg.hop_width,
+        n_seeds=cfg.n_seeds, lambda_limit=10, metric=cfg.metric)
+    np.testing.assert_array_equal(ids, np.asarray(raw_ids))
+    np.testing.assert_allclose(dists, np.asarray(raw_d))
+
+
+def test_padded_large_bitwise_matches_raw(ds, cfg, engine):
+    B = 33  # pads to bucket 128
+    ids, dists = engine.query(ds.Q[:B])
+    raw_ids, raw_d = large_batch_search(
+        engine.X, engine.graph, jnp.asarray(ds.Q[:B]), k=10,
+        ef=cfg.large_ef, hops=cfg.large_hops, lambda_limit=5,
+        metric=cfg.metric, n_seeds=cfg.large_n_seeds,
+        m_seg=cfg.queue_segments, seg=cfg.segment_size,
+        mv_seg=cfg.visited_segments, delta=cfg.delta)
+    np.testing.assert_array_equal(ids, np.asarray(raw_ids))
+    np.testing.assert_allclose(dists, np.asarray(raw_d))
+
+
+def test_mixed_stream_compiles_once_per_regime_bucket(ds, cfg):
+    """B ∈ {1, 7, 33, 100, 513} interleaved, repeated: at most one compile
+    per (regime, bucket, k) — the acceptance criterion of this subsystem."""
+    small_cfg = dataclasses.replace(cfg, serve_buckets=(8, 32, 128),
+                                    large_hops=24)
+    eng = ANNEngine(ds.X, small_cfg, k=10)
+    stream = [1, 7, 33, 100, 129] * 3
+    rng = np.random.default_rng(0)
+    for B in stream:
+        sel = rng.integers(0, len(ds.Q), B)
+        ids, _ = eng.query(ds.Q[sel])
+        assert ids.shape == (B, 10)
+    # buckets hit: (small, 8) by 1 and 7; (large, 128) by 33 and 100;
+    # (large, 256) by 129 — three pairs, three compiles, never more
+    assert eng.stats.compiles == 3
+    assert eng.stats.bucket_misses == 3
+    assert eng.stats.bucket_hits == len(stream) - 3
+    # stats v2: warmup excluded from steady state
+    st = eng.stats
+    assert st.per_regime["small"].warmup_batches == 1
+    assert st.per_regime["large"].warmup_batches == 2
+    assert st.steady_queries == st.n_queries - (1 + 33 + 129)
+    assert st.qps > 0
+    p = st.per_regime["large"].percentiles()
+    assert p["p50"] <= p["p99"]
+
+
+def test_warmup_precompiles_all_reachable_pairs(ds, cfg):
+    eng = ANNEngine(ds.X, dataclasses.replace(cfg, large_hops=24), k=10)
+    n = eng.warmup()
+    assert n == eng.stats.compiles >= 3
+    # a following mixed stream never compiles again
+    for B in (1, 7, 15, 16, 33, 100, 128):
+        eng.query(ds.Q[:B])
+    assert eng.stats.compiles == n
+
+
+def test_padded_queries_counted(ds, engine):
+    before = engine.stats.padded_queries
+    engine.query(ds.Q[:5])  # bucket 8 -> 3 padded rows
+    assert engine.stats.padded_queries == before + 3
+
+
+def test_query_shape_validation(ds, engine):
+    with pytest.raises(ValueError, match="empty query batch"):
+        engine.query(np.zeros((0, 16), np.float32))
+    with pytest.raises(ValueError, match="Q must be"):
+        engine.query(np.zeros((4, 7), np.float32))
+
+
+def test_engine_recall(ds, engine):
+    ids, _ = engine.query(ds.Q)
+    assert recall_at_k(ids, ds.gt, 10) > 0.85
+
+
+# ----------------------------------------------------------------------
+# micro-batching queue
+# ----------------------------------------------------------------------
+
+def test_queue_coalesces_concurrent_singles(ds, cfg):
+    eng = ANNEngine(ds.X, cfg, k=10)
+    eng.warmup()
+    n = 24
+    with MicroBatcher(eng, max_wait_ms=100, max_batch=64) as mb:
+        futs = [mb.submit(ds.Q[i]) for i in range(n)]
+        outs = [f.result(timeout=120) for f in futs]
+    assert mb.stats.n_requests == n
+    assert mb.stats.n_dispatches < n          # coalescing happened
+    assert mb.stats.mean_coalesced > 1.0
+    hits = 0
+    for i, (ids, dists) in enumerate(outs):
+        assert ids.shape == (10,) and dists.shape == (10,)
+        hits += recall_at_k(ids[None], ds.gt[i:i + 1], 10)
+    assert hits / n > 0.85
+
+
+def test_queue_concurrent_threads(ds, cfg):
+    eng = ANNEngine(ds.X, cfg, k=10)
+    eng.warmup()
+    results = {}
+
+    def worker(tid):
+        with_lock = [MB.submit(ds.Q[tid * 4 + j]) for j in range(4)]
+        results[tid] = [f.result(timeout=120) for f in with_lock]
+
+    with MicroBatcher(eng, max_wait_ms=50, max_batch=32) as MB:
+        threads = [threading.Thread(target=worker, args=(t,))
+                   for t in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+    assert sorted(results) == list(range(6))
+    for tid, outs in results.items():
+        for j, (ids, _) in enumerate(outs):
+            r = recall_at_k(ids[None], ds.gt[tid * 4 + j:tid * 4 + j + 1],
+                            10)
+            assert ids.shape == (10,)
+
+
+def test_queue_groups_by_k(ds, cfg):
+    eng = ANNEngine(ds.X, cfg, k=10)
+    with MicroBatcher(eng, max_wait_ms=30, max_batch=64) as mb:
+        f5 = [mb.submit(ds.Q[i], k=5) for i in range(4)]
+        f10 = [mb.submit(ds.Q[i], k=10) for i in range(4)]
+        for f in f5:
+            assert f.result(timeout=120)[0].shape == (5,)
+        for f in f10:
+            assert f.result(timeout=120)[0].shape == (10,)
+    # k=5 and k=10 need different compiled shapes -> separate dispatches
+    assert mb.stats.n_dispatches >= 2
+
+
+def test_queue_batch_submissions(ds, cfg):
+    eng = ANNEngine(ds.X, cfg, k=10)
+    with MicroBatcher(eng, max_wait_ms=20) as mb:
+        f = mb.submit(ds.Q[:6])
+        ids, dists = f.result(timeout=120)
+    assert ids.shape == (6, 10)
+
+
+def test_queue_propagates_errors(ds, cfg):
+    eng = ANNEngine(ds.X, cfg, k=10)
+    with MicroBatcher(eng, max_wait_ms=10) as mb:
+        f = mb.submit(ds.Q[0], k=cfg.small_t0 * 32 + 1)
+        with pytest.raises(ValueError, match="exceeds small-batch"):
+            f.result(timeout=120)
+        # the dispatcher survived the failed dispatch and still serves
+        ids, _ = mb.submit(ds.Q[1]).result(timeout=120)
+        assert ids.shape == (10,)
+
+
+def test_queue_rejects_wrong_dim_at_submit(ds, cfg):
+    eng = ANNEngine(ds.X, cfg, k=10)
+    with MicroBatcher(eng, max_wait_ms=10) as mb:
+        with pytest.raises(ValueError, match="Q must be"):
+            mb.submit(np.zeros((8,), np.float32))  # d mismatch (16 expected)
+        ids, _ = mb.submit(ds.Q[0]).result(timeout=120)
+        assert ids.shape == (10,)
+
+
+def test_queue_rejects_after_close(ds, cfg):
+    eng = ANNEngine(ds.X, cfg, k=10)
+    mb = MicroBatcher(eng)
+    mb.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        mb.submit(ds.Q[0])
+
+
+# ----------------------------------------------------------------------
+# mesh backend (in-process 1-device mesh; multi-device lives in
+# test_distributed.py subprocesses)
+# ----------------------------------------------------------------------
+
+def test_mesh_engine_same_api(ds, cfg):
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    eng = ANNEngine(ds.X, dataclasses.replace(cfg, large_hops=24),
+                    k=10, mesh=mesh)
+    for B in (3, 33, 3, 33):
+        ids, dists = eng.query(ds.Q[:B])
+        assert ids.shape == (B, 10)
+    assert eng.stats.compiles == 2
+    assert eng.stats.bucket_hits == 2
+    ids, _ = eng.query(ds.Q)
+    assert recall_at_k(ids, ds.gt, 10) > 0.8
+
+
+def test_mesh_engine_rejects_prebuilt_graph(ds, cfg, engine):
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="mesh mode builds its own"):
+        ANNEngine(ds.X, cfg, k=10, mesh=mesh, graph=engine.graph)
