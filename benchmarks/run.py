@@ -316,31 +316,119 @@ def serve_bucketed_vs_raw():
 
 
 # ==========================================================================
-# kernel microbenches (XLA path timing; Pallas validated in tests)
+# kernel microbenches — Pallas timed alongside the XLA refs
 # ==========================================================================
 
+def _pallas_tag():
+    """On CPU the Pallas kernels run in interpret mode; say so in the row."""
+    return ("backend=pallas" if jax.default_backend() == "tpu"
+            else "backend=pallas_interpret")
+
+
 def kernel_micro():
-    from repro.kernels import ref
+    from repro.kernels import ops, ref
 
     rng = np.random.default_rng(0)
     Q = jnp.asarray(rng.normal(size=(256, 128)).astype(np.float32))
     X = jnp.asarray(rng.normal(size=(8192, 128)).astype(np.float32))
     f = jax.jit(lambda a, b: ref.distance_matrix_ref(a, b, metric="l2"))
     us, _ = _timeit(f, Q, X)
-    emit("kernel/l2dist_256x8192x128", us, "xla_ref_path")
+    emit("kernel/l2dist_256x8192x128", us, "backend=xla_ref")
+    f = jax.jit(lambda a, b: ops.distance_matrix(a, b, metric="l2"))
+    us, _ = _timeit(f, Q, X)
+    emit("kernel/l2dist_256x8192x128", us, _pallas_tag())
 
     d = jnp.asarray(rng.normal(size=(2048, 64)).astype(np.float32))
     ids = jnp.asarray(rng.integers(0, 1 << 20, size=(2048, 64))
                       .astype(np.int32))
     f = jax.jit(lambda a, b: ref.sort_ref(a, b))
     us, _ = _timeit(f, d, ids)
-    emit("kernel/bitonic_sort_2048x64", us, "xla_ref_path")
+    emit("kernel/bitonic_sort_2048x64", us, "backend=xla_ref")
+    f = jax.jit(lambda a, b: ops.bitonic_sort(a, b))
+    us, _ = _timeit(f, d, ids)
+    emit("kernel/bitonic_sort_2048x64", us, _pallas_tag())
 
     q = jnp.asarray(rng.normal(size=(2, 512, 8, 64)).astype(np.float32))
     k = jnp.asarray(rng.normal(size=(2, 512, 2, 64)).astype(np.float32))
     f = jax.jit(lambda a, b, c: ref.attention_ref(a, b, c, window=256))
     us, _ = _timeit(f, q, k, k)
-    emit("kernel/flash_attn_512_gqa", us, "xla_ref_path")
+    emit("kernel/flash_attn_512_gqa", us, "backend=xla_ref")
+    f = jax.jit(lambda a, b, c: ops.flash_attention(a, b, c, window=256))
+    us, _ = _timeit(f, q, k, k)
+    emit("kernel/flash_attn_512_gqa", us, _pallas_tag())
+
+
+# ==========================================================================
+# hot-path primitives + end-to-end search: pallas vs xla backend
+# ==========================================================================
+
+def hotpath_micro():
+    """The three hotpath primitives, timed under both backends."""
+    import functools
+
+    from repro.core import hotpath as HP
+
+    rng = np.random.default_rng(0)
+    S, C, d_dim, N = (512, 32, 64, 100_000)
+    X = jnp.asarray(rng.normal(size=(N, d_dim)).astype(np.float32))
+    Q = jnp.asarray(rng.normal(size=(S, d_dim)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, N, size=(S, C)).astype(np.int32))
+    mask = jnp.asarray(rng.random((S, C)) > 0.1)
+    dists = jnp.asarray(rng.normal(size=(S, 96)).astype(np.float32))
+    mids = jnp.asarray(rng.integers(0, N, size=(S, 96)).astype(np.int32))
+
+    for backend in ("xla", "pallas"):
+        tag = _pallas_tag() if backend == "pallas" else "backend=xla"
+        f = jax.jit(lambda q, x, i, m, _b=backend: HP.neighbor_distances(
+            q, x, i, metric="l2", mask=m, backend=_b))
+        us, _ = _timeit(f, Q, X, idx, mask)
+        emit(f"hotpath/neighbor_distances_{S}x{C}x{d_dim}", us, tag)
+        f = jax.jit(functools.partial(
+            HP.rank_merge, keep=64, backend=backend))
+        us, _ = _timeit(f, dists, mids)
+        emit(f"hotpath/rank_merge_{S}x96_keep64", us, tag)
+        f = jax.jit(functools.partial(
+            HP.seed_select, metric="l2", k=1, backend=backend))
+        us, _ = _timeit(f, Q, X, idx)
+        emit(f"hotpath/seed_select_{S}x{C}", us, tag)
+
+
+def search_backend_compare():
+    """Both search regimes end-to-end under kernel_backend pallas vs xla —
+    same graph, same queries; rows also record cross-backend id parity."""
+    from repro.core.diversify import build_tsdg
+    from repro.core.knn_build import exact_knn
+    from repro.core.search_large import large_batch_search
+    from repro.core.search_small import small_batch_search
+    from repro.data.synthetic import recall_at_k
+
+    ds = _dataset(n=2000 if QUICK else 6000, nq=32)
+    X = jnp.asarray(ds.X)
+    ids, dists = exact_knn(X, 24)
+    g = build_tsdg(X, _cfg(), knn_ids=ids, knn_dists=dists)
+    Q = jnp.asarray(ds.Q)
+    outs = {"small": {}, "large": {}}
+    for backend in ("xla", "pallas"):
+        tag = _pallas_tag() if backend == "pallas" else "backend=xla"
+        fn = lambda: small_batch_search(X, g, Q, k=10, t0=8, hops=6,
+                                        backend=backend)[0]
+        us, out = _timeit(fn)
+        outs["small"][backend] = np.asarray(out)
+        r = recall_at_k(outs["small"][backend], ds.gt, 10)
+        emit(f"hotpath/small_batch_e2e_{backend}", us / len(ds.Q),
+             f"{tag};recall@10={r:.3f}")
+        fn = lambda: large_batch_search(X, g, Q, k=10, ef=64,
+                                        hops=32 if QUICK else 64,
+                                        backend=backend)[0]
+        us, out = _timeit(fn, repeat=2)
+        outs["large"][backend] = np.asarray(out)
+        r = recall_at_k(outs["large"][backend], ds.gt, 10)
+        emit(f"hotpath/large_batch_e2e_{backend}", us / len(ds.Q),
+             f"{tag};recall@10={r:.3f}")
+    for regime, o in outs.items():
+        match = bool((o["xla"] == o["pallas"]).all())
+        emit(f"hotpath/{regime}_backend_parity", 0.0,
+             f"ids_identical={match}")
 
 
 # ==========================================================================
@@ -365,7 +453,7 @@ def roofline_table():
 BENCHES = [table2_diversification_time, fig4_cpu_search, fig5_degree_sweep,
            fig6_small_batch, fig10_large_batch, ablation_alpha_lambda,
            serve_engine_mixed, serve_bucketed_vs_raw, kernel_micro,
-           roofline_table]
+           hotpath_micro, search_backend_compare, roofline_table]
 
 
 def main() -> None:

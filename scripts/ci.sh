@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# Quick CI tier: the fast test suite + a serving smoke benchmark.
+# Quick CI tier: kernel-backend parity, the fast test suite, and two smoke
+# benchmarks (bucketed serving + an explicit kernel_backend=xla serve run).
 #
 # Excludes @slow tests and the multi-minute distributed subprocess tests
 # (those run in the full tier: `PYTHONPATH=src python -m pytest -q`).
@@ -8,8 +9,15 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== kernel backend parity (Pallas interpret vs XLA) =="
+python -m pytest -q tests/test_hotpath.py
+
 echo "== quick test tier =="
-python -m pytest -q -m "not slow" --ignore=tests/test_distributed.py
+python -m pytest -q -m "not slow" --ignore=tests/test_distributed.py \
+    --ignore=tests/test_hotpath.py
 
 echo "== serving smoke bench =="
 REPRO_BENCH_QUICK=1 REPRO_BENCH_ONLY=serve python -m benchmarks.run
+
+echo "== kernel_backend=xla serving smoke =="
+python -m repro.launch.serve --n 4000 --d 16 --batches 6 --backend xla

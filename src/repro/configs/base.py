@@ -212,6 +212,10 @@ class ANNConfig:
     visited_segments: int = 8
     small_batch_threshold: int = 256  # regime split (paper's a*SMs+b / d)
     faithful_rtemp: bool = True  # lane-paired R_temp update (paper Alg.1)
+    # hot-path kernel backend (repro.core.hotpath): "pallas" | "xla" |
+    # "auto" (pallas on TPU, xla fallback on CPU — explicit "pallas" off-TPU
+    # runs the kernels in interpret mode, which the parity tests rely on)
+    kernel_backend: str = "auto"
     # beyond-paper connectivity augmentation (0 = paper-faithful off)
     bridge_hubs: int = 256
     bridge_k: int = 8

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import hotpath as HP
 from repro.core import metrics as M
 from repro.core.knn_build import reverse_neighbors
 
@@ -37,9 +38,9 @@ INF = jnp.float32(3.4e38)
 # stage 1: relaxed GD
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("metric", "alpha"))
+@functools.partial(jax.jit, static_argnames=("metric", "alpha", "backend"))
 def relaxed_gd_tile(X, node_ids, nbr_ids, nbr_dists, *, alpha: float,
-                    metric: str):
+                    metric: str, backend: str = "auto"):
     """Greedy occlusion pruning for a tile of nodes.
 
     node_ids [T]; nbr_ids/nbr_dists [T, K] sorted ascending by distance.
@@ -49,13 +50,10 @@ def relaxed_gd_tile(X, node_ids, nbr_ids, nbr_dists, *, alpha: float,
     N = X.shape[0]
     valid = nbr_ids < N
     vecs = X[jnp.clip(nbr_ids, 0, N - 1)]                     # [T, K, d]
-    # pairwise distances among the K neighbors (one GEMM per tile)
-    if metric in ("ip", "cos"):
-        pair = -jnp.einsum("tkd,tld->tkl", vecs, vecs)
-    else:
-        sq = jnp.sum(vecs * vecs, axis=-1)
-        pair = sq[:, :, None] + sq[:, None, :] \
-            - 2 * jnp.einsum("tkd,tld->tkl", vecs, vecs)
+    # pairwise distances among the K neighbors: one fused [T, K, K] block
+    # per tile (invalid columns -> INF, which Eq. 2 treats as non-occluding)
+    pair = HP.neighbor_distances(vecs, X, nbr_ids, metric=metric,
+                                 backend=backend)
     # occ[t, i, j]: (kept) edge i occludes candidate j   (Eq. 2)
     # ip/cos distances are negative (-<x,y>): a plain α-multiply would make
     # the occluder condition *easier* (α·m more negative), inverting the
@@ -78,7 +76,8 @@ def relaxed_gd_tile(X, node_ids, nbr_ids, nbr_dists, *, alpha: float,
 
 
 def relaxed_gd(X, ids, dists, *, alpha: float, metric: str,
-               tile: int = 2048, unroll: bool = False):
+               tile: int = 2048, unroll: bool = False,
+               backend: str = "auto"):
     """Stage 1 over the whole graph (tiled). Returns keep mask [N, K]."""
     from repro.core.knn_build import tiled_map
 
@@ -92,7 +91,7 @@ def relaxed_gd(X, ids, dists, *, alpha: float, metric: str,
         sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i * tile, tile, 0)
         rows = i * tile + jnp.arange(tile)
         return relaxed_gd_tile(X, rows, sl(ids_p), sl(d_p),
-                               alpha=alpha, metric=metric)
+                               alpha=alpha, metric=metric, backend=backend)
 
     keep = tiled_map(one, n_tiles, unroll)
     return keep.reshape(-1, K)[:N]
@@ -102,7 +101,8 @@ def relaxed_gd(X, ids, dists, *, alpha: float, metric: str,
 # symmetrize: append reverse edges of the stage-1 graph
 # --------------------------------------------------------------------------
 
-def append_reverse(X, ids, dists, keep, *, rev_cap: int, metric: str):
+def append_reverse(X, ids, dists, keep, *, rev_cap: int, metric: str,
+                   backend: str = "auto"):
     """Undirected candidate lists: kept forward edges ++ reverse edges.
 
     Returns (adj_ids [N, K+rev_cap], adj_dists) with sentinel N / INF, each
@@ -112,9 +112,7 @@ def append_reverse(X, ids, dists, keep, *, rev_cap: int, metric: str):
     fwd_ids = jnp.where(keep, ids, N)
     fwd_d = jnp.where(keep, dists, INF)
     rev = reverse_neighbors(fwd_ids, fwd_ids < N, cap=rev_cap)  # [N, rev_cap]
-    rvecs = X[jnp.clip(rev, 0, N - 1)]
-    rd = M.batched_rowwise(X, rvecs, metric)
-    rd = jnp.where(rev < N, rd, INF)
+    rd = HP.neighbor_distances(X, X, rev, metric=metric, backend=backend)
     all_ids = jnp.concatenate([fwd_ids, rev], axis=1)
     all_d = jnp.concatenate([fwd_d, rd], axis=1)
     # dedup by id (duplicates -> sentinel)
@@ -135,19 +133,16 @@ def append_reverse(X, ids, dists, keep, *, rev_cap: int, metric: str):
 # stage 2: soft GD (occlusion factors)
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("metric",))
-def occlusion_factors_tile(X, nbr_ids, nbr_dists, *, metric: str):
+@functools.partial(jax.jit, static_argnames=("metric", "backend"))
+def occlusion_factors_tile(X, nbr_ids, nbr_dists, *, metric: str,
+                           backend: str = "auto"):
     """λ_j = #occluders of edge j within its node's list (Eq. 1, α = 1)."""
     T, K = nbr_ids.shape
     N = X.shape[0]
     valid = nbr_ids < N
     vecs = X[jnp.clip(nbr_ids, 0, N - 1)]
-    if metric in ("ip", "cos"):
-        pair = -jnp.einsum("tkd,tld->tkl", vecs, vecs)
-    else:
-        sq = jnp.sum(vecs * vecs, axis=-1)
-        pair = sq[:, :, None] + sq[:, None, :] \
-            - 2 * jnp.einsum("tkd,tld->tkl", vecs, vecs)
+    pair = HP.neighbor_distances(vecs, X, nbr_ids, metric=metric,
+                                 backend=backend)
     occ = (nbr_dists[:, :, None] < nbr_dists[:, None, :]) \
         & (pair < nbr_dists[:, None, :]) \
         & valid[:, :, None] & valid[:, None, :]
@@ -156,7 +151,8 @@ def occlusion_factors_tile(X, nbr_ids, nbr_dists, *, metric: str):
 
 
 def soft_gd(X, adj_ids, adj_dists, *, lambda0: int, max_degree: int,
-            metric: str, tile: int = 2048, unroll: bool = False):
+            metric: str, tile: int = 2048, unroll: bool = False,
+            backend: str = "auto"):
     """Stage 2: λ per edge, sort by (λ, dist), threshold λ0, truncate to M.
 
     Returns (neighbors [N, M], lambdas [N, M], degrees [N]).
@@ -171,7 +167,8 @@ def soft_gd(X, adj_ids, adj_dists, *, lambda0: int, max_degree: int,
 
     def one(i):
         sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i * tile, tile, 0)
-        return occlusion_factors_tile(X, sl(ids_p), sl(d_p), metric=metric)
+        return occlusion_factors_tile(X, sl(ids_p), sl(d_p), metric=metric,
+                                      backend=backend)
 
     lam = tiled_map(one, n_tiles, unroll).reshape(-1, K)[:N]
 
@@ -279,17 +276,20 @@ def build_tsdg(X, cfg, knn_ids=None, knn_dists=None, *,
     from repro.core.knn_build import nn_descent
 
     unroll = getattr(cfg, "unroll_scans", False)
+    backend = getattr(cfg, "kernel_backend", "auto")
     X = M.preprocess(jnp.asarray(X), cfg.metric)
     if knn_ids is None:
         knn_ids, knn_dists = nn_descent(X, cfg.k_graph, metric=cfg.metric,
-                                        unroll=unroll)
+                                        unroll=unroll, backend=backend)
     keep = relaxed_gd(X, knn_ids, knn_dists, alpha=cfg.alpha,
-                      metric=cfg.metric, tile=tile, unroll=unroll)
+                      metric=cfg.metric, tile=tile, unroll=unroll,
+                      backend=backend)
     adj_ids, adj_d = append_reverse(X, knn_ids, knn_dists, keep,
-                                    rev_cap=cfg.k_graph, metric=cfg.metric)
+                                    rev_cap=cfg.k_graph, metric=cfg.metric,
+                                    backend=backend)
     nbrs, lams, degs = soft_gd(X, adj_ids, adj_d, lambda0=cfg.lambda0,
                                max_degree=cfg.max_degree, metric=cfg.metric,
-                               tile=tile, unroll=unroll)
+                               tile=tile, unroll=unroll, backend=backend)
     hubs = None
     n_hubs = getattr(cfg, "bridge_hubs", 0)
     if n_hubs:
@@ -301,16 +301,26 @@ def build_tsdg(X, cfg, knn_ids=None, knn_dists=None, *,
     return PackedGraph(neighbors=nbrs, lambdas=lams, degrees=degs, hubs=hubs)
 
 
-def build_gd_baseline(X, cfg, knn_ids=None, knn_dists=None) -> PackedGraph:
-    """Plain GD (α=1, no soft stage) — the paper's GD [36] baseline."""
+def build_gd_baseline(X, cfg, knn_ids=None, knn_dists=None, *,
+                      tile: int = 2048) -> PackedGraph:
+    """Plain GD (α=1, no soft stage) — the paper's GD [36] baseline.
+
+    Honors `tile`/`cfg.unroll_scans` exactly like :func:`build_tsdg`, so
+    the dry-run cost analysis counts the baseline's tiles too.
+    """
     from repro.core.knn_build import nn_descent
 
+    unroll = getattr(cfg, "unroll_scans", False)
+    backend = getattr(cfg, "kernel_backend", "auto")
     X = M.preprocess(jnp.asarray(X), cfg.metric)
     if knn_ids is None:
-        knn_ids, knn_dists = nn_descent(X, cfg.k_graph, metric=cfg.metric)
-    keep = relaxed_gd(X, knn_ids, knn_dists, alpha=1.0, metric=cfg.metric)
+        knn_ids, knn_dists = nn_descent(X, cfg.k_graph, metric=cfg.metric,
+                                        unroll=unroll, backend=backend)
+    keep = relaxed_gd(X, knn_ids, knn_dists, alpha=1.0, metric=cfg.metric,
+                      tile=tile, unroll=unroll, backend=backend)
     adj_ids, adj_d = append_reverse(X, knn_ids, knn_dists, keep,
-                                    rev_cap=cfg.k_graph, metric=cfg.metric)
+                                    rev_cap=cfg.k_graph, metric=cfg.metric,
+                                    backend=backend)
     N, K = adj_ids.shape
     order = jnp.argsort(adj_d, axis=1)
     sid = jnp.take_along_axis(adj_ids, order, axis=1)[:, :cfg.max_degree]

@@ -1,0 +1,174 @@
+"""Kernel-dispatch seam for the search hot path (DESIGN.md §3).
+
+Every hot loop in the ANN stack — ``search_small`` hops, ``search_large``
+expansions, ``nn_descent`` candidate evaluation, the ``diversify`` pairwise
+tiles — reduces to three primitives:
+
+  * :func:`neighbor_distances` — fused gather-of-neighbor-vectors -> tiled
+    distance block ([S, W, d] batched-rowwise generalization of
+    ``kernels/l2dist.py``), with the validity keep-mask applied in-kernel;
+  * :func:`rank_merge` — (dist, id)-ascending merge of a candidate block
+    into a ranking array, keeping the best ``keep`` per row (the id-carrying,
+    keep-masked generalization of ``kernels/topk.py``);
+  * :func:`seed_select` — distance + masked top-k over seed candidates
+    (composition of the two, sharing one backend).
+
+Two registered backends compute them:
+
+  * ``"pallas"`` — the Pallas TPU kernels (interpret mode off-TPU, so CPU
+    tests exercise the real kernel bodies);
+  * ``"xla"`` — plain jnp with the *same* arithmetic formulation and the
+    same (dist, id) total order, so the two backends are bit-identical —
+    the parity contract ``tests/test_hotpath.py`` enforces end-to-end.
+
+Selection comes from ``ANNConfig.kernel_backend``; the default ``"auto"``
+resolves to ``"pallas"`` on TPU and falls back to ``"xla"`` elsewhere.
+Third-party backends can be plugged in with :func:`register_backend` —
+this seam is where every future kernel optimization lands.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import l2dist as _l2
+from repro.kernels import topk as _topk
+
+INF = jnp.float32(3.4e38)
+
+
+def _dist_block(Q3, V3, mask, metric: str):
+    """The shared arithmetic formulation (XLA reference). Mirrors
+    ``l2dist._block_kernel`` op-for-op so both backends agree bitwise."""
+    Q3 = Q3.astype(jnp.float32)
+    V3 = V3.astype(jnp.float32)
+    dots = jax.lax.dot_general(Q3, V3, (((2,), (2,)), ((0,), (0,))),
+                               preferred_element_type=jnp.float32)
+    if metric in ("ip", "cos"):
+        dist = -dots
+    else:
+        qn = jnp.sum(Q3 * Q3, axis=2)[:, :, None]
+        vn = jnp.sum(V3 * V3, axis=2)[:, None, :]
+        dist = qn + vn - 2.0 * dots
+    return jnp.where(mask[:, None, :], dist, INF)
+
+
+def _gather_and_mask(X, idx, mask):
+    N = X.shape[0]
+    valid = (idx >= 0) & (idx < N)
+    if mask is not None:
+        valid = valid & mask
+    return X[jnp.clip(idx, 0, N - 1)], valid
+
+
+def _interp(interpret):
+    return (jax.default_backend() != "tpu") if interpret is None else interpret
+
+
+class _XlaBackend:
+    """Pure-jnp reference path — always available, always the oracle."""
+
+    name = "xla"
+
+    @staticmethod
+    def neighbor_distances(Q, X, idx, *, metric, mask=None, interpret=None):
+        V, m = _gather_and_mask(X, idx, mask)
+        squeeze = Q.ndim == 2
+        Q3 = Q[:, None, :] if squeeze else Q
+        out = _dist_block(Q3, V, m, metric)
+        return out[:, 0] if squeeze else out
+
+    @staticmethod
+    def rank_merge(dists, ids, *, keep, mask=None, interpret=None):
+        if not 0 < keep <= dists.shape[1]:
+            raise ValueError(f"keep={keep} must be in (0, {dists.shape[1]}]")
+        if mask is not None:
+            dists = jnp.where(mask, dists, INF)
+        # lexsort((ids, dists)) = ascending (dist, id) — exactly the bitonic
+        # network's compare-exchange order, so backends agree on ties
+        order = jnp.lexsort((ids, dists), axis=1)
+        return (jnp.take_along_axis(dists, order, axis=1)[:, :keep],
+                jnp.take_along_axis(ids, order, axis=1)[:, :keep])
+
+
+class _PallasBackend:
+    """Fused device kernels (interpret mode when not on TPU)."""
+
+    name = "pallas"
+
+    @staticmethod
+    def neighbor_distances(Q, X, idx, *, metric, mask=None, interpret=None):
+        V, m = _gather_and_mask(X, idx, mask)
+        squeeze = Q.ndim == 2
+        Q3 = Q[:, None, :] if squeeze else Q
+        out = _l2.block_distances_pallas(Q3, V, m, metric=metric,
+                                         interpret=_interp(interpret))
+        return out[:, 0] if squeeze else out
+
+    @staticmethod
+    def rank_merge(dists, ids, *, keep, mask=None, interpret=None):
+        return _topk.rank_merge_pallas(dists, ids, mask, keep=keep,
+                                       interpret=_interp(interpret))
+
+
+_REGISTRY = {"xla": _XlaBackend, "pallas": _PallasBackend}
+
+
+def register_backend(name: str, impl) -> None:
+    """Register a kernel backend (must provide ``neighbor_distances`` and
+    ``rank_merge`` with the signatures above)."""
+    _REGISTRY[name] = impl
+
+
+def backends() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_backend(name: str | None = None) -> str:
+    """``"auto"``/None -> "pallas" on TPU, "xla" everywhere else (the
+    auto-fallback that keeps CPU runs on the compiled-XLA path instead of
+    slow interpret-mode kernels).  Explicit names are validated."""
+    name = name or "auto"
+    if name == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown kernel backend {name!r}; registered: {backends()}")
+    return name
+
+
+# --------------------------------------------------------------------------
+# the three public primitives
+# --------------------------------------------------------------------------
+
+def neighbor_distances(Q, X, idx, *, metric: str = "l2", mask=None,
+                       backend: str | None = None, interpret=None):
+    """Fused gather + distance block, smaller = closer.
+
+    Q [S, d] (or [S, Kq, d]), X [N, d], idx [S, C] -> [S, C] (or
+    [S, Kq, C]) float32.  Rows of ``idx`` outside [0, N) and lanes where
+    ``mask`` (optional [S, C] bool) is False come back as INF.
+    """
+    b = resolve_backend(backend)
+    return _REGISTRY[b].neighbor_distances(Q, X, idx, metric=metric,
+                                           mask=mask, interpret=interpret)
+
+
+def rank_merge(dists, ids, *, keep: int, mask=None,
+               backend: str | None = None, interpret=None):
+    """Row-wise ascending (dist, id) sort carrying ids; returns the best
+    ``keep`` per row as (dists [S, keep], ids [S, keep]).  ``mask`` lanes
+    that are False are demoted to INF distance (ids untouched)."""
+    b = resolve_backend(backend)
+    return _REGISTRY[b].rank_merge(dists, ids, keep=keep, mask=mask,
+                                   interpret=interpret)
+
+
+def seed_select(Q, X, seeds, *, metric: str = "l2", k: int = 1, mask=None,
+                backend: str | None = None, interpret=None):
+    """Distance + masked top-k over seed candidates: returns
+    (dists [S, k], ids [S, k]) of the k closest valid seeds per row."""
+    b = resolve_backend(backend)
+    d = _REGISTRY[b].neighbor_distances(Q, X, seeds, metric=metric,
+                                        mask=mask, interpret=interpret)
+    return _REGISTRY[b].rank_merge(d, seeds, keep=k, interpret=interpret)

@@ -15,6 +15,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import hotpath as HP
 from repro.core import metrics as M
 
 INF = jnp.float32(3.4e38)
@@ -82,9 +83,10 @@ def reverse_neighbors(ids, valid, cap: int):
 
 @functools.partial(jax.jit,
                    static_argnames=("k", "metric", "iters", "sample",
-                                    "unroll"))
+                                    "unroll", "backend"))
 def nn_descent(X, k: int, metric: str = "l2", iters: int = 8,
-               sample: int = 8, seed: int = 0, unroll: bool = False):
+               sample: int = 8, seed: int = 0, unroll: bool = False,
+               backend: str = "auto"):
     """Approximate k-NN graph. Returns (ids [N, k], dists [N, k]) sorted asc.
 
     Per iteration, candidates(u) = reverse(u) ++ B[B[u]][:, :sample] — one
@@ -95,8 +97,9 @@ def nn_descent(X, k: int, metric: str = "l2", iters: int = 8,
     ids = jax.random.randint(key, (N, k), 0, N, jnp.int32)
     # avoid self at init
     ids = jnp.where(ids == jnp.arange(N)[:, None], (ids + 1) % N, ids)
-    dists = M.batched_rowwise(X, X[ids], metric)
-    dists, ids = _sort_rows(dists, ids)
+    dists = HP.neighbor_distances(X, X, ids, metric=metric,
+                                  backend=backend)
+    dists, ids = HP.rank_merge(dists, ids, keep=k, backend=backend)
 
     def body(state, _):
         ids, dists = state
@@ -104,10 +107,9 @@ def nn_descent(X, k: int, metric: str = "l2", iters: int = 8,
         hop2 = ids[jnp.clip(ids, 0, N - 1)][:, :, :sample]     # [N, k, sample]
         cand = jnp.concatenate([rev, hop2.reshape(N, k * sample)], axis=1)
         cand = jnp.where(cand == jnp.arange(N)[:, None], N, cand)  # drop self
-        cvalid = cand < N
-        cvec = X[jnp.clip(cand, 0, N - 1)]                     # [N, C, d]
-        cdist = M.batched_rowwise(X, cvec, metric)
-        cdist = jnp.where(cvalid, cdist, INF)
+        # one fused gather+GEMM evaluation; cand >= N masked in-kernel
+        cdist = HP.neighbor_distances(X, X, cand, metric=metric,
+                                      backend=backend)
         all_ids = jnp.concatenate([ids, cand], axis=1)
         all_d = jnp.concatenate([dists, cdist], axis=1)
         # dedup by id then keep k smallest
@@ -116,17 +118,12 @@ def nn_descent(X, k: int, metric: str = "l2", iters: int = 8,
         sd = jnp.take_along_axis(all_d, order, axis=1)
         dup = jnp.concatenate(
             [jnp.zeros((N, 1), bool), sid[:, 1:] == sid[:, :-1]], axis=1)
-        sd = jnp.where(dup | (sid >= N), INF, sd)
-        neg, pos = jax.lax.top_k(-sd, k)
-        new_ids = jnp.take_along_axis(sid, pos, axis=1)
-        return (new_ids.astype(jnp.int32), -neg), None
+        new_d, new_ids = HP.rank_merge(sd, sid, keep=k,
+                                       mask=~dup & (sid < N),
+                                       backend=backend)
+        return (new_ids.astype(jnp.int32), new_d), None
 
     (ids, dists), _ = jax.lax.scan(body, (ids, dists), None, length=iters,
                                    unroll=unroll)
     return ids, dists
 
-
-def _sort_rows(dists, ids):
-    order = jnp.argsort(dists, axis=1)
-    return (jnp.take_along_axis(dists, order, axis=1),
-            jnp.take_along_axis(ids, order, axis=1))

@@ -1,8 +1,8 @@
 """Large-batch NN search — paper Algorithm 2, TPU adaptation.
 
-One best-first search per query, vmapped over the batch (the TPU analogue of
-one-thread-block-per-query).  The paper's three data structures are kept with
-their exact hashed-segment layouts:
+One best-first search per query, advanced in lock-step across the batch
+(the TPU analogue of one-thread-block-per-query).  The paper's three data
+structures are kept with their exact hashed-segment layouts:
 
   R — top-`ef` ranking array, fixed size, Δ-relaxed termination
       ``m(u,q) > m(f,q) + Δ`` (f = furthest element of a full R);
@@ -18,6 +18,11 @@ O(1) warp-wide pops; on TPU an [m x seg] masked argmin is a single vector op,
 so segments are stored unsorted with validity masks — same behaviour (hash
 placement, per-segment eviction), one less sort per hop.  R-merges dedup by
 id (strictly better than the paper under a lossy V; noted in EXPERIMENTS).
+
+The whole batch advances as one [B, ...] state (no vmap): the per-hop
+neighbor evaluation is a single fused ``hotpath.neighbor_distances`` call
+and every ranking update is a ``hotpath.rank_merge`` — the kernel-backend
+seam (DESIGN.md §3) that lets the Pallas and XLA paths share this file.
 """
 from __future__ import annotations
 
@@ -26,10 +31,19 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import metrics as M
+from repro.core import hotpath as HP
 from repro.core.diversify import PackedGraph
 
 INF = jnp.float32(3.4e38)
+
+
+def _seg_merge(d3, i3, keep: int, backend: str):
+    """Per-segment eviction merge: [B, m, W] -> keep smallest `keep` per
+    segment (one rank_merge over the flattened segment rows)."""
+    B, m, W = d3.shape
+    dd, ii = HP.rank_merge(d3.reshape(B * m, W), i3.reshape(B * m, W),
+                           keep=keep, backend=backend)
+    return dd.reshape(B, m, keep), ii.reshape(B, m, keep)
 
 
 @functools.partial(
@@ -37,14 +51,15 @@ INF = jnp.float32(3.4e38)
     static_argnames=("k", "ef", "hops", "lambda_limit", "metric",
                      "n_seeds", "m_seg", "seg", "mv_seg", "segv",
                      "push_all_seeds", "unroll", "gather_limit",
-                     "exact_visited"))
+                     "exact_visited", "backend"))
 def large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
                        ef: int = 64, hops: int = 128, lambda_limit: int = 5,
                        metric: str = "l2", n_seeds: int = 32,
                        m_seg: int = 8, seg: int = 32, mv_seg: int = 8,
                        segv: int = 32, delta: float = 0.0, seed: int = 0,
                        push_all_seeds: bool = True, unroll: bool = False,
-                       gather_limit: int = 0, exact_visited: bool = False):
+                       gather_limit: int = 0, exact_visited: bool = False,
+                       backend: str = "auto"):
     """Returns (ids [B, k], dists [B, k]).
 
     `gather_limit` > 0 fetches only that many λ-sorted columns per row (the
@@ -82,145 +97,143 @@ def large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
         nbrs_all = nbrs_all[:, :gather_limit]
         lams_all = lams_all[:, :gather_limit]
     Mdeg = nbrs_all.shape[1]
+    rows = jnp.arange(B)
 
-    def one_query(q, seed_ids):
-        # ---- init: best of 32 random seeds -> R = C = {u}  (paper), or
-        # push every *already evaluated* seed (beyond-paper, free) ----------
-        sd = M.batched_rowwise(q[None], X[seed_ids][None], metric)[0]
-        # dedup repeated seed ids so they can't occupy several R slots
-        so = jnp.argsort(seed_ids)
-        ss_ids, ss_d = seed_ids[so], sd[so]
-        dupm = jnp.concatenate([jnp.zeros((1,), bool),
-                                ss_ids[1:] == ss_ids[:-1]])
-        ss_d = jnp.where(dupm, INF, ss_d)
-        if not push_all_seeds:
-            b = jnp.argmin(ss_d)
-            keep1 = jnp.arange(n_seeds) == b
-            ss_d = jnp.where(keep1, ss_d, INF)
-        o = jnp.argsort(ss_d)
-        init_ids = jnp.where(ss_d[o] < INF, ss_ids[o], N)
-        init_d = ss_d[o]
+    # ---- init: distance + masked top-k over the seeds (one fused call);
+    # repeated seed ids are deduped via the keep-mask so they can't occupy
+    # several R slots ------------------------------------------------------
+    so = jnp.argsort(seeds, axis=1)
+    ss_ids = jnp.take_along_axis(seeds, so, axis=1)
+    dupm = jnp.concatenate([jnp.zeros((B, 1), bool),
+                            ss_ids[:, 1:] == ss_ids[:, :-1]], axis=1)
+    init_d, sids = HP.seed_select(Q, X, ss_ids, metric=metric, k=n_seeds,
+                                  mask=~dupm, backend=backend)
+    if not push_all_seeds:
+        # keep only the best seed (paper: R = C = {u}); sorted, so column 0
+        first = jnp.arange(n_seeds)[None, :] == 0
+        init_d = jnp.where(first, init_d, INF)
+    init_ids = jnp.where(init_d < INF, sids, N)
 
-        R_ids = jnp.full((ef,), N, jnp.int32)
-        R_d = jnp.full((ef,), INF)
-        n_init = min(ef, n_seeds)
-        R_ids = R_ids.at[:n_init].set(init_ids[:n_init])
-        R_d = R_d.at[:n_init].set(init_d[:n_init])
-        # C: hashed-segment batch insert of the seeds
-        C_ids = jnp.full((m_seg, seg), N, jnp.int32)
-        C_d = jnp.full((m_seg, seg), INF)
-        seg_of = jnp.clip(init_ids, 0, N - 1) % m_seg
-        smask = (init_d < INF)[None, :] \
-            & (seg_of[None, :] == jnp.arange(m_seg)[:, None])
-        cd = jnp.where(smask, init_d[None, :], INF)
-        ci = jnp.where(smask, init_ids[None, :], N)
-        alld = jnp.concatenate([C_d, cd], axis=1)
-        alli = jnp.concatenate([C_ids, ci], axis=1)
-        os_ = jnp.argsort(alld, axis=1)
-        C_d = jnp.take_along_axis(alld, os_, axis=1)[:, :seg]
-        C_ids = jnp.take_along_axis(alli, os_, axis=1)[:, :seg]
+    R_ids = jnp.full((B, ef), N, jnp.int32)
+    R_d = jnp.full((B, ef), INF)
+    n_init = min(ef, n_seeds)
+    R_ids = R_ids.at[:, :n_init].set(init_ids[:, :n_init])
+    R_d = R_d.at[:, :n_init].set(init_d[:, :n_init])
+    # C: hashed-segment batch insert of the seeds
+    C_ids = jnp.full((B, m_seg, seg), N, jnp.int32)
+    C_d = jnp.full((B, m_seg, seg), INF)
+    seg_of = jnp.clip(init_ids, 0, N - 1) % m_seg
+    smask = (init_d < INF)[:, None, :] \
+        & (seg_of[:, None, :] == jnp.arange(m_seg)[None, :, None])
+    cd = jnp.where(smask, init_d[:, None, :], INF)
+    ci = jnp.where(smask, init_ids[:, None, :], N)
+    C_d, C_ids = _seg_merge(jnp.concatenate([C_d, cd], axis=2),
+                            jnp.concatenate([C_ids, ci], axis=2),
+                            seg, backend)
+    if exact_visited:
+        # mark the evaluated seeds; V_ptr is unused in this mode.  Marks are
+        # monotone (never unset), so `.max` keeps duplicate-index scatters
+        # (INF lanes clip onto node N-1) deterministic
+        V = jnp.zeros((B, N), jnp.uint8).at[
+            rows[:, None], jnp.clip(init_ids, 0, N - 1)].max(
+            jnp.where(init_d < INF, 1, 0).astype(jnp.uint8))
+        V_ptr = jnp.zeros((B, 1), jnp.int32)
+    else:
+        V = jnp.full((B, mv_seg, segv), N, jnp.int32)
+        V_ptr = jnp.zeros((B, mv_seg), jnp.int32)
+
+    tril = jnp.tril(jnp.ones((Mdeg, Mdeg), bool), k=-1)
+
+    def step(state, _):
+        R_ids, R_d, C_ids, C_d, V, V_ptr, done = state
+
+        # ---- pop global min from C (argmin over m x seg lanes) -------
+        flat_d = C_d.reshape(B, -1)
+        flat_i = C_ids.reshape(B, -1)
+        pidx = jnp.argmin(flat_d, axis=1)
+        u_d = jnp.take_along_axis(flat_d, pidx[:, None], axis=1)[:, 0]
+        u = jnp.take_along_axis(flat_i, pidx[:, None], axis=1)[:, 0]
+        empty = u_d >= INF
+        C_d2 = flat_d.at[rows, pidx].set(INF).reshape(B, m_seg, seg)
+        C_ids2 = flat_i.at[rows, pidx].set(N).reshape(B, m_seg, seg)
+
+        # ---- Δ-relaxed termination (only once R is full) -------------
+        r_full = R_d[:, ef - 1] < INF
+        worst = jnp.where(r_full, R_d[:, ef - 1], INF)
+        terminate = empty | (r_full & (u_d > worst + delta))
+        now_done = done | terminate
+        u_safe = jnp.clip(u, 0, N - 1)
+
+        # ---- neighbors of u, λ-prefix masked --------------------------
+        e = nbrs_all[u_safe]                               # [B, M]
+        lam = lams_all[u_safe]
+        ok = (lam < lambda_limit) & (e < N) & ~now_done[:, None]
+        e_safe = jnp.clip(e, 0, N - 1)
+        # drop repeats within this neighbor list (bridge splicing can
+        # duplicate an existing edge) — keep the first occurrence
+        dup_here = jnp.any(
+            (e_safe[:, :, None] == e_safe[:, None, :]) & tril[None],
+            axis=2)
+
         if exact_visited:
-            # mark the evaluated seeds; V_ptr is unused in this mode
-            V = jnp.zeros((N,), jnp.uint8).at[
-                jnp.clip(init_ids, 0, N - 1)].set(
-                jnp.where(init_d < INF, 1, 0).astype(jnp.uint8))
-            V_ptr = jnp.zeros((1,), jnp.int32)
+            # one byte-gather replaces all three membership scans;
+            # evaluated nodes are marked immediately below (`.max` so a
+            # duplicate edge's no-op lane can't erase its twin's fresh mark)
+            v_here = jnp.take_along_axis(V, e_safe, axis=1)
+            in_any = v_here == 1
+            new = ok & ~in_any & ~dup_here
+            V2 = V.at[rows[:, None], e_safe].max(
+                jnp.where(new, 1, 0).astype(jnp.uint8))
+            V_ptr2 = V_ptr
         else:
-            V = jnp.full((mv_seg, segv), N, jnp.int32)
-            V_ptr = jnp.zeros((mv_seg,), jnp.int32)
+            # ---- V.add(u) (circular segment insert, paper Alg.2) -----
+            vs = u_safe % mv_seg
+            slot = jnp.take_along_axis(V_ptr, vs[:, None], axis=1)[:, 0] \
+                % segv
+            V2 = V.at[rows, vs, slot].set(u_safe)
+            V_ptr2 = V_ptr.at[rows, vs].add(1)
+            V2 = jnp.where(now_done[:, None, None], V, V2)
+            V_ptr2 = jnp.where(now_done[:, None], V_ptr, V_ptr2)
+            # membership tests: e ∉ V and e ∉ C (paper line 15)
+            in_V = jnp.any(V2[rows[:, None], e_safe % mv_seg]
+                           == e_safe[:, :, None], axis=2)
+            c_rows_ids = C_ids2[rows[:, None], e_safe % m_seg]  # [B, M, seg]
+            c_rows_d = C_d2[rows[:, None], e_safe % m_seg]
+            in_C = jnp.any((c_rows_ids == e_safe[:, :, None])
+                           & (c_rows_d < INF), axis=2)
+            in_R = jnp.any((R_ids[:, None, :] == e_safe[:, :, None])
+                           & (R_d[:, None, :] < INF), axis=2)
+            new = ok & ~in_V & ~in_C & ~in_R & ~dup_here
 
-        def step(state, _):
-            R_ids, R_d, C_ids, C_d, V, V_ptr, done = state
+        # ---- distances for new candidates: ONE fused gather+GEMM+mask
+        # block for the whole batch (the per-hop hot spot) --------------
+        ed = HP.neighbor_distances(Q, X, e_safe, metric=metric, mask=new,
+                                   backend=backend)
+        admit = (ed < worst[:, None]) | ~r_full[:, None]   # paper line 17
+        ed = jnp.where(admit, ed, INF)
 
-            # ---- pop global min from C (argmin over m x seg lanes) -------
-            flat = C_d.reshape(-1)
-            pidx = jnp.argmin(flat)
-            u_d = flat[pidx]
-            u = C_ids.reshape(-1)[pidx]
-            empty = u_d >= INF
-            C_d2 = C_d.reshape(-1).at[pidx].set(INF).reshape(m_seg, seg)
-            C_ids2 = C_ids.reshape(-1).at[pidx].set(N).reshape(m_seg, seg)
+        # ---- push into R: merge candidates, keep ef smallest ----------
+        cat_d = jnp.concatenate([R_d, ed], axis=1)
+        cat_i = jnp.concatenate([R_ids, jnp.where(ed < INF, e, N)], axis=1)
+        R_d3, R_ids3 = HP.rank_merge(cat_d, cat_i, keep=ef, backend=backend)
 
-            # ---- Δ-relaxed termination (only once R is full) -------------
-            r_full = R_d[ef - 1] < INF
-            worst = jnp.where(r_full, R_d[ef - 1], INF)
-            terminate = empty | (r_full & (u_d > worst + delta))
-            now_done = done | terminate
-            u_safe = jnp.clip(u, 0, N - 1)
+        # ---- push into C: per-segment insert, evict most distant ------
+        seg_of_e = e_safe % m_seg
+        cand_mask = (ed < INF)[:, None, :] \
+            & (seg_of_e[:, None, :] == jnp.arange(m_seg)[None, :, None])
+        cand_d = jnp.where(cand_mask, ed[:, None, :], INF)  # [B, m, M]
+        cand_i = jnp.where(cand_mask, e[:, None, :], N)
+        C_d3, C_ids3 = _seg_merge(
+            jnp.concatenate([C_d2, cand_d], axis=2),
+            jnp.concatenate([C_ids2, cand_i], axis=2), seg, backend)
 
-            # ---- neighbors of u, λ-prefix masked --------------------------
-            e = nbrs_all[u_safe]                               # [M]
-            lam = lams_all[u_safe]
-            ok = (lam < lambda_limit) & (e < N) & ~now_done
-            e_safe = jnp.clip(e, 0, N - 1)
-            # drop repeats within this neighbor list (bridge splicing can
-            # duplicate an existing edge) — keep the first occurrence
-            dup_here = jnp.any(
-                jnp.tril(e_safe[:, None] == e_safe[None, :], k=-1), axis=1)
+        R_d4 = jnp.where(now_done[:, None], R_d, R_d3)
+        R_ids4 = jnp.where(now_done[:, None], R_ids, R_ids3)
+        C_d4 = jnp.where(now_done[:, None, None], C_d, C_d3)
+        C_ids4 = jnp.where(now_done[:, None, None], C_ids, C_ids3)
+        return (R_ids4, R_d4, C_ids4, C_d4, V2, V_ptr2, now_done), None
 
-            if exact_visited:
-                # one byte-gather replaces all three membership scans;
-                # evaluated nodes are marked immediately below
-                in_any = V[e_safe] == 1
-                new = ok & ~in_any & ~dup_here
-                V2 = V.at[e_safe].set(
-                    jnp.where(new & ~now_done, 1, V[e_safe])
-                    .astype(jnp.uint8))
-                V_ptr2 = V_ptr
-            else:
-                # ---- V.add(u) (circular segment insert, paper Alg.2) -----
-                vs = u_safe % mv_seg
-                V2 = V.at[vs, V_ptr[vs] % segv].set(u_safe)
-                V_ptr2 = V_ptr.at[vs].add(1)
-                V2 = jnp.where(now_done, V, V2)
-                V_ptr2 = jnp.where(now_done, V_ptr, V_ptr2)
-                # membership tests: e ∉ V and e ∉ C (paper line 15)
-                in_V = jnp.any(V2[e_safe % mv_seg] == e_safe[:, None],
-                               axis=1)
-                c_rows_ids = C_ids2[e_safe % m_seg]            # [M, seg]
-                c_rows_d = C_d2[e_safe % m_seg]
-                in_C = jnp.any((c_rows_ids == e_safe[:, None])
-                               & (c_rows_d < INF), axis=1)
-                in_R = jnp.any((R_ids[None, :] == e_safe[:, None])
-                               & (R_d[None, :] < INF), axis=1)
-                new = ok & ~in_V & ~in_C & ~in_R & ~dup_here
-
-            # ---- distances for new candidates (gather + matvec) ----------
-            ev = X[e_safe]                                     # [M, d]
-            ed = M.batched_rowwise(q[None], ev[None], metric)[0]
-            ed = jnp.where(new, ed, INF)
-            admit = (ed < worst) | ~r_full                     # paper line 17
-            ed = jnp.where(admit, ed, INF)
-
-            # ---- push into R: dedup merge-sort, keep ef smallest ----------
-            cat_d = jnp.concatenate([R_d, ed])
-            cat_i = jnp.concatenate([R_ids, jnp.where(ed < INF, e, N)])
-            o = jnp.argsort(cat_d)
-            R_d3 = cat_d[o][:ef]
-            R_ids3 = cat_i[o][:ef]
-
-            # ---- push into C: per-segment insert, evict most distant ------
-            seg_of_e = e_safe % m_seg
-            cand_mask = (ed < INF)[None, :] \
-                & (seg_of_e[None, :] == jnp.arange(m_seg)[:, None])
-            cand_d = jnp.where(cand_mask, ed[None, :], INF)    # [m, M]
-            cand_i = jnp.where(cand_mask, e[None, :], N)
-            all_d = jnp.concatenate([C_d2, cand_d], axis=1)    # [m, seg+M]
-            all_i = jnp.concatenate([C_ids2, cand_i], axis=1)
-            oseg = jnp.argsort(all_d, axis=1)
-            C_d3 = jnp.take_along_axis(all_d, oseg, axis=1)[:, :seg]
-            C_ids3 = jnp.take_along_axis(all_i, oseg, axis=1)[:, :seg]
-
-            R_d4 = jnp.where(now_done, R_d, R_d3)
-            R_ids4 = jnp.where(now_done, R_ids, R_ids3)
-            C_d4 = jnp.where(now_done, C_d, C_d3)
-            C_ids4 = jnp.where(now_done, C_ids, C_ids3)
-            return (R_ids4, R_d4, C_ids4, C_d4, V2, V_ptr2, now_done), None
-
-        state = (R_ids, R_d, C_ids, C_d, V, V_ptr, jnp.zeros((), bool))
-        (R_ids, R_d, *_), _ = jax.lax.scan(step, state, None, length=hops,
-                                           unroll=unroll)
-        return R_ids[:k], R_d[:k]
-
-    ids, dists = jax.vmap(one_query)(Q, seeds)
-    return ids.astype(jnp.int32), dists
+    state = (R_ids, R_d, C_ids, C_d, V, V_ptr, jnp.zeros((B,), bool))
+    (R_ids, R_d, *_), _ = jax.lax.scan(step, state, None, length=hops,
+                                       unroll=unroll)
+    return R_ids[:, :k].astype(jnp.int32), R_d[:, :k]

@@ -9,6 +9,9 @@ whole (B x t0) search population advances in lock-step: each hop is
 
 which is exactly the paper's warp schedule with the 32-lane warp replaced by
 vector lanes and the per-warp distance loop replaced by an MXU contraction.
+The hop's distance evaluation and ranking merges go through the
+``repro.core.hotpath`` primitives, so the Pallas and XLA kernel backends
+share this file bit-for-bit (DESIGN.md §3).
 
 Faithful details preserved:
   * 32 random seeds, best becomes the start node (no hierarchy needed);
@@ -29,7 +32,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import metrics as M
+from repro.core import hotpath as HP
 from repro.core.diversify import PackedGraph
 
 INF = jnp.float32(3.4e38)
@@ -38,13 +41,15 @@ INF = jnp.float32(3.4e38)
 @functools.partial(
     jax.jit,
     static_argnames=("k", "t0", "hops", "hop_width", "n_seeds",
-                     "lambda_limit", "metric", "exact_merge", "width", "unroll"))
+                     "lambda_limit", "metric", "exact_merge", "width",
+                     "unroll", "backend"))
 def small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
                        t0: int = 32, hops: int = 6, hop_width: int = 32,
                        n_seeds: int = 32, lambda_limit: int = 10,
                        metric: str = "l2", exact_merge: bool = False,
                        width: int = 32, seed: int = 0,
-                       unroll: bool = False, seed_offset=0):
+                       unroll: bool = False, seed_offset=0,
+                       backend: str = "auto"):
     """Returns (ids [B, k], dists [B, k]).  `seed_offset` may be traced
     (distributed small-batch: each model column runs different searches).
 
@@ -77,10 +82,9 @@ def small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
             lambda rk: jax.random.randint(jax.random.fold_in(rk, 1),
                                           (n_seeds // 2,), 0, nh))(row_keys)
         seeds = seeds.at[:, : n_seeds // 2].set(graph.hubs[hub_pick])
-    sd = M.batched_rowwise(Qs, X[seeds], metric)              # [S, n_seeds]
-    best = jnp.argmin(sd, axis=1)
-    u = jnp.take_along_axis(seeds, best[:, None], axis=1)[:, 0]
-    u_d = jnp.take_along_axis(sd, best[:, None], axis=1)[:, 0]
+    sd1, si1 = HP.seed_select(Qs, X, seeds, metric=metric, k=1,
+                              backend=backend)                # [S, 1] each
+    u, u_d = si1[:, 0], sd1[:, 0]
 
     rij_ids = jnp.full((S, width), N, jnp.int32)
     rij_d = jnp.full((S, width), INF)
@@ -97,10 +101,9 @@ def small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
         u, rij_ids, rij_d, active = state
         nbrs = nbrs_all[u]                                    # [S, M]
         lams = lams_all[u]
-        visit = (lams < lambda_limit) & (nbrs < N)
-        nvec = X[jnp.clip(nbrs, 0, N - 1)]                    # [S, M, d]
-        dists = M.batched_rowwise(Qs, nvec, metric)
-        dists = jnp.where(visit, dists, INF)
+        visit = lams < lambda_limit  # idx >= N masked by the primitive
+        dists = HP.neighbor_distances(Qs, X, nbrs, metric=metric,
+                                      mask=visit, backend=backend)
         if pad_m:
             dists = jnp.concatenate(
                 [dists, jnp.full((S, pad_m), INF)], axis=1)
@@ -119,16 +122,14 @@ def small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
             rt_ids = jnp.concatenate(
                 [rt_ids, jnp.full((S, pad), N, jnp.int32)], axis=1)
 
-        order = jnp.argsort(rt_d, axis=1)
-        rt_d_s = jnp.take_along_axis(rt_d, order, axis=1)
-        rt_ids_s = jnp.take_along_axis(rt_ids, order, axis=1)
+        rt_d_s, rt_ids_s = HP.rank_merge(rt_d, rt_ids, keep=width,
+                                         backend=backend)
 
         if exact_merge:  # beyond-paper: exact top-`width` of the union
             cat_d = jnp.concatenate([rij_d, rt_d], axis=1)
             cat_i = jnp.concatenate([rij_ids, rt_ids], axis=1)
-            o = jnp.argsort(cat_d, axis=1)
-            new_d = jnp.take_along_axis(cat_d, o, axis=1)[:, :width]
-            new_ids = jnp.take_along_axis(cat_i, o, axis=1)[:, :width]
+            new_d, new_ids = HP.rank_merge(cat_d, cat_i, keep=width,
+                                           backend=backend)
             improved = jnp.any(new_d < rij_d, axis=1)
         else:  # paper: best half of R_temp replaces worst half of R_ij
             improved = jnp.any(rt_d_s[:, :half] < rij_d[:, half:], axis=1)
@@ -136,9 +137,8 @@ def small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
                 [rij_d[:, :half], rt_d_s[:, :half]], axis=1)
             merged_i = jnp.concatenate(
                 [rij_ids[:, :half], rt_ids_s[:, :half]], axis=1)
-            o = jnp.argsort(merged_d, axis=1)
-            new_d = jnp.take_along_axis(merged_d, o, axis=1)
-            new_ids = jnp.take_along_axis(merged_i, o, axis=1)
+            new_d, new_ids = HP.rank_merge(merged_d, merged_i, keep=width,
+                                           backend=backend)
 
         new_u = rt_ids_s[:, 0]                                # closest in R_temp
         # frozen searches keep their state
@@ -160,6 +160,6 @@ def small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
     sd2 = jnp.take_along_axis(cand_d, o, axis=1)
     dup = jnp.concatenate(
         [jnp.zeros((B, 1), bool), sid[:, 1:] == sid[:, :-1]], axis=1)
-    sd2 = jnp.where(dup | (sid >= N), INF, sd2)
-    neg, pos = jax.lax.top_k(-sd2, k)
-    return (jnp.take_along_axis(sid, pos, axis=1).astype(jnp.int32), -neg)
+    out_d, out_ids = HP.rank_merge(sd2, sid, keep=k,
+                                   mask=~dup & (sid < N), backend=backend)
+    return out_ids.astype(jnp.int32), out_d

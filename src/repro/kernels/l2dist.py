@@ -55,3 +55,66 @@ def distance_matrix_pallas(Q, X, *, metric: str = "l2", bq: int = 128,
         interpret=interpret,
     )(Qp, Xp)
     return out[:B, :N]
+
+
+# --------------------------------------------------------------------------
+# batched-rowwise block distances — the search hot path's [S, W, d] shape
+# --------------------------------------------------------------------------
+
+def _block_kernel(q_ref, v_ref, m_ref, o_ref, *, metric: str):
+    """Per-row distance block: q [bs, Kq, d] x v [bs, C, d] -> [bs, Kq, C],
+    with the candidate keep-mask fused (masked lanes -> INF)."""
+    q = q_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    m = m_ref[...]                                 # [bs, C] int8
+    dots = jax.lax.dot_general(q, v, (((2,), (2,)), ((0,), (0,))),
+                               preferred_element_type=jnp.float32)
+    if metric in ("ip", "cos"):
+        dist = -dots
+    else:
+        qn = jnp.sum(q * q, axis=2)[:, :, None]
+        vn = jnp.sum(v * v, axis=2)[:, None, :]
+        dist = qn + vn - 2.0 * dots
+    o_ref[...] = jnp.where((m != 0)[:, None, :], dist,
+                           jnp.asarray(3.4e38, dist.dtype))
+
+
+def _pick_bs(Kq: int, C: int, d: int) -> int:
+    """Largest power-of-two row tile whose operand+output blocks fit a VMEM
+    budget (~4 MB, leaving room for double buffering)."""
+    bs = 128
+    while bs > 8 and bs * (Kq * d + C * d + Kq * C) * 4 > (4 << 20):
+        bs //= 2
+    return bs
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "bs", "interpret"))
+def block_distances_pallas(Q, V, mask, *, metric: str = "l2",
+                           bs: int | None = None, interpret: bool = False):
+    """Q [S, Kq, d] x V [S, C, d] x mask [S, C] -> [S, Kq, C] float32.
+
+    The hot primitive behind ``hotpath.neighbor_distances``: one fused
+    tile per `bs` rows computes the MXU contraction, the rank-1 norm
+    corrections, and the validity masking in a single VMEM-resident block.
+    """
+    S, Kq, d = Q.shape
+    C = V.shape[1]
+    if bs is None:
+        bs = _pick_bs(Kq, C, d)
+    Sp = -(-S // bs) * bs
+    Qp = jnp.pad(Q, ((0, Sp - S), (0, 0), (0, 0)))
+    Vp = jnp.pad(V, ((0, Sp - S), (0, 0), (0, 0)))
+    mp = jnp.pad(mask.astype(jnp.int8), ((0, Sp - S), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_block_kernel, metric=metric),
+        grid=(Sp // bs,),
+        in_specs=[
+            pl.BlockSpec((bs, Kq, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bs, C, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bs, C), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, Kq, C), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Sp, Kq, C), jnp.float32),
+        interpret=interpret,
+    )(Qp, Vp, mp)
+    return out[:S]

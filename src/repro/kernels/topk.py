@@ -18,13 +18,18 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 INF = jnp.float32(3.4e38)
+# column-padding id sentinel: sorts after every real id (incl. the graph's
+# own sentinel N) among equal-INF entries, so padded lanes never displace
+# real entries within the kept prefix
+PAD_ID = np.int32(2**31 - 1)
 
 
-def _sort_kernel(d_ref, i_ref, od_ref, oi_ref, *, width: int):
+def _bitonic_network(d, ids, width: int):
     """Bitonic network via reshape compare-exchange (no gathers, no captured
-    constants — Pallas/Mosaic-safe: reshapes, iota, selects only)."""
-    d = d_ref[...]                                # [br, W]
-    ids = i_ref[...]
+    constants — Pallas/Mosaic-safe: reshapes, iota, selects only).  Sorts
+    rows ascending by (dist, id) — the same total order as
+    ``lexsort((ids, dists))``, which is what keeps the XLA backend of
+    :mod:`repro.core.hotpath` bit-identical to this kernel."""
     br = d.shape[0]
     k = 2
     while k <= width:
@@ -50,8 +55,20 @@ def _sort_kernel(d_ref, i_ref, od_ref, oi_ref, *, width: int):
             ids = jnp.stack([new_a_i, new_b_i], axis=2).reshape(br, width)
             j //= 2
         k *= 2
-    od_ref[...] = d
-    oi_ref[...] = ids
+    return d, ids
+
+
+def _sort_kernel(d_ref, i_ref, od_ref, oi_ref, *, width: int):
+    od_ref[...], oi_ref[...] = _bitonic_network(d_ref[...], i_ref[...],
+                                                width)
+
+
+def _masked_sort_kernel(d_ref, i_ref, m_ref, od_ref, oi_ref, *, width: int):
+    """Keep-mask fused into the sort: dropped lanes get INF distance (their
+    ids are kept, matching the XLA reference path exactly)."""
+    d = d_ref[...]
+    d = jnp.where(m_ref[...] != 0, d, jnp.asarray(3.4e38, d.dtype))
+    od_ref[...], oi_ref[...] = _bitonic_network(d, i_ref[...], width)
 
 
 @functools.partial(jax.jit, static_argnames=("br", "interpret"))
@@ -80,3 +97,37 @@ def bitonic_sort_pallas(dists, ids, *, br: int = 64,
 def bitonic_topk_pallas(dists, ids, k: int, **kw):
     od, oi = bitonic_sort_pallas(dists, ids, **kw)
     return od[:, :k], oi[:, :k]
+
+
+@functools.partial(jax.jit, static_argnames=("keep", "br", "interpret"))
+def rank_merge_pallas(dists, ids, mask=None, *, keep: int, br: int = 64,
+                      interpret: bool = False):
+    """Row-wise (dist, id)-ascending merge: sort [R, W] carrying ids, keep
+    the `keep` smallest per row.  Generalizes :func:`bitonic_sort_pallas` to
+    arbitrary widths (column-padded to the next power of two with
+    (INF, PAD_ID) lanes) and an optional keep-mask (masked lanes -> INF
+    distance, fused into the kernel)."""
+    R, W = dists.shape
+    if not 0 < keep <= W:
+        raise ValueError(f"keep={keep} must be in (0, {W}]")
+    Wp = 1 << max(W - 1, 0).bit_length()
+    Rp = -(-R // br) * br
+    dp = jnp.pad(dists, ((0, Rp - R), (0, Wp - W)), constant_values=INF)
+    ip = jnp.pad(ids, ((0, Rp - R), (0, Wp - W)), constant_values=PAD_ID)
+    spec = pl.BlockSpec((br, Wp), lambda i: (i, 0))
+    out_shape = [jax.ShapeDtypeStruct((Rp, Wp), dists.dtype),
+                 jax.ShapeDtypeStruct((Rp, Wp), ids.dtype)]
+    if mask is None:
+        od, oi = pl.pallas_call(
+            functools.partial(_sort_kernel, width=Wp),
+            grid=(Rp // br,), in_specs=[spec, spec],
+            out_specs=[spec, spec], out_shape=out_shape,
+            interpret=interpret)(dp, ip)
+    else:
+        mp = jnp.pad(mask.astype(jnp.int8), ((0, Rp - R), (0, Wp - W)))
+        od, oi = pl.pallas_call(
+            functools.partial(_masked_sort_kernel, width=Wp),
+            grid=(Rp // br,), in_specs=[spec, spec, spec],
+            out_specs=[spec, spec], out_shape=out_shape,
+            interpret=interpret)(dp, ip, mp)
+    return od[:R, :keep], oi[:R, :keep]

@@ -21,6 +21,10 @@ def main() -> None:
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--batches", type=int, default=20)
     ap.add_argument("--metric", default="l2", choices=("l2", "ip", "cos"))
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "pallas", "xla"),
+                    help="hot-path kernel backend (auto = pallas on TPU, "
+                         "xla elsewhere)")
     ap.add_argument("--paper-faithful", action="store_true",
                     help="disable every beyond-paper feature")
     args = ap.parse_args()
@@ -31,7 +35,8 @@ def main() -> None:
     from repro.data.synthetic import make_clustered, recall_at_k
     from repro.serve.engine import ANNEngine
 
-    cfg = dataclasses.replace(get_arch("tsdg-paper"), metric=args.metric)
+    cfg = dataclasses.replace(get_arch("tsdg-paper"), metric=args.metric,
+                              kernel_backend=args.backend)
     if args.paper_faithful:
         cfg = dataclasses.replace(cfg, bridge_hubs=0, large_n_seeds=32,
                                   db_bf16=False, gather_limit=0)
@@ -49,7 +54,8 @@ def main() -> None:
     engine = ANNEngine(X, cfg, k=args.k)
     print(f"[serve] index: N={X.shape[0]} d={X.shape[1]} "
           f"avg_degree={engine.graph.avg_degree():.1f} "
-          f"built in {time.perf_counter() - t0:.1f}s")
+          f"built in {time.perf_counter() - t0:.1f}s "
+          f"(kernel backend: {engine.backend})")
 
     rng = np.random.default_rng(0)
     hits = total = 0

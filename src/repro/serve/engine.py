@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ANNConfig
+from repro.core import hotpath
 from repro.core.diversify import PackedGraph, build_tsdg
 from repro.core.search_large import large_batch_search
 from repro.core.search_small import small_batch_search
@@ -144,8 +145,17 @@ class ANNEngine:
         self.mesh = mesh
         self.stats = ServeStats()
         self._lock = threading.Lock()
-        self._compiled: dict = {}   # (regime, bucket, k) -> executable
+        # (regime, bucket, k, backend) -> executable
+        self._compiled: dict = {}
         self.buckets = tuple(sorted(self.cfg.serve_buckets))
+        # kernel backend resolved once per engine; part of the AOT cache key
+        # so an engine rebuilt with a different backend never aliases entries
+        self.backend = hotpath.resolve_backend(
+            getattr(self.cfg, "kernel_backend", "auto"))
+        # donate the bucket-padded query buffer into each dispatch so steady
+        # state reuses its HBM instead of re-allocating per call; skipped on
+        # CPU where XLA cannot alias the input (it would warn every call)
+        self._donate = jax.default_backend() != "cpu"
         if mesh is None:
             self.X = jnp.asarray(X)
             self.graph = graph if graph is not None \
@@ -223,36 +233,38 @@ class ANNEngine:
         if kind == "small":
             kwargs = dict(k=k, t0=cfg.small_t0, hops=cfg.small_hops,
                           hop_width=cfg.hop_width, n_seeds=cfg.n_seeds,
-                          lambda_limit=10, metric=cfg.metric)
+                          lambda_limit=10, metric=cfg.metric,
+                          backend=self.backend)
             return small_batch_search, (self.X, self.graph, Q), kwargs
         kwargs = dict(k=k, ef=cfg.large_ef, hops=cfg.large_hops,
                       lambda_limit=5, metric=cfg.metric,
                       n_seeds=getattr(cfg, "large_n_seeds", cfg.n_seeds),
                       m_seg=cfg.queue_segments, seg=cfg.segment_size,
-                      mv_seg=cfg.visited_segments, delta=cfg.delta)
+                      mv_seg=cfg.visited_segments, delta=cfg.delta,
+                      backend=self.backend)
         return large_batch_search, (self.X, self.graph, Q), kwargs
 
     def _get_executable(self, kind: str, bucket: int, k: int, Qpad):
-        """Cached AOT executable for (regime, bucket, k); compiles on miss.
+        """Cached AOT executable for (regime, bucket, k, backend); compiles
+        on miss.
 
         Returns (callable taking the padded query batch, compiled_now).
+        The database, graph, and every search parameter are closed over so
+        the padded query batch is the executable's ONLY argument — which is
+        what lets its bucket-sized buffer be donated (ROADMAP "Donated
+        buffers"): steady-state serving reuses the input's device memory
+        instead of re-allocating per call.
         """
-        cache_key = (kind, bucket, k)
+        cache_key = (kind, bucket, k, self.backend)
         with self._lock:
             hit = self._compiled.get(cache_key)
         if hit is not None:
             return hit, False
         fn, pos, kwargs = self._search_args(kind, Qpad, k)
-        compiled = fn.lower(*pos, **kwargs).compile()
-        # kwargs that are traced (not static) must be re-supplied per call
-        dyn = {key: val for key, val in kwargs.items()
-               if key in ("delta", "seed", "seed_offset")}
-        if self.mesh is not None:
-            exe = lambda Q: compiled(self.X, *self._db_parts, Q,  # noqa: E731
-                                     **dyn)
-        else:
-            exe = lambda Q: compiled(self.X, self.graph, Q,       # noqa: E731
-                                     **dyn)
+        head = pos[:-1]
+        wrapped = jax.jit(lambda Qb: fn(*head, Qb, **kwargs),
+                          donate_argnums=(0,) if self._donate else ())
+        exe = wrapped.lower(Qpad).compile()
         with self._lock:
             # a racing thread may have compiled the same key; keep the first
             prior = self._compiled.get(cache_key)
@@ -266,6 +278,7 @@ class ANNEngine:
 
     def query(self, Q, *, k: int | None = None):
         """Answer a batch: (ids [B, k], dists [B, k]) numpy arrays."""
+        Q_in = Q
         Q = jnp.asarray(Q)
         if Q.ndim != 2 or Q.shape[1] != self.X.shape[1]:
             raise ValueError(
@@ -278,6 +291,10 @@ class ANNEngine:
         bucket = self.bucket_for(B)
         if bucket > B:
             Qpad = jnp.pad(Q, ((0, bucket - B), (0, 0)), mode="edge")
+        elif self._donate and Q is Q_in:
+            # the executable donates its input buffer; never hand it a
+            # device array the caller still owns
+            Qpad = jnp.copy(Q)
         else:
             Qpad = Q
         exe, compiled_now = self._get_executable(kind, bucket, k, Qpad)

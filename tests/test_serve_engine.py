@@ -187,6 +187,27 @@ def test_engine_recall(ds, engine):
     assert recall_at_k(ids, ds.gt, 10) > 0.85
 
 
+def test_donated_query_buffer_steady_state(ds, cfg):
+    """The padded query buffer is donated into each dispatch (off-CPU);
+    repeated same-bucket traffic must neither recompile nor corrupt
+    results when the engine hands jax arrays to a donating executable."""
+    eng = ANNEngine(ds.X, cfg, k=10)
+    first, _ = eng.query(ds.Q[:5])
+    compiles = eng.stats.compiles
+    Qj = jnp.asarray(ds.Q[:5])          # caller-owned device array
+    for _ in range(6):
+        ids, _ = eng.query(Qj)
+        np.testing.assert_array_equal(ids, first)
+    # caller's buffer survived (it must never be the donated operand)
+    assert Qj.shape == (5, 16) and bool(jnp.isfinite(Qj).all())
+    assert eng.stats.compiles == compiles  # steady state: zero recompiles
+    # exact bucket hit (B == bucket) exercises the defensive-copy path
+    ids8, _ = eng.query(ds.Q[:8])
+    ids8b, _ = eng.query(jnp.asarray(ds.Q[:8]))
+    np.testing.assert_array_equal(ids8, ids8b)
+    assert eng.stats.compiles == compiles
+
+
 # ----------------------------------------------------------------------
 # micro-batching queue
 # ----------------------------------------------------------------------
