@@ -392,6 +392,28 @@ def hotpath_micro():
         us, _ = _timeit(f, Q, X, idx)
         emit(f"hotpath/seed_select_{S}x{C}", us, tag)
 
+    # gather placement within the Pallas backend: in-kernel scalar-prefetch
+    # DMA gather (gather_fused) vs the XLA-gather-then-block path — the
+    # ROADMAP "In-kernel neighbor gather" item's measured comparison.  On
+    # CPU the fused path runs its DMAs in interpret mode (tagged as such);
+    # on TPU this row is the [S, C, d]-buffer-elision win.
+    Sf, Cf = (64, 16) if QUICK else (256, 32)
+    Qf, idxf, maskf = Q[:Sf], idx[:Sf, :Cf], mask[:Sf, :Cf]
+    times = {}
+    for variant, gf in (("gather_then_block", "off"), ("gather_fused", "on")):
+        f = jax.jit(lambda q, x, i, m, _g=gf: HP.neighbor_distances(
+            q, x, i, metric="l2", mask=m, backend="pallas",
+            gather_fused=_g))
+        us, _ = _timeit(f, Qf, X, idxf, maskf)
+        times[variant] = us
+        emit(f"hotpath/neighbor_distances_{Sf}x{Cf}x{d_dim}", us,
+             f"{_pallas_tag()};variant={variant}")
+    emit(f"hotpath/neighbor_distances_fused_vs_gather_{Sf}x{Cf}x{d_dim}",
+         0.0,
+         f"fused_us={times['gather_fused']:.1f};"
+         f"gather_us={times['gather_then_block']:.1f};"
+         f"fused_speedup={times['gather_then_block'] / max(times['gather_fused'], 1e-9):.2f}x")
+
 
 def search_backend_compare():
     """Both search regimes end-to-end under kernel_backend pallas vs xla —

@@ -1,6 +1,8 @@
 #!/usr/bin/env bash
-# Quick CI tier: kernel-backend parity, the fast test suite, and two smoke
-# benchmarks (bucketed serving + an explicit kernel_backend=xla serve run).
+# Quick CI tier: kernel-backend parity (including the gather-fused
+# scalar-prefetch DMA path, exercised in interpret mode), the fast test
+# suite, and smoke benchmarks (bucketed serving, an explicit
+# kernel_backend=xla serve run, and the fused-vs-gather hotpath rows).
 #
 # Excludes @slow tests and the multi-minute distributed subprocess tests
 # (those run in the full tier: `PYTHONPATH=src python -m pytest -q`).
@@ -9,15 +11,18 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== kernel backend parity (Pallas interpret vs XLA) =="
-python -m pytest -q tests/test_hotpath.py
+echo "== kernel backend + gather-fused parity (Pallas interpret vs XLA) =="
+python -m pytest -q tests/test_hotpath.py tests/test_search_dedup.py
 
 echo "== quick test tier =="
 python -m pytest -q -m "not slow" --ignore=tests/test_distributed.py \
-    --ignore=tests/test_hotpath.py
+    --ignore=tests/test_hotpath.py --ignore=tests/test_search_dedup.py
 
 echo "== serving smoke bench =="
 REPRO_BENCH_QUICK=1 REPRO_BENCH_ONLY=serve python -m benchmarks.run
+
+echo "== hotpath micro bench (fused vs gather-then-block rows) =="
+REPRO_BENCH_QUICK=1 REPRO_BENCH_ONLY=hotpath python -m benchmarks.run
 
 echo "== kernel_backend=xla serving smoke =="
 python -m repro.launch.serve --n 4000 --d 16 --batches 6 --backend xla

@@ -216,6 +216,13 @@ class ANNConfig:
     # "auto" (pallas on TPU, xla fallback on CPU — explicit "pallas" off-TPU
     # runs the kernels in interpret mode, which the parity tests rely on)
     kernel_backend: str = "auto"
+    # in-kernel neighbor gather (kernels/l2dist.gather_block_distances_pallas,
+    # Pallas backend only): "auto" streams neighbor rows HBM->VMEM with
+    # scalar-prefetch DMAs on real TPU and falls back to the XLA
+    # gather-then-block path in interpret mode or when the tile exceeds the
+    # VMEM budget; "on" forces the DMA path (the parity tests); "off" always
+    # gathers at the XLA level (DESIGN.md §2)
+    gather_fused: str = "auto"
     # beyond-paper connectivity augmentation (0 = paper-faithful off)
     bridge_hubs: int = 256
     bridge_k: int = 8

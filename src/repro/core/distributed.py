@@ -84,6 +84,7 @@ def make_search_fn(mesh: Mesh, cfg: ANNConfig, *, kind: str = "large",
         n_q_shards *= sizes[a]
     unroll = getattr(cfg, "unroll_scans", False)
     backend = getattr(cfg, "kernel_backend", "auto")
+    gather_fused = getattr(cfg, "gather_fused", None)
 
     def local_search(X_s, nbrs_s, lams_s, degs_s, hubs_s, Q_s):
         n_local = X_s.shape[0]
@@ -105,7 +106,8 @@ def make_search_fn(mesh: Mesh, cfg: ANNConfig, *, kind: str = "large",
                 X_s, graph, Q_s, k=k, t0=t0_local, hops=cfg.small_hops,
                 hop_width=cfg.hop_width, n_seeds=cfg.n_seeds,
                 lambda_limit=10, metric=cfg.metric, unroll=unroll,
-                seed_offset=q_idx, backend=backend)
+                seed_offset=q_idx, backend=backend,
+                gather_fused=gather_fused)
         else:
             ids, dist = large_batch_search(
                 X_s, graph, Q_s, k=k, ef=cfg.large_ef, hops=cfg.large_hops,
@@ -116,7 +118,7 @@ def make_search_fn(mesh: Mesh, cfg: ANNConfig, *, kind: str = "large",
                 unroll=unroll,
                 gather_limit=getattr(cfg, "gather_limit", 0),
                 exact_visited=getattr(cfg, "exact_visited", False),
-                backend=backend)
+                backend=backend, gather_fused=gather_fused)
         gids = jnp.where(ids < n_local, ids + offset, jnp.int32(-1))
         dist = jnp.where(ids < n_local, dist, jnp.float32(3.4e38))
         # merge across DB shards (and search shards in the small regime)

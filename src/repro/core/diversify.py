@@ -38,9 +38,11 @@ INF = jnp.float32(3.4e38)
 # stage 1: relaxed GD
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("metric", "alpha", "backend"))
+@functools.partial(jax.jit, static_argnames=("metric", "alpha", "backend",
+                                             "gather_fused"))
 def relaxed_gd_tile(X, node_ids, nbr_ids, nbr_dists, *, alpha: float,
-                    metric: str, backend: str = "auto"):
+                    metric: str, backend: str = "auto",
+                    gather_fused: str | None = None):
     """Greedy occlusion pruning for a tile of nodes.
 
     node_ids [T]; nbr_ids/nbr_dists [T, K] sorted ascending by distance.
@@ -49,11 +51,12 @@ def relaxed_gd_tile(X, node_ids, nbr_ids, nbr_dists, *, alpha: float,
     T, K = nbr_ids.shape
     N = X.shape[0]
     valid = nbr_ids < N
-    vecs = X[jnp.clip(nbr_ids, 0, N - 1)]                     # [T, K, d]
     # pairwise distances among the K neighbors: one fused [T, K, K] block
-    # per tile (invalid columns -> INF, which Eq. 2 treats as non-occluding)
-    pair = HP.neighbor_distances(vecs, X, nbr_ids, metric=metric,
-                                 backend=backend)
+    # per tile (invalid columns -> INF, which Eq. 2 treats as non-occluding);
+    # q_idx=nbr_ids lets the fused Pallas path gather BOTH sides in-kernel
+    pair = HP.neighbor_distances(None, X, nbr_ids, metric=metric,
+                                 backend=backend, gather_fused=gather_fused,
+                                 q_idx=nbr_ids)
     # occ[t, i, j]: (kept) edge i occludes candidate j   (Eq. 2)
     # ip/cos distances are negative (-<x,y>): a plain α-multiply would make
     # the occluder condition *easier* (α·m more negative), inverting the
@@ -77,7 +80,7 @@ def relaxed_gd_tile(X, node_ids, nbr_ids, nbr_dists, *, alpha: float,
 
 def relaxed_gd(X, ids, dists, *, alpha: float, metric: str,
                tile: int = 2048, unroll: bool = False,
-               backend: str = "auto"):
+               backend: str = "auto", gather_fused: str | None = None):
     """Stage 1 over the whole graph (tiled). Returns keep mask [N, K]."""
     from repro.core.knn_build import tiled_map
 
@@ -91,7 +94,8 @@ def relaxed_gd(X, ids, dists, *, alpha: float, metric: str,
         sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i * tile, tile, 0)
         rows = i * tile + jnp.arange(tile)
         return relaxed_gd_tile(X, rows, sl(ids_p), sl(d_p),
-                               alpha=alpha, metric=metric, backend=backend)
+                               alpha=alpha, metric=metric, backend=backend,
+                               gather_fused=gather_fused)
 
     keep = tiled_map(one, n_tiles, unroll)
     return keep.reshape(-1, K)[:N]
@@ -102,7 +106,7 @@ def relaxed_gd(X, ids, dists, *, alpha: float, metric: str,
 # --------------------------------------------------------------------------
 
 def append_reverse(X, ids, dists, keep, *, rev_cap: int, metric: str,
-                   backend: str = "auto"):
+                   backend: str = "auto", gather_fused: str | None = None):
     """Undirected candidate lists: kept forward edges ++ reverse edges.
 
     Returns (adj_ids [N, K+rev_cap], adj_dists) with sentinel N / INF, each
@@ -112,7 +116,8 @@ def append_reverse(X, ids, dists, keep, *, rev_cap: int, metric: str,
     fwd_ids = jnp.where(keep, ids, N)
     fwd_d = jnp.where(keep, dists, INF)
     rev = reverse_neighbors(fwd_ids, fwd_ids < N, cap=rev_cap)  # [N, rev_cap]
-    rd = HP.neighbor_distances(X, X, rev, metric=metric, backend=backend)
+    rd = HP.neighbor_distances(X, X, rev, metric=metric, backend=backend,
+                               gather_fused=gather_fused)
     all_ids = jnp.concatenate([fwd_ids, rev], axis=1)
     all_d = jnp.concatenate([fwd_d, rd], axis=1)
     # dedup by id (duplicates -> sentinel)
@@ -133,16 +138,18 @@ def append_reverse(X, ids, dists, keep, *, rev_cap: int, metric: str,
 # stage 2: soft GD (occlusion factors)
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("metric", "backend"))
+@functools.partial(jax.jit, static_argnames=("metric", "backend",
+                                             "gather_fused"))
 def occlusion_factors_tile(X, nbr_ids, nbr_dists, *, metric: str,
-                           backend: str = "auto"):
+                           backend: str = "auto",
+                           gather_fused: str | None = None):
     """λ_j = #occluders of edge j within its node's list (Eq. 1, α = 1)."""
     T, K = nbr_ids.shape
     N = X.shape[0]
     valid = nbr_ids < N
-    vecs = X[jnp.clip(nbr_ids, 0, N - 1)]
-    pair = HP.neighbor_distances(vecs, X, nbr_ids, metric=metric,
-                                 backend=backend)
+    pair = HP.neighbor_distances(None, X, nbr_ids, metric=metric,
+                                 backend=backend, gather_fused=gather_fused,
+                                 q_idx=nbr_ids)
     occ = (nbr_dists[:, :, None] < nbr_dists[:, None, :]) \
         & (pair < nbr_dists[:, None, :]) \
         & valid[:, :, None] & valid[:, None, :]
@@ -152,7 +159,7 @@ def occlusion_factors_tile(X, nbr_ids, nbr_dists, *, metric: str,
 
 def soft_gd(X, adj_ids, adj_dists, *, lambda0: int, max_degree: int,
             metric: str, tile: int = 2048, unroll: bool = False,
-            backend: str = "auto"):
+            backend: str = "auto", gather_fused: str | None = None):
     """Stage 2: λ per edge, sort by (λ, dist), threshold λ0, truncate to M.
 
     Returns (neighbors [N, M], lambdas [N, M], degrees [N]).
@@ -168,7 +175,8 @@ def soft_gd(X, adj_ids, adj_dists, *, lambda0: int, max_degree: int,
     def one(i):
         sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i * tile, tile, 0)
         return occlusion_factors_tile(X, sl(ids_p), sl(d_p), metric=metric,
-                                      backend=backend)
+                                      backend=backend,
+                                      gather_fused=gather_fused)
 
     lam = tiled_map(one, n_tiles, unroll).reshape(-1, K)[:N]
 
@@ -277,19 +285,23 @@ def build_tsdg(X, cfg, knn_ids=None, knn_dists=None, *,
 
     unroll = getattr(cfg, "unroll_scans", False)
     backend = getattr(cfg, "kernel_backend", "auto")
+    gather_fused = getattr(cfg, "gather_fused", None)
     X = M.preprocess(jnp.asarray(X), cfg.metric)
     if knn_ids is None:
         knn_ids, knn_dists = nn_descent(X, cfg.k_graph, metric=cfg.metric,
-                                        unroll=unroll, backend=backend)
+                                        unroll=unroll, backend=backend,
+                                        gather_fused=gather_fused)
     keep = relaxed_gd(X, knn_ids, knn_dists, alpha=cfg.alpha,
                       metric=cfg.metric, tile=tile, unroll=unroll,
-                      backend=backend)
+                      backend=backend, gather_fused=gather_fused)
     adj_ids, adj_d = append_reverse(X, knn_ids, knn_dists, keep,
                                     rev_cap=cfg.k_graph, metric=cfg.metric,
-                                    backend=backend)
+                                    backend=backend,
+                                    gather_fused=gather_fused)
     nbrs, lams, degs = soft_gd(X, adj_ids, adj_d, lambda0=cfg.lambda0,
                                max_degree=cfg.max_degree, metric=cfg.metric,
-                               tile=tile, unroll=unroll, backend=backend)
+                               tile=tile, unroll=unroll, backend=backend,
+                               gather_fused=gather_fused)
     hubs = None
     n_hubs = getattr(cfg, "bridge_hubs", 0)
     if n_hubs:
@@ -312,15 +324,19 @@ def build_gd_baseline(X, cfg, knn_ids=None, knn_dists=None, *,
 
     unroll = getattr(cfg, "unroll_scans", False)
     backend = getattr(cfg, "kernel_backend", "auto")
+    gather_fused = getattr(cfg, "gather_fused", None)
     X = M.preprocess(jnp.asarray(X), cfg.metric)
     if knn_ids is None:
         knn_ids, knn_dists = nn_descent(X, cfg.k_graph, metric=cfg.metric,
-                                        unroll=unroll, backend=backend)
+                                        unroll=unroll, backend=backend,
+                                        gather_fused=gather_fused)
     keep = relaxed_gd(X, knn_ids, knn_dists, alpha=1.0, metric=cfg.metric,
-                      tile=tile, unroll=unroll, backend=backend)
+                      tile=tile, unroll=unroll, backend=backend,
+                      gather_fused=gather_fused)
     adj_ids, adj_d = append_reverse(X, knn_ids, knn_dists, keep,
                                     rev_cap=cfg.k_graph, metric=cfg.metric,
-                                    backend=backend)
+                                    backend=backend,
+                                    gather_fused=gather_fused)
     N, K = adj_ids.shape
     order = jnp.argsort(adj_d, axis=1)
     sid = jnp.take_along_axis(adj_ids, order, axis=1)[:, :cfg.max_degree]

@@ -6,7 +6,11 @@ tiles — reduces to three primitives:
 
   * :func:`neighbor_distances` — fused gather-of-neighbor-vectors -> tiled
     distance block ([S, W, d] batched-rowwise generalization of
-    ``kernels/l2dist.py``), with the validity keep-mask applied in-kernel;
+    ``kernels/l2dist.py``), with the validity keep-mask applied in-kernel.
+    On the Pallas backend the gather itself moves in-kernel when
+    ``gather_fused`` allows it: neighbor rows stream HBM->VMEM via
+    scalar-prefetch DMAs instead of materializing ``X[idx]`` (DESIGN.md
+    §2);
   * :func:`rank_merge` — (dist, id)-ascending merge of a candidate block
     into a ranking array, keeping the best ``keep`` per row (the id-carrying,
     keep-masked generalization of ``kernels/topk.py``);
@@ -53,12 +57,25 @@ def _dist_block(Q3, V3, mask, metric: str):
     return jnp.where(mask[:, None, :], dist, INF)
 
 
-def _gather_and_mask(X, idx, mask):
-    N = X.shape[0]
-    valid = (idx >= 0) & (idx < N)
+def _valid_mask(X, idx, mask):
+    valid = (idx >= 0) & (idx < X.shape[0])
     if mask is not None:
         valid = valid & mask
-    return X[jnp.clip(idx, 0, N - 1)], valid
+    return valid
+
+
+def _gather_and_mask(X, idx, mask):
+    return X[jnp.clip(idx, 0, X.shape[0] - 1)], _valid_mask(X, idx, mask)
+
+
+def _q3_of(Q, X, q_idx):
+    """Resolve the query block: explicit Q ([S, d] squeezed or [S, Kq, d]),
+    or rows of X named by ``q_idx`` [S, Kq] (the diversify tiles — lets the
+    fused kernel gather the query side in-kernel too)."""
+    if q_idx is not None:
+        return X[jnp.clip(q_idx, 0, X.shape[0] - 1)], False
+    squeeze = Q.ndim == 2
+    return (Q[:, None, :] if squeeze else Q), squeeze
 
 
 def _interp(interpret):
@@ -71,10 +88,10 @@ class _XlaBackend:
     name = "xla"
 
     @staticmethod
-    def neighbor_distances(Q, X, idx, *, metric, mask=None, interpret=None):
+    def neighbor_distances(Q, X, idx, *, metric, mask=None, interpret=None,
+                           gather_fused=None, q_idx=None):
         V, m = _gather_and_mask(X, idx, mask)
-        squeeze = Q.ndim == 2
-        Q3 = Q[:, None, :] if squeeze else Q
+        Q3, squeeze = _q3_of(Q, X, q_idx)
         out = _dist_block(Q3, V, m, metric)
         return out[:, 0] if squeeze else out
 
@@ -97,12 +114,41 @@ class _PallasBackend:
     name = "pallas"
 
     @staticmethod
-    def neighbor_distances(Q, X, idx, *, metric, mask=None, interpret=None):
-        V, m = _gather_and_mask(X, idx, mask)
-        squeeze = Q.ndim == 2
-        Q3 = Q[:, None, :] if squeeze else Q
-        out = _l2.block_distances_pallas(Q3, V, m, metric=metric,
-                                         interpret=_interp(interpret))
+    def neighbor_distances(Q, X, idx, *, metric, mask=None, interpret=None,
+                           gather_fused=None, q_idx=None):
+        interp = _interp(interpret)
+        mode = gather_fused or "auto"
+        if mode not in ("auto", "on", "off"):
+            raise ValueError(
+                f"gather_fused={mode!r} must be 'auto', 'on', or 'off'")
+        C = idx.shape[-1]
+        d = X.shape[1]
+        # the in-kernel query gather only pays off when the query rows are
+        # the candidate rows (the diversify tiles pass the same id array)
+        self_q = q_idx is idx and q_idx is not None
+        Kq = C if self_q else (
+            1 if (q_idx is None and Q.ndim == 2) else
+            (q_idx.shape[-1] if q_idx is not None else Q.shape[1]))
+        fits = _l2.gather_fused_fits(Kq, C, d, self_q=self_q)
+        # auto: fused only where it wins — on real TPU (interpret-mode DMA
+        # emulation is far slower than one XLA gather) and inside budget
+        use_fused = mode == "on" or (mode == "auto" and not interp and fits)
+        if not use_fused:
+            V, m = _gather_and_mask(X, idx, mask)
+            Q3, squeeze = _q3_of(Q, X, q_idx)
+            out = _l2.block_distances_pallas(Q3, V, m, metric=metric,
+                                             interpret=interp)
+            return out[:, 0] if squeeze else out
+        m = _valid_mask(X, idx, mask)
+        idx_c = jnp.clip(idx, 0, X.shape[0] - 1)
+        if self_q:
+            out = _l2.gather_block_distances_pallas(
+                None, X, idx_c, m, metric=metric, interpret=interp,
+                self_q=True)
+            return out
+        Q3, squeeze = _q3_of(Q, X, q_idx)
+        out = _l2.gather_block_distances_pallas(
+            Q3, X, idx_c, m, metric=metric, interpret=interp)
         return out[:, 0] if squeeze else out
 
     @staticmethod
@@ -142,16 +188,32 @@ def resolve_backend(name: str | None = None) -> str:
 # --------------------------------------------------------------------------
 
 def neighbor_distances(Q, X, idx, *, metric: str = "l2", mask=None,
-                       backend: str | None = None, interpret=None):
+                       backend: str | None = None, interpret=None,
+                       gather_fused: str | None = None, q_idx=None):
     """Fused gather + distance block, smaller = closer.
 
     Q [S, d] (or [S, Kq, d]), X [N, d], idx [S, C] -> [S, C] (or
     [S, Kq, C]) float32.  Rows of ``idx`` outside [0, N) and lanes where
     ``mask`` (optional [S, C] bool) is False come back as INF.
+
+    ``q_idx`` [S, Kq] replaces ``Q`` (pass Q=None) with rows of ``X`` —
+    the diversify tiles' pairwise blocks.  When ``q_idx`` is the SAME
+    array object as ``idx`` (Python ``is`` — value equality cannot be
+    detected at trace time) the fused Pallas path gathers the query side
+    in-kernel too; a distinct-but-equal array still computes correctly
+    but pays an XLA-level gather for the query block.
+
+    ``gather_fused`` selects the Pallas backend's gather placement:
+    ``"auto"`` (in-kernel scalar-prefetch DMA gather on real TPU, the
+    XLA-gather-then-block path in interpret mode or when the tile exceeds
+    the VMEM budget), ``"on"`` (force the DMA path — the parity tests),
+    ``"off"`` (always gather at the XLA level).  The XLA backend ignores
+    it: that path stays the bitwise oracle.
     """
     b = resolve_backend(backend)
-    return _REGISTRY[b].neighbor_distances(Q, X, idx, metric=metric,
-                                           mask=mask, interpret=interpret)
+    return _REGISTRY[b].neighbor_distances(
+        Q, X, idx, metric=metric, mask=mask, interpret=interpret,
+        gather_fused=gather_fused, q_idx=q_idx)
 
 
 def rank_merge(dists, ids, *, keep: int, mask=None,
@@ -165,10 +227,12 @@ def rank_merge(dists, ids, *, keep: int, mask=None,
 
 
 def seed_select(Q, X, seeds, *, metric: str = "l2", k: int = 1, mask=None,
-                backend: str | None = None, interpret=None):
+                backend: str | None = None, interpret=None,
+                gather_fused: str | None = None):
     """Distance + masked top-k over seed candidates: returns
     (dists [S, k], ids [S, k]) of the k closest valid seeds per row."""
     b = resolve_backend(backend)
     d = _REGISTRY[b].neighbor_distances(Q, X, seeds, metric=metric,
-                                        mask=mask, interpret=interpret)
+                                        mask=mask, interpret=interpret,
+                                        gather_fused=gather_fused)
     return _REGISTRY[b].rank_merge(d, seeds, keep=k, interpret=interpret)

@@ -83,10 +83,10 @@ def reverse_neighbors(ids, valid, cap: int):
 
 @functools.partial(jax.jit,
                    static_argnames=("k", "metric", "iters", "sample",
-                                    "unroll", "backend"))
+                                    "unroll", "backend", "gather_fused"))
 def nn_descent(X, k: int, metric: str = "l2", iters: int = 8,
                sample: int = 8, seed: int = 0, unroll: bool = False,
-               backend: str = "auto"):
+               backend: str = "auto", gather_fused: str | None = None):
     """Approximate k-NN graph. Returns (ids [N, k], dists [N, k]) sorted asc.
 
     Per iteration, candidates(u) = reverse(u) ++ B[B[u]][:, :sample] — one
@@ -98,7 +98,8 @@ def nn_descent(X, k: int, metric: str = "l2", iters: int = 8,
     # avoid self at init
     ids = jnp.where(ids == jnp.arange(N)[:, None], (ids + 1) % N, ids)
     dists = HP.neighbor_distances(X, X, ids, metric=metric,
-                                  backend=backend)
+                                  backend=backend,
+                                  gather_fused=gather_fused)
     dists, ids = HP.rank_merge(dists, ids, keep=k, backend=backend)
 
     def body(state, _):
@@ -109,7 +110,8 @@ def nn_descent(X, k: int, metric: str = "l2", iters: int = 8,
         cand = jnp.where(cand == jnp.arange(N)[:, None], N, cand)  # drop self
         # one fused gather+GEMM evaluation; cand >= N masked in-kernel
         cdist = HP.neighbor_distances(X, X, cand, metric=metric,
-                                      backend=backend)
+                                      backend=backend,
+                                      gather_fused=gather_fused)
         all_ids = jnp.concatenate([ids, cand], axis=1)
         all_d = jnp.concatenate([dists, cdist], axis=1)
         # dedup by id then keep k smallest

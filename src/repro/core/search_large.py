@@ -51,7 +51,7 @@ def _seg_merge(d3, i3, keep: int, backend: str):
     static_argnames=("k", "ef", "hops", "lambda_limit", "metric",
                      "n_seeds", "m_seg", "seg", "mv_seg", "segv",
                      "push_all_seeds", "unroll", "gather_limit",
-                     "exact_visited", "backend"))
+                     "exact_visited", "backend", "gather_fused"))
 def large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
                        ef: int = 64, hops: int = 128, lambda_limit: int = 5,
                        metric: str = "l2", n_seeds: int = 32,
@@ -59,7 +59,8 @@ def large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
                        segv: int = 32, delta: float = 0.0, seed: int = 0,
                        push_all_seeds: bool = True, unroll: bool = False,
                        gather_limit: int = 0, exact_visited: bool = False,
-                       backend: str = "auto"):
+                       backend: str = "auto",
+                       gather_fused: str | None = None):
     """Returns (ids [B, k], dists [B, k]).
 
     `gather_limit` > 0 fetches only that many λ-sorted columns per row (the
@@ -107,7 +108,8 @@ def large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
     dupm = jnp.concatenate([jnp.zeros((B, 1), bool),
                             ss_ids[:, 1:] == ss_ids[:, :-1]], axis=1)
     init_d, sids = HP.seed_select(Q, X, ss_ids, metric=metric, k=n_seeds,
-                                  mask=~dupm, backend=backend)
+                                  mask=~dupm, backend=backend,
+                                  gather_fused=gather_fused)
     if not push_all_seeds:
         # keep only the best seed (paper: R = C = {u}); sorted, so column 0
         first = jnp.arange(n_seeds)[None, :] == 0
@@ -208,7 +210,8 @@ def large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
         # ---- distances for new candidates: ONE fused gather+GEMM+mask
         # block for the whole batch (the per-hop hot spot) --------------
         ed = HP.neighbor_distances(Q, X, e_safe, metric=metric, mask=new,
-                                   backend=backend)
+                                   backend=backend,
+                                   gather_fused=gather_fused)
         admit = (ed < worst[:, None]) | ~r_full[:, None]   # paper line 17
         ed = jnp.where(admit, ed, INF)
 

@@ -18,7 +18,10 @@ Faithful details preserved:
   * R_temp lane-paired approximate update — candidate i only compares with
     cell i (cheap, deliberately lossy);
   * half-merge: best 16 of R_temp replace the worst 16 of R_ij (bitonic
-    half-cleaner semantics), then R_ij is fully re-sorted;
+    half-cleaner semantics), then R_ij is fully re-sorted; all merges dedup
+    by id — a node reached through two edges (duplicate graph lanes, bridge
+    splices) never occupies two ranking slots (explicit-set semantics,
+    enforced by tests/test_search_dedup.py);
   * no expansion queue, no visited set; termination on no-improvement or T;
   * λ-prefix dynamic degree: only edges with λ < λ_limit are visited (the
     graph rows are λ-sorted, so this is a prefix mask).
@@ -42,14 +45,15 @@ INF = jnp.float32(3.4e38)
     jax.jit,
     static_argnames=("k", "t0", "hops", "hop_width", "n_seeds",
                      "lambda_limit", "metric", "exact_merge", "width",
-                     "unroll", "backend"))
+                     "unroll", "backend", "gather_fused"))
 def small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
                        t0: int = 32, hops: int = 6, hop_width: int = 32,
                        n_seeds: int = 32, lambda_limit: int = 10,
                        metric: str = "l2", exact_merge: bool = False,
                        width: int = 32, seed: int = 0,
                        unroll: bool = False, seed_offset=0,
-                       backend: str = "auto"):
+                       backend: str = "auto",
+                       gather_fused: str | None = None):
     """Returns (ids [B, k], dists [B, k]).  `seed_offset` may be traced
     (distributed small-batch: each model column runs different searches).
 
@@ -83,7 +87,8 @@ def small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
                                           (n_seeds // 2,), 0, nh))(row_keys)
         seeds = seeds.at[:, : n_seeds // 2].set(graph.hubs[hub_pick])
     sd1, si1 = HP.seed_select(Qs, X, seeds, metric=metric, k=1,
-                              backend=backend)                # [S, 1] each
+                              backend=backend,
+                              gather_fused=gather_fused)      # [S, 1] each
     u, u_d = si1[:, 0], sd1[:, 0]
 
     rij_ids = jnp.full((S, width), N, jnp.int32)
@@ -96,6 +101,7 @@ def small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
     M_deg = nbrs_all.shape[1]
     n_chunks = max(1, -(-M_deg // hop_width))
     pad_m = n_chunks * hop_width - M_deg  # short NN lists -> one padded chunk
+    tril_w = jnp.tril(jnp.ones((width, width), bool), k=-1)
 
     def hop(state, _):
         u, rij_ids, rij_d, active = state
@@ -103,7 +109,8 @@ def small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
         lams = lams_all[u]
         visit = lams < lambda_limit  # idx >= N masked by the primitive
         dists = HP.neighbor_distances(Qs, X, nbrs, metric=metric,
-                                      mask=visit, backend=backend)
+                                      mask=visit, backend=backend,
+                                      gather_fused=gather_fused)
         if pad_m:
             dists = jnp.concatenate(
                 [dists, jnp.full((S, pad_m), INF)], axis=1)
@@ -124,19 +131,42 @@ def small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
 
         rt_d_s, rt_ids_s = HP.rank_merge(rt_d, rt_ids, keep=width,
                                          backend=backend)
+        # dedup R_temp by id: a node reached through two edges (duplicate
+        # graph lanes, bridge splices) must not occupy two ranking slots.
+        # The (dist, id) sort puts equal-id copies first-is-best, so "equal
+        # to some earlier entry" keeps the best copy; dropped lanes become
+        # (INF, N) sentinels instead of keep-masked (INF, id) lanes that
+        # could shadow a real entry in the final id-dedup merge.
+        dup_rt = jnp.any((rt_ids_s[:, :, None] == rt_ids_s[:, None, :])
+                         & tril_w[None], axis=2) & (rt_ids_s < N)
 
         if exact_merge:  # beyond-paper: exact top-`width` of the union
-            cat_d = jnp.concatenate([rij_d, rt_d], axis=1)
-            cat_i = jnp.concatenate([rij_ids, rt_ids], axis=1)
+            in_rij = jnp.any((rt_ids_s[:, :, None] == rij_ids[:, None, :])
+                             & (rij_d[:, None, :] < INF), axis=2)
+            drop = dup_rt | in_rij
+            cat_d = jnp.concatenate(
+                [rij_d, jnp.where(drop, INF, rt_d_s)], axis=1)
+            cat_i = jnp.concatenate(
+                [rij_ids, jnp.where(drop, N, rt_ids_s)], axis=1)
             new_d, new_ids = HP.rank_merge(cat_d, cat_i, keep=width,
                                            backend=backend)
             improved = jnp.any(new_d < rij_d, axis=1)
         else:  # paper: best half of R_temp replaces worst half of R_ij
-            improved = jnp.any(rt_d_s[:, :half] < rij_d[:, half:], axis=1)
+            # also drop candidates already present in the kept R_ij half
+            # (they'd double up after the concat below), then re-rank so
+            # the best `half` *distinct new* candidates fill the slots
+            in_keep = jnp.any(
+                (rt_ids_s[:, :, None] == rij_ids[:, None, :half])
+                & (rij_d[:, None, :half] < INF), axis=2)
+            drop = dup_rt | in_keep
+            rt_u_d, rt_u_i = HP.rank_merge(
+                jnp.where(drop, INF, rt_d_s), jnp.where(drop, N, rt_ids_s),
+                keep=width, backend=backend)
+            improved = jnp.any(rt_u_d[:, :half] < rij_d[:, half:], axis=1)
             merged_d = jnp.concatenate(
-                [rij_d[:, :half], rt_d_s[:, :half]], axis=1)
+                [rij_d[:, :half], rt_u_d[:, :half]], axis=1)
             merged_i = jnp.concatenate(
-                [rij_ids[:, :half], rt_ids_s[:, :half]], axis=1)
+                [rij_ids[:, :half], rt_u_i[:, :half]], axis=1)
             new_d, new_ids = HP.rank_merge(merged_d, merged_i, keep=width,
                                            backend=backend)
 
@@ -153,9 +183,13 @@ def small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
                                              unroll=unroll)
 
     # --- merge the t0 searches of each query (dedup + top-k) ---------------
+    # (id, dist)-lexsorted so the dedup keeps the BEST copy of each id: a
+    # plain stable id-sort keeps the first *column*, which can be an
+    # INF-distance copy (λ-masked lane that entered a ranking array),
+    # shadowing the real entry
     cand_ids = rij_ids.reshape(B, t0 * width)
     cand_d = rij_d.reshape(B, t0 * width)
-    o = jnp.argsort(cand_ids, axis=1)
+    o = jnp.lexsort((cand_d, cand_ids), axis=1)
     sid = jnp.take_along_axis(cand_ids, o, axis=1)
     sd2 = jnp.take_along_axis(cand_d, o, axis=1)
     dup = jnp.concatenate(

@@ -17,6 +17,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Per-block VMEM budget for operand + output tiles.  ~4 MB of the ~16 MB
+# per core, leaving headroom for Pallas' own pipeline double-buffering.
+VMEM_BUDGET = 4 << 20
 
 
 def _dist_kernel(q_ref, x_ref, o_ref, *, metric: str):
@@ -79,42 +84,231 @@ def _block_kernel(q_ref, v_ref, m_ref, o_ref, *, metric: str):
                            jnp.asarray(3.4e38, dist.dtype))
 
 
-def _pick_bs(Kq: int, C: int, d: int) -> int:
-    """Largest power-of-two row tile whose operand+output blocks fit a VMEM
-    budget (~4 MB, leaving room for double buffering)."""
+def _block_bytes(bs: int, Kq: int, bc: int, d: int) -> int:
+    """Bytes of one (Q-tile, V-tile, mask-tile, out-tile) block set."""
+    return (bs * Kq * d + bs * bc * d + bs * bc + bs * Kq * bc) * 4
+
+
+def _pick_bs(Kq: int, C: int, d: int,
+             budget: int = VMEM_BUDGET) -> tuple[int, int]:
+    """(row tile, candidate tile) whose operand+output blocks fit the VMEM
+    budget.  Halves the row tile all the way to 1; if a single row still
+    doesn't fit (e.g. GIST d=960 with a wide candidate set), the candidate
+    axis is split into a second grid dimension instead of silently
+    overflowing VMEM."""
     bs = 128
-    while bs > 8 and bs * (Kq * d + C * d + Kq * C) * 4 > (4 << 20):
+    while bs > 1 and _block_bytes(bs, Kq, C, d) > budget:
         bs //= 2
-    return bs
+    if _block_bytes(bs, Kq, C, d) <= budget:
+        return bs, C
+    bc = C
+    while bc > 1 and _block_bytes(1, Kq, bc, d) > budget:
+        bc = -(-bc // 2)
+    return 1, bc
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "bs", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("metric", "bs", "bc", "interpret"))
 def block_distances_pallas(Q, V, mask, *, metric: str = "l2",
-                           bs: int | None = None, interpret: bool = False):
+                           bs: int | None = None, bc: int | None = None,
+                           interpret: bool = False):
     """Q [S, Kq, d] x V [S, C, d] x mask [S, C] -> [S, Kq, C] float32.
 
     The hot primitive behind ``hotpath.neighbor_distances``: one fused
     tile per `bs` rows computes the MXU contraction, the rank-1 norm
     corrections, and the validity masking in a single VMEM-resident block.
+    When even a one-row block exceeds the VMEM budget the candidate axis
+    is tiled too (grid dim 2, `bc` columns per block) — padded candidate
+    lanes carry mask 0 and come back INF, so the result is unchanged.
     """
     S, Kq, d = Q.shape
     C = V.shape[1]
-    if bs is None:
-        bs = _pick_bs(Kq, C, d)
+    if bs is None or bc is None:
+        pbs, pbc = _pick_bs(Kq, C, d)
+        bs = pbs if bs is None else bs
+        bc = pbc if bc is None else bc
     Sp = -(-S // bs) * bs
+    Cp = -(-C // bc) * bc
     Qp = jnp.pad(Q, ((0, Sp - S), (0, 0), (0, 0)))
-    Vp = jnp.pad(V, ((0, Sp - S), (0, 0), (0, 0)))
-    mp = jnp.pad(mask.astype(jnp.int8), ((0, Sp - S), (0, 0)))
+    Vp = jnp.pad(V, ((0, Sp - S), (0, Cp - C), (0, 0)))
+    mp = jnp.pad(mask.astype(jnp.int8), ((0, Sp - S), (0, Cp - C)))
     out = pl.pallas_call(
         functools.partial(_block_kernel, metric=metric),
-        grid=(Sp // bs,),
+        grid=(Sp // bs, Cp // bc),
         in_specs=[
-            pl.BlockSpec((bs, Kq, d), lambda i: (i, 0, 0)),
-            pl.BlockSpec((bs, C, d), lambda i: (i, 0, 0)),
-            pl.BlockSpec((bs, C), lambda i: (i, 0)),
+            pl.BlockSpec((bs, Kq, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((bs, bc, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bs, bc), lambda i, j: (i, j)),
         ],
-        out_specs=pl.BlockSpec((bs, Kq, C), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((Sp, Kq, C), jnp.float32),
+        out_specs=pl.BlockSpec((bs, Kq, bc), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((Sp, Kq, Cp), jnp.float32),
         interpret=interpret,
     )(Qp, Vp, mp)
+    return out[:S, :, :C]
+
+
+# --------------------------------------------------------------------------
+# gather-fused block distances — in-kernel neighbor gather (DESIGN.md §2)
+# --------------------------------------------------------------------------
+#
+# The paper's throughput bound is how fast one node's neighborhood can be
+# fetched and scored (§4.1); CAGRA/GGNN win on GPU by streaming neighbor
+# vectors into shared memory.  This is the TPU analogue: the database X
+# stays resident in HBM (memory_space=ANY), the neighbor ids arrive via
+# scalar prefetch (available before the kernel body runs), and each row
+# tile issues one async copy per needed neighbor row HBM->VMEM.  Copies
+# for tile i+1 are issued before tile i's compute (double buffering), so
+# the DMA stream hides behind the MXU contraction.  The [S, C, d]
+# gathered-neighbor buffer of the gather-then-block path never exists.
+
+
+def _gather_tile_bytes(Kq: int, C: int, d: int, *, self_q: bool) -> int:
+    """Bytes of one gather-fused block set per row of tile: Q tile (unless
+    the query side is gathered from the same ids), the double-buffered
+    neighbor scratch, mask, and output."""
+    q = 0 if self_q else Kq * d
+    return (q + 2 * C * d + C + Kq * C) * 4
+
+
+def gather_fused_fits(Kq: int, C: int, d: int, *, self_q: bool = False,
+                      budget: int = VMEM_BUDGET) -> bool:
+    """True when at least a one-row tile of the fused gather kernel fits
+    the VMEM budget (the dispatch fallback check in hotpath)."""
+    return _gather_tile_bytes(Kq, C, d, self_q=self_q) <= budget
+
+
+def _pick_bs_fused(S: int, Kq: int, C: int, d: int, *,
+                   self_q: bool, budget: int = VMEM_BUDGET) -> int:
+    per_row = _gather_tile_bytes(Kq, C, d, self_q=self_q)
+    bs = 128
+    while bs > 1 and bs * per_row > budget:
+        bs //= 2
+    while bs // 2 >= S and bs > 1:  # don't pad tiny batches up to 128 rows
+        bs //= 2
+    return bs
+
+
+def _gather_block_kernel(idx_ref, q_ref, m_ref, x_hbm, o_ref, vbuf, sem, *,
+                         metric: str, bs: int, C: int):
+    """One grid step = one row tile.  idx_ref [Sp, C] is scalar-prefetched
+    (SMEM), so the DMA targets are known before the body runs; x_hbm is the
+    whole database in HBM/ANY; vbuf [2, bs, C, d] revolves across the grid.
+    """
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+
+    def _dma(slot, tile, r):
+        # r enumerates the bs*C neighbor rows of the tile
+        s, c = r // C, jax.lax.rem(r, C)
+        return pltpu.make_async_copy(
+            x_hbm.at[idx_ref[tile * bs + s, c]],
+            vbuf.at[slot, s, c],
+            sem.at[slot])
+
+    def _issue(slot, tile):
+        def body(r, carry):
+            _dma(slot, tile, r).start()
+            return carry
+        jax.lax.fori_loop(0, bs * C, body, 0)
+
+    def _wait(slot, tile):
+        def body(r, carry):
+            _dma(slot, tile, r).wait()
+            return carry
+        jax.lax.fori_loop(0, bs * C, body, 0)
+
+    @pl.when(i == 0)
+    def _():
+        _issue(0, 0)
+
+    @pl.when(i + 1 < n)  # prefetch the next tile's rows behind this compute
+    def _():
+        _issue((i + 1) % 2, i + 1)
+
+    slot = jax.lax.rem(i, 2)
+    _wait(slot, i)
+
+    v = vbuf[slot].astype(jnp.float32)             # [bs, C, d]
+    q = v if q_ref is None else q_ref[...].astype(jnp.float32)
+    m = m_ref[...]                                 # [bs, C] int8
+    dots = jax.lax.dot_general(q, v, (((2,), (2,)), ((0,), (0,))),
+                               preferred_element_type=jnp.float32)
+    if metric in ("ip", "cos"):
+        dist = -dots
+    else:
+        qn = jnp.sum(q * q, axis=2)[:, :, None]
+        vn = jnp.sum(v * v, axis=2)[:, None, :]
+        dist = qn + vn - 2.0 * dots
+    o_ref[...] = jnp.where((m != 0)[:, None, :], dist,
+                           jnp.asarray(3.4e38, dist.dtype))
+
+
+def _self_q_gather_kernel(idx_ref, m_ref, x_hbm, o_ref, vbuf, sem, *,
+                          metric: str, bs: int, C: int):
+    """self_q variant: the query rows ARE the gathered neighbor rows (the
+    diversify tiles' [T, K, K] pairwise blocks), so no Q input at all."""
+    _gather_block_kernel(idx_ref, None, m_ref, x_hbm, o_ref, vbuf, sem,
+                         metric=metric, bs=bs, C=C)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("metric", "bs", "interpret", "self_q"))
+def gather_block_distances_pallas(Q, X, idx, mask, *, metric: str = "l2",
+                                  bs: int | None = None,
+                                  interpret: bool = False,
+                                  self_q: bool = False):
+    """In-kernel-gather distance block.
+
+    Q [S, Kq, d] (ignored/None when ``self_q``) x X [N, d] resident in HBM
+    x idx [S, C] int32 (pre-clipped to [0, N)) x mask [S, C] bool ->
+    [S, Kq, C] float32 (Kq = C when ``self_q``).  Bitwise-identical to
+    ``block_distances_pallas(Q, X[idx], mask)`` — same contraction, same
+    rank-1 norm corrections, same mask — without ever materializing the
+    [S, C, d] neighbor buffer.
+    """
+    S, C = idx.shape
+    d = X.shape[1]
+    Kq = C if self_q else Q.shape[1]
+    if bs is None:
+        bs = _pick_bs_fused(S, Kq, C, d, self_q=self_q)
+    Sp = -(-S // bs) * bs
+    ip = jnp.pad(idx, ((0, Sp - S), (0, 0)))
+    mp = jnp.pad(mask.astype(jnp.int8), ((0, Sp - S), (0, 0)))
+    scratch = [pltpu.VMEM((2, bs, C, d), X.dtype),
+               pltpu.SemaphoreType.DMA((2,))]
+    if self_q:
+        kernel = functools.partial(_self_q_gather_kernel, metric=metric,
+                                   bs=bs, C=C)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(Sp // bs,),
+            in_specs=[
+                pl.BlockSpec((bs, C), lambda i, idx_ref: (i, 0)),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+            ],
+            out_specs=pl.BlockSpec((bs, Kq, C), lambda i, idx_ref: (i, 0, 0)),
+            scratch_shapes=scratch,
+        )
+        args = (ip, mp, X)
+    else:
+        kernel = functools.partial(_gather_block_kernel, metric=metric,
+                                   bs=bs, C=C)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(Sp // bs,),
+            in_specs=[
+                pl.BlockSpec((bs, Kq, d), lambda i, idx_ref: (i, 0, 0)),
+                pl.BlockSpec((bs, C), lambda i, idx_ref: (i, 0)),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+            ],
+            out_specs=pl.BlockSpec((bs, Kq, C), lambda i, idx_ref: (i, 0, 0)),
+            scratch_shapes=scratch,
+        )
+        Qp = jnp.pad(Q, ((0, Sp - S), (0, 0), (0, 0)))
+        args = (ip, Qp, mp, X)
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Sp, Kq, C), jnp.float32),
+        interpret=interpret,
+    )(*args)
     return out[:S]

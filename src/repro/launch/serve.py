@@ -25,6 +25,10 @@ def main() -> None:
                     choices=("auto", "pallas", "xla"),
                     help="hot-path kernel backend (auto = pallas on TPU, "
                          "xla elsewhere)")
+    ap.add_argument("--gather-fused", default="auto",
+                    choices=("auto", "on", "off"),
+                    help="Pallas in-kernel neighbor gather (auto = DMA "
+                         "path on real TPU, gather-then-block elsewhere)")
     ap.add_argument("--paper-faithful", action="store_true",
                     help="disable every beyond-paper feature")
     args = ap.parse_args()
@@ -36,7 +40,8 @@ def main() -> None:
     from repro.serve.engine import ANNEngine
 
     cfg = dataclasses.replace(get_arch("tsdg-paper"), metric=args.metric,
-                              kernel_backend=args.backend)
+                              kernel_backend=args.backend,
+                              gather_fused=args.gather_fused)
     if args.paper_faithful:
         cfg = dataclasses.replace(cfg, bridge_hubs=0, large_n_seeds=32,
                                   db_bf16=False, gather_limit=0)

@@ -145,13 +145,16 @@ class ANNEngine:
         self.mesh = mesh
         self.stats = ServeStats()
         self._lock = threading.Lock()
-        # (regime, bucket, k, backend) -> executable
+        # (regime, bucket, k, backend, gather_fused) -> executable
         self._compiled: dict = {}
         self.buckets = tuple(sorted(self.cfg.serve_buckets))
         # kernel backend resolved once per engine; part of the AOT cache key
         # so an engine rebuilt with a different backend never aliases entries
         self.backend = hotpath.resolve_backend(
             getattr(self.cfg, "kernel_backend", "auto"))
+        # gather placement for the Pallas backend ("auto"/"on"/"off"); part
+        # of the AOT cache key like the backend itself
+        self.gather_fused = getattr(self.cfg, "gather_fused", "auto")
         # donate the bucket-padded query buffer into each dispatch so steady
         # state reuses its HBM instead of re-allocating per call; skipped on
         # CPU where XLA cannot alias the input (it would warn every call)
@@ -234,19 +237,21 @@ class ANNEngine:
             kwargs = dict(k=k, t0=cfg.small_t0, hops=cfg.small_hops,
                           hop_width=cfg.hop_width, n_seeds=cfg.n_seeds,
                           lambda_limit=10, metric=cfg.metric,
-                          backend=self.backend)
+                          backend=self.backend,
+                          gather_fused=self.gather_fused)
             return small_batch_search, (self.X, self.graph, Q), kwargs
         kwargs = dict(k=k, ef=cfg.large_ef, hops=cfg.large_hops,
                       lambda_limit=5, metric=cfg.metric,
                       n_seeds=getattr(cfg, "large_n_seeds", cfg.n_seeds),
                       m_seg=cfg.queue_segments, seg=cfg.segment_size,
                       mv_seg=cfg.visited_segments, delta=cfg.delta,
-                      backend=self.backend)
+                      backend=self.backend,
+                      gather_fused=self.gather_fused)
         return large_batch_search, (self.X, self.graph, Q), kwargs
 
     def _get_executable(self, kind: str, bucket: int, k: int, Qpad):
-        """Cached AOT executable for (regime, bucket, k, backend); compiles
-        on miss.
+        """Cached AOT executable for (regime, bucket, k, backend,
+        gather_fused); compiles on miss.
 
         Returns (callable taking the padded query batch, compiled_now).
         The database, graph, and every search parameter are closed over so
@@ -255,7 +260,7 @@ class ANNEngine:
         buffers"): steady-state serving reuses the input's device memory
         instead of re-allocating per call.
         """
-        cache_key = (kind, bucket, k, self.backend)
+        cache_key = (kind, bucket, k, self.backend, self.gather_fused)
         with self._lock:
             hit = self._compiled.get(cache_key)
         if hit is not None:

@@ -37,16 +37,44 @@ class _Request:
 
 @dataclasses.dataclass
 class BatcherStats:
+    """Dispatch counters, mutated by the dispatcher thread and read by any
+    caller thread — every access goes through ``_lock`` so readers never
+    see a torn update (e.g. ``n_dispatches`` bumped before ``n_queries``).
+    ``snapshot()`` returns one consistent view; the bare attributes remain
+    readable for single-field checks."""
+
     n_requests: int = 0
     n_queries: int = 0
     n_dispatches: int = 0
     # recent dispatch sizes only (bounded; the means use the counters)
     dispatch_sizes: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=8192))
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
+
+    def record_dispatch(self, n_requests: int, n_queries: int) -> None:
+        with self._lock:
+            self.n_requests += n_requests
+            self.n_queries += n_queries
+            self.n_dispatches += 1
+            self.dispatch_sizes.append(n_queries)
 
     @property
     def mean_coalesced(self) -> float:
-        return self.n_queries / max(self.n_dispatches, 1)
+        with self._lock:
+            return self.n_queries / max(self.n_dispatches, 1)
+
+    def snapshot(self) -> dict:
+        """One consistent view of every counter (all under one lock hold)."""
+        with self._lock:
+            return {
+                "n_requests": self.n_requests,
+                "n_queries": self.n_queries,
+                "n_dispatches": self.n_dispatches,
+                "mean_coalesced":
+                    self.n_queries / max(self.n_dispatches, 1),
+                "dispatch_sizes": tuple(self.dispatch_sizes),
+            }
 
 
 class MicroBatcher:
@@ -55,6 +83,12 @@ class MicroBatcher:
     Requests with different `k` never share a dispatch (they need different
     compiled shapes); a `k` change flushes the in-flight group.  Errors from
     the engine propagate to every future of the failed dispatch.
+
+    ``close(drain=True)`` (the default, also the context-manager exit)
+    serves everything already enqueued — including submits that raced the
+    shutdown sentinel — before returning; ``drain=False`` fails pending
+    futures instead.  ``stats`` is safe to read from any thread; use
+    ``stats.snapshot()`` for a consistent multi-field view.
     """
 
     def __init__(self, engine, *, max_wait_ms: float | None = None,
@@ -71,6 +105,11 @@ class MicroBatcher:
         self._q: _queue.Queue = _queue.Queue()
         self._carry: _Request | None = None
         self._closed = False
+        # makes submit's closed-check + enqueue atomic against close()
+        # setting the flag: every accepted request is enqueued BEFORE the
+        # shutdown sentinel, so it is either served by the dispatcher or
+        # swept up by close()'s drain — no Future can be silently dropped
+        self._submit_lock = threading.Lock()
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name="repro-microbatcher")
         self._thread.start()
@@ -83,8 +122,6 @@ class MicroBatcher:
         Returns a Future resolving to (ids, dists) — shaped [k]/[b, k] to
         match the input rank.
         """
-        if self._closed:
-            raise RuntimeError("MicroBatcher is closed")
         Q = np.asarray(Q, np.float32)
         single = Q.ndim == 1
         if single:
@@ -95,14 +132,18 @@ class MicroBatcher:
             # would be concatenated with in the dispatcher
             raise ValueError(f"Q must be [{d}] or [b, {d}], got {Q.shape}")
         fut: Future = Future()
-        self._q.put(_Request(Q=Q, k=k, single=single, future=fut))
+        with self._submit_lock:
+            if self._closed:
+                raise RuntimeError("MicroBatcher is closed")
+            self._q.put(_Request(Q=Q, k=k, single=single, future=fut))
         return fut
 
     def close(self, *, drain: bool = True) -> None:
         """Stop the dispatcher; by default after draining pending work."""
-        if self._closed:
-            return
-        self._closed = True
+        with self._submit_lock:
+            if self._closed:
+                return
+            self._closed = True
         if not drain:
             # fail whatever is still queued
             try:
@@ -114,16 +155,32 @@ class MicroBatcher:
                 pass
         self._q.put(None)  # sentinel wakes the dispatcher
         self._thread.join(timeout=60)
-        # a submit() racing close() may have enqueued behind the sentinel;
-        # fail those futures rather than leaving callers hanging
+        # requests that raced the sentinel (accepted by submit before the
+        # closed flag was set, enqueued behind None via dispatcher re-puts,
+        # or left by a timed-out join): with drain=True those callers asked
+        # in good faith before the close completed — serve them, in
+        # max_batch-capped same-k groups like the dispatcher would; only
+        # fail them when drain=False
+        leftovers = []
         try:
             while True:
                 req = self._q.get_nowait()
                 if req is not None:
-                    req.future.set_exception(
-                        RuntimeError("MicroBatcher closed"))
+                    leftovers.append(req)
         except _queue.Empty:
             pass
+        if not drain:
+            for req in leftovers:
+                req.future.set_exception(RuntimeError("MicroBatcher closed"))
+            return
+        while leftovers:
+            group = [leftovers.pop(0)]
+            total = group[0].Q.shape[0]
+            while (leftovers and leftovers[0].k == group[0].k
+                   and total < self.max_batch):
+                total += leftovers[0].Q.shape[0]
+                group.append(leftovers.pop(0))
+            self._serve_group(group)
 
     def __enter__(self):
         return self
@@ -164,27 +221,27 @@ class MicroBatcher:
             total += nxt.Q.shape[0]
         return group
 
+    def _serve_group(self, group: list) -> None:
+        """One coalesced dispatch: concat, query, slice results back out."""
+        Q = np.concatenate([r.Q for r in group], axis=0)
+        self.stats.record_dispatch(len(group), Q.shape[0])
+        try:
+            ids, dists = self.engine.query(Q, k=group[0].k)
+        except Exception as e:  # noqa: BLE001 — deliver, don't die
+            for r in group:
+                r.future.set_exception(e)
+            return
+        row = 0
+        for r in group:
+            b = r.Q.shape[0]
+            out = (ids[row], dists[row]) if r.single \
+                else (ids[row:row + b], dists[row:row + b])
+            r.future.set_result(out)
+            row += b
+
     def _loop(self) -> None:
         while True:
             group = self._next_group()
             if group is None:
                 return
-            st = self.stats
-            st.n_requests += len(group)
-            st.n_dispatches += 1
-            try:
-                Q = np.concatenate([r.Q for r in group], axis=0)
-                st.n_queries += Q.shape[0]
-                st.dispatch_sizes.append(Q.shape[0])
-                ids, dists = self.engine.query(Q, k=group[0].k)
-            except Exception as e:  # noqa: BLE001 — deliver, don't die
-                for r in group:
-                    r.future.set_exception(e)
-                continue
-            row = 0
-            for r in group:
-                b = r.Q.shape[0]
-                out = (ids[row], dists[row]) if r.single \
-                    else (ids[row:row + b], dists[row:row + b])
-                r.future.set_result(out)
-                row += b
+            self._serve_group(group)

@@ -234,3 +234,222 @@ def test_engine_cache_key_includes_backend(index):
     assert eng.backend == "xla"
     eng.query(ds.Q[:2])
     assert all(key[3] == "xla" for key in eng._compiled)
+
+
+# ----------------------------------------------------------------------
+# gather-fused path: in-kernel neighbor gather (scalar-prefetch DMA)
+# ----------------------------------------------------------------------
+
+from repro.kernels import l2dist as L2  # noqa: E402
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "backend", "gf"))
+def _ndg(Q, X, idx, mask, metric, backend, gf):
+    return HP.neighbor_distances(Q, X, idx, metric=metric, mask=mask,
+                                 backend=backend, gather_fused=gf)
+
+
+@pytest.mark.parametrize("d", [8, 100, 128, 960])
+@pytest.mark.parametrize("metric", METRICS)
+def test_gather_fused_parity_dims(rng, d, metric):
+    """Fused DMA gather vs XLA oracle, bitwise, across dimensionalities
+    including non-128-multiple d (100) and GIST-sized d (960)."""
+    S, C, N = 13, 9, 150
+    X = jnp.asarray(rng.normal(size=(N, d)).astype(np.float32))
+    Q = jnp.asarray(rng.normal(size=(S, d)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(-2, N + 20, size=(S, C)).astype(np.int32))
+    mask = jnp.asarray(rng.random((S, C)) > 0.3)
+    a = _ndg(Q, X, idx, mask, metric, "xla", None)
+    b = _ndg(Q, X, idx, mask, metric, "pallas", "on")
+    c = _ndg(Q, X, idx, mask, metric, "pallas", "off")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_gather_fused_degenerate_idx(rng):
+    """All-(-1), all-duplicate, all-out-of-range, and fully masked idx
+    arrays must agree with the oracle and return INF where invalid."""
+    S, C, d, N = 7, 6, 16, 64
+    X = jnp.asarray(rng.normal(size=(N, d)).astype(np.float32))
+    Q = jnp.asarray(rng.normal(size=(S, d)).astype(np.float32))
+    cases = {
+        "all_minus_one": np.full((S, C), -1, np.int32),
+        "all_duplicate": np.full((S, C), 3, np.int32),
+        "all_out_of_range": np.full((S, C), N + 7, np.int32),
+        "sentinel_N": np.full((S, C), N, np.int32),
+        "mixed": rng.integers(-5, N + 5, size=(S, C)).astype(np.int32),
+    }
+    for name, idx_np in cases.items():
+        idx = jnp.asarray(idx_np)
+        for mask in (None, jnp.zeros((S, C), bool)):
+            a = _ndg(Q, X, idx, mask, "l2", "xla", None)
+            b = _ndg(Q, X, idx, mask, "l2", "pallas", "on")
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=name)
+            invalid = ~((idx_np >= 0) & (idx_np < N))
+            if mask is not None:
+                invalid |= True
+            assert (np.asarray(a)[invalid] > 1e37).all(), name
+
+
+@pytest.mark.parametrize("bs", [2, 4, 8])
+def test_gather_fused_multi_tile_parity(rng, bs):
+    """Force a multi-tile grid (bs < S) so the double-buffered DMA path —
+    the @pl.when(i+1<n) prefetch and the slot rotation — actually executes
+    (the auto-picked bs covers small test batches in one tile)."""
+    S, C, d, N = 20, 6, 32, 120
+    X = jnp.asarray(rng.normal(size=(N, d)).astype(np.float32))
+    Q3 = jnp.asarray(rng.normal(size=(S, 1, d)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, N, size=(S, C)).astype(np.int32))
+    mask = jnp.asarray(rng.random((S, C)) > 0.2)
+    a = _nd(Q3, X, idx, mask, "l2", "xla")
+    b = L2.gather_block_distances_pallas(Q3, X, idx, mask, metric="l2",
+                                         bs=bs, interpret=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_gather_fused_self_q_parity(rng, metric):
+    """The diversify-tile pairwise block via q_idx: BOTH operand sides are
+    gathered in-kernel (no [T, K, d] materialization at all)."""
+    T, K, d, N = 6, 5, 24, 80
+    X = jnp.asarray(rng.normal(size=(N, d)).astype(np.float32))
+    nbr = jnp.asarray(rng.integers(0, N + 5, size=(T, K)).astype(np.int32))
+
+    @functools.partial(jax.jit, static_argnames=("backend", "gf"))
+    def pair(X, nbr, backend, gf):
+        return HP.neighbor_distances(None, X, nbr, metric=metric,
+                                     backend=backend, gather_fused=gf,
+                                     q_idx=nbr)
+
+    a = pair(X, nbr, "xla", None)
+    b = pair(X, nbr, "pallas", "on")
+    c = pair(X, nbr, "pallas", "off")
+    assert a.shape == (T, K, K)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_gather_fused_e2e_small_batch(index):
+    """End-to-end Algorithm 1: forced fused DMA path vs XLA oracle,
+    bitwise ids AND dists."""
+    ds, X, g = index
+    Q = jnp.asarray(ds.Q)
+    a = small_batch_search(X, g, Q, k=10, t0=4, hops=4, width=16,
+                           n_seeds=8, backend="xla")
+    b = small_batch_search(X, g, Q, k=10, t0=4, hops=4, width=16,
+                           n_seeds=8, backend="pallas", gather_fused="on")
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+def test_gather_fused_e2e_large_batch(index):
+    """End-to-end Algorithm 2: forced fused DMA path vs XLA oracle."""
+    ds, X, g = index
+    Q = jnp.asarray(ds.Q)
+    a = large_batch_search(X, g, Q, k=10, ef=32, hops=24, backend="xla")
+    b = large_batch_search(X, g, Q, k=10, ef=32, hops=24, backend="pallas",
+                           gather_fused="on")
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+def test_gather_fused_hlo_elides_neighbor_buffer(rng):
+    """The acceptance check: the [S, C, d] gathered-neighbor buffer exists
+    in the lowered HLO of the gather-then-block path and does NOT exist in
+    the fused path (the gather happens via in-kernel DMA)."""
+    S, C, d, N = 11, 7, 19, 60
+    X = jnp.asarray(rng.normal(size=(N, d)).astype(np.float32))
+    Q = jnp.asarray(rng.normal(size=(S, d)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, N, size=(S, C)).astype(np.int32))
+
+    def lower(gf):
+        f = jax.jit(lambda q, x, i, _g=gf: HP.neighbor_distances(
+            q, x, i, metric="l2", backend="pallas", gather_fused=_g))
+        return f.lower(Q, X, idx).as_text()
+
+    buf = f"tensor<{S}x{C}x{d}xf32>"
+    assert buf in lower("off")
+    assert buf not in lower("on")
+
+
+def test_gather_fused_hlo_e2e_search(rng):
+    """Same check through a whole jitted search: the per-hop [B, M, d]
+    neighbor buffer disappears from the HLO when the fused path is on."""
+    from repro.core.diversify import PackedGraph
+
+    B, N, M, d = 5, 90, 6, 22
+    X = jnp.asarray(rng.normal(size=(N, d)).astype(np.float32))
+    Q = jnp.asarray(rng.normal(size=(B, d)).astype(np.float32))
+    g = PackedGraph(
+        neighbors=jnp.asarray(
+            rng.integers(0, N, size=(N, M)).astype(np.int32)),
+        lambdas=jnp.zeros((N, M), jnp.int32),
+        degrees=jnp.full((N,), M, jnp.int32))
+
+    def lower(gf):
+        f = jax.jit(functools.partial(
+            large_batch_search, k=4, ef=8, hops=6, n_seeds=8,
+            backend="pallas", gather_fused=gf))
+        return f.lower(X, g, Q).as_text()
+
+    buf = f"tensor<{B}x{M}x{d}xf32>"
+    assert buf in lower("off")
+    assert buf not in lower("on")
+
+
+# ----------------------------------------------------------------------
+# VMEM budgeting: _pick_bs never overflows, C-split keeps parity
+# ----------------------------------------------------------------------
+
+def test_pick_bs_never_exceeds_budget(rng):
+    """Property: for any realistic (Kq, C, d) the chosen block set fits
+    the VMEM budget — including the former overflow regime (the old code
+    stopped halving at bs=8 and could pick ~17 MB blocks)."""
+    for _ in range(300):
+        Kq = int(rng.integers(1, 65))
+        C = int(rng.integers(1, 513))
+        d = int(rng.integers(1, 1025))
+        bs, bc = L2._pick_bs(Kq, C, d)
+        assert 1 <= bs <= 128 and 1 <= bc <= C
+        assert L2._block_bytes(bs, Kq, bc, d) <= L2.VMEM_BUDGET, \
+            (Kq, C, d, bs, bc)
+
+
+def test_pick_bs_gist_regression():
+    """GIST d=960 with a wide candidate set: the old halving loop stopped
+    at bs=8 (8*(32*960 + 512*960 + 32*512)*4 ≈ 17 MB > 4 MB budget); the
+    fix keeps halving to bs=1, which fits."""
+    bs, bc = L2._pick_bs(32, 512, 960)
+    assert L2._block_bytes(bs, 32, bc, 960) <= L2.VMEM_BUDGET
+    assert bs == 1 and bc == 512
+    # even wider: a single row exceeds the budget -> candidate axis split
+    bs, bc = L2._pick_bs(64, 1024, 960)
+    assert L2._block_bytes(bs, 64, bc, 960) <= L2.VMEM_BUDGET
+    assert bs == 1 and bc < 1024
+
+
+def test_block_distances_csplit_parity(rng):
+    """Forcing the candidate-split grid (bc < C) stays bitwise-identical
+    to the oracle — padded candidate lanes are masked INF."""
+    S, Kq, C, d, N = 9, 3, 11, 20, 70
+    X = jnp.asarray(rng.normal(size=(N, d)).astype(np.float32))
+    Q3 = jnp.asarray(rng.normal(size=(S, Kq, d)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, N + 5, size=(S, C)).astype(np.int32))
+    a = _nd(Q3, X, idx, None, "l2", "xla")
+    V = X[jnp.clip(idx, 0, N - 1)]
+    m = (idx >= 0) & (idx < N)
+    for bs, bc in ((2, 4), (1, 3), (4, 11)):
+        b = L2.block_distances_pallas(Q3, V, m, metric="l2", bs=bs, bc=bc,
+                                      interpret=True)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"bs={bs},bc={bc}")
+
+
+def test_gather_fused_fits_budget_check():
+    assert L2.gather_fused_fits(1, 32, 128)
+    assert not L2.gather_fused_fits(1, 4096, 1024)
+    # self_q drops the Q tile from the bill: this shape fits only when the
+    # query side is gathered in-kernel from the same ids
+    assert L2.gather_fused_fits(512, 256, 960, self_q=True)
+    assert not L2.gather_fused_fits(512, 256, 960)

@@ -1,0 +1,193 @@
+"""Small-batch merge dedup: explicit-set reference regression tests.
+
+A node reachable through two edges (duplicate graph lanes, bridge splices)
+must occupy exactly ONE ranking slot — the half-merge used to let it take
+two, shrinking the effective ranking width.  The reference implementation
+here maintains R_ij with explicit python-set semantics; the search must
+match it bitwise (ids AND dists) because all distance evaluations go
+through the same jitted hotpath primitives.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import hotpath as HP
+from repro.core.diversify import PackedGraph, build_tsdg
+from repro.core.search_small import small_batch_search
+
+
+def _full_graph(n: int):
+    """Complete graph: every node links every other (λ = 0)."""
+    out = np.full((n, n - 1), n, np.int32)
+    for i in range(n):
+        out[i] = np.concatenate([np.arange(i), np.arange(i + 1, n)])
+    lam = np.zeros_like(out)
+    deg = np.full((n,), n - 1, np.int32)
+    return PackedGraph(neighbors=jnp.asarray(out), lambdas=jnp.asarray(lam),
+                       degrees=jnp.asarray(deg), hubs=None)
+
+
+INF = np.float32(3.4e38)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "backend"))
+def _nd_jit(Q, X, idx, mask, metric, backend):
+    return HP.neighbor_distances(Q, X, idx, metric=metric, mask=mask,
+                                 backend=backend)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "k", "backend"))
+def _ss_jit(Q, X, seeds, metric, k, backend):
+    return HP.seed_select(Q, X, seeds, metric=metric, k=k, backend=backend)
+
+
+def _dup_graph(n: int, deg: int, seed: int) -> PackedGraph:
+    """Adjacency whose rows list every neighbor TWICE (the duplicate-lane
+    shape bridge splicing can produce) — each duplicate must still occupy
+    only one ranking slot."""
+    rng = np.random.default_rng(seed)
+    half_rows = rng.integers(0, n, size=(n, deg // 2)).astype(np.int32)
+    half_rows = np.where(half_rows == np.arange(n)[:, None],
+                         (half_rows + 1) % n, half_rows)
+    nbrs = np.concatenate([half_rows, half_rows], axis=1)
+    perm = rng.permutation(deg)
+    nbrs = nbrs[:, perm]
+    return PackedGraph(neighbors=jnp.asarray(nbrs),
+                       lambdas=jnp.zeros((n, deg), jnp.int32),
+                       degrees=np.full((n,), deg, np.int32), hubs=None)
+
+
+def _ref_small_search(X, g, Q, *, k, t0, hops, hop_width, width, n_seeds,
+                      lambda_limit, seed, exact_merge, backend):
+    """Algorithm 1 with R_ij maintained under explicit-set semantics
+    (python sets/dicts for membership + dedup, sorted lists for ranking).
+    Distance evaluations go through the same jitted hotpath primitives the
+    implementation uses, so ids AND dists must match bitwise."""
+    Xj = jnp.asarray(X)
+    N, _ = X.shape
+    B = Q.shape[0]
+    S = B * t0
+    half = width // 2
+    key = jax.random.fold_in(jax.random.key(seed), 0)
+    row_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(S))
+    Qs = jnp.repeat(jnp.asarray(Q), t0, axis=0)
+    seeds = jax.vmap(
+        lambda rk: jax.random.randint(rk, (n_seeds,), 0, N, jnp.int32))(
+        row_keys)
+    sd1, si1 = _ss_jit(Qs, Xj, seeds, "l2", 1, backend)
+    u = np.asarray(si1)[:, 0].copy()
+    R = [[(float(np.asarray(sd1)[s, 0]), int(u[s]))]
+         + [(float(INF), N)] * (width - 1) for s in range(S)]
+    active = np.ones(S, bool)
+    nbrs_all = np.asarray(g.neighbors)
+    lams_all = np.asarray(g.lambdas)
+    M = nbrs_all.shape[1]
+    n_chunks = max(1, -(-M // hop_width))
+    pad_m = n_chunks * hop_width - M
+    for _ in range(hops):
+        nbrs = nbrs_all[u]
+        visit = lams_all[u] < lambda_limit
+        dists = np.asarray(_nd_jit(Qs, Xj, jnp.asarray(nbrs),
+                                   jnp.asarray(visit), "l2", backend))
+        if pad_m:
+            dists = np.concatenate(
+                [dists, np.full((S, pad_m), INF, np.float32)], 1)
+            nbrs = np.concatenate(
+                [nbrs, np.full((S, pad_m), N, np.int32)], 1)
+        cd = dists.reshape(S, n_chunks, hop_width)
+        ci = nbrs.reshape(S, n_chunks, hop_width)
+        la = np.argmin(cd, axis=1)
+        rt_d = np.take_along_axis(cd, la[:, None, :], 1)[:, 0]
+        rt_i = np.take_along_axis(ci, la[:, None, :], 1)[:, 0]
+        if hop_width < width:
+            pad = width - hop_width
+            rt_d = np.concatenate(
+                [rt_d, np.full((S, pad), INF, np.float32)], 1)
+            rt_i = np.concatenate([rt_i, np.full((S, pad), N, np.int32)], 1)
+        for s in range(S):
+            entries = sorted(zip(rt_d[s].tolist(), rt_i[s].tolist()))
+            new_u = entries[0][1]
+            Rs = sorted(R[s])
+            barrier = Rs if exact_merge else Rs[:half]
+            barrier_ids = {i for dd, i in barrier if dd < float(INF)}
+            seen: set = set()
+            rt_u = []
+            for dd, ii in entries:  # dedup by id, keep best copy
+                if ii < N and ii not in seen and ii not in barrier_ids:
+                    seen.add(ii)
+                    rt_u.append((dd, ii))
+                else:
+                    rt_u.append((float(INF), N))
+            rt_u = sorted(rt_u)
+            if exact_merge:
+                new_R = sorted(Rs + rt_u)[:width]
+                improved = any(new_R[j][0] < Rs[j][0] for j in range(width))
+            else:
+                new_R = sorted(Rs[:half] + rt_u[:half])
+                improved = any(rt_u[j][0] < Rs[half + j][0]
+                               for j in range(half))
+            if active[s]:
+                R[s] = new_R
+                u[s] = new_u
+            active[s] = active[s] and improved
+    out_ids = np.full((B, k), N, np.int64)
+    out_d = np.full((B, k), INF, np.float32)
+    for b in range(B):
+        best: dict = {}
+        for j in range(t0):
+            for dd, ii in R[b * t0 + j]:
+                if ii < N and (ii not in best or dd < best[ii]):
+                    best[ii] = dd
+        top = sorted((dd, ii) for ii, dd in best.items())[:k]
+        for j, (dd, ii) in enumerate(top):
+            out_ids[b, j] = ii
+            out_d[b, j] = np.float32(dd)
+    return out_ids, out_d
+
+
+@pytest.mark.parametrize("exact_merge", [False, True])
+@pytest.mark.parametrize("graph_kind", ["dup", "full"])
+def test_small_batch_matches_explicit_set_reference(exact_merge, graph_kind):
+    n, d, B, k = 64, 6, 3, 6
+    t0, width, hop_width, hops, n_seeds = 4, 16, 16, 5, 8
+    rng = np.random.default_rng(7)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    Q = rng.normal(size=(B, d)).astype(np.float32)
+    g = _dup_graph(n, 12, 3) if graph_kind == "dup" else _full_graph(n)
+    kwargs = dict(k=k, t0=t0, hops=hops, hop_width=hop_width, width=width,
+                  n_seeds=n_seeds, lambda_limit=10, seed=0,
+                  exact_merge=exact_merge)
+    for backend in ("xla", "pallas"):
+        ids, dists = small_batch_search(jnp.asarray(X), g, jnp.asarray(Q),
+                                        backend=backend, **kwargs)
+        rids, rd = _ref_small_search(X, g, Q, backend=backend, **kwargs)
+        ids, dists = np.asarray(ids), np.asarray(dists)
+        # every returned id is unique within its row (the dedup contract)
+        for r in range(B):
+            valid = ids[r][ids[r] < n]
+            assert len(valid) == len(set(valid.tolist())), backend
+        np.testing.assert_array_equal(ids, rids, err_msg=backend)
+        np.testing.assert_array_equal(dists, rd, err_msg=backend)
+
+
+def test_small_batch_output_ids_unique(rng=None):
+    """e2e uniqueness on a built TSDG graph with bridge splices (the
+    duplicate-edge source in production graphs)."""
+    rng = np.random.default_rng(11)
+    X = rng.normal(size=(400, 8)).astype(np.float32)
+    cfg = dataclasses.replace(get_arch("tsdg-paper"), k_graph=8,
+                              max_degree=12, lambda0=6, bridge_hubs=64,
+                              bridge_k=6)
+    g = build_tsdg(jnp.asarray(X), cfg)
+    Q = rng.normal(size=(8, 8)).astype(np.float32)
+    ids, _ = small_batch_search(jnp.asarray(X), g, jnp.asarray(Q), k=10,
+                                t0=4, hops=6, width=16, n_seeds=8)
+    ids = np.asarray(ids)
+    for r in range(ids.shape[0]):
+        valid = ids[r][ids[r] < 400]
+        assert len(valid) == len(set(valid.tolist()))

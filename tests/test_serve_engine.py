@@ -324,3 +324,125 @@ def test_mesh_engine_rejects_prebuilt_graph(ds, cfg, engine):
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     with pytest.raises(ValueError, match="mesh mode builds its own"):
         ANNEngine(ds.X, cfg, k=10, mesh=mesh, graph=engine.graph)
+
+
+# ----------------------------------------------------------------------
+# BatcherStats thread-safety + close(drain) race (regression)
+# ----------------------------------------------------------------------
+
+class _StubEngine:
+    """Minimal engine stand-in so queue tests control timing exactly."""
+
+    def __init__(self, d: int = 4, delay_s: float = 0.0,
+                 max_wait_ms: float = 5.0):
+        self.X = np.zeros((16, d), np.float32)
+        self.cfg = dataclasses.replace(
+            get_arch("tsdg-paper"), queue_max_wait_ms=max_wait_ms,
+            queue_max_batch=64)
+        self.delay_s = delay_s
+        self.n_calls = 0
+
+    def query(self, Q, k=None):
+        import time
+        self.n_calls += 1
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        k = 3 if k is None else k
+        B = Q.shape[0]
+        return (np.zeros((B, k), np.int32), np.zeros((B, k), np.float32))
+
+
+def test_batcher_stats_snapshot_consistent_under_threads():
+    """Counters are mutated by the dispatcher while callers read them; a
+    snapshot must never show a torn state (n_dispatches bumped before the
+    matching n_queries), and the final totals must add up exactly."""
+    eng = _StubEngine(delay_s=0.002)
+    n_threads, per_thread = 6, 20
+    bad = []
+    stop = threading.Event()
+
+    def reader(mb):
+        while not stop.is_set():
+            s = mb.stats.snapshot()
+            # invariants of any consistent view: every dispatch carries at
+            # least one request and one query, requests >= dispatches,
+            # queries >= dispatches, window sum <= total queries
+            if not (s["n_requests"] >= s["n_dispatches"]
+                    and s["n_queries"] >= s["n_dispatches"]
+                    and sum(s["dispatch_sizes"]) <= s["n_queries"]
+                    and (s["n_dispatches"] == 0
+                         or s["mean_coalesced"] >= 1.0)):
+                bad.append(s)
+
+    with MicroBatcher(eng, max_wait_ms=2, max_batch=16) as mb:
+        rt = threading.Thread(target=reader, args=(mb,))
+        rt.start()
+        futs = []
+
+        def worker():
+            for _ in range(per_thread):
+                futs.append(mb.submit(np.zeros(4, np.float32)))
+
+        threads = [threading.Thread(target=worker)
+                   for _ in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        for f in list(futs):
+            f.result(timeout=60)
+        stop.set()
+        rt.join(timeout=60)
+    assert not bad, bad[:3]
+    snap = mb.stats.snapshot()
+    assert snap["n_requests"] == n_threads * per_thread
+    assert snap["n_queries"] == n_threads * per_thread
+    assert snap["mean_coalesced"] == pytest.approx(
+        snap["n_queries"] / snap["n_dispatches"])
+
+
+def test_queue_close_drain_serves_racing_submit():
+    """A request enqueued behind the shutdown sentinel (submit racing
+    close) must be SERVED by close(drain=True), not failed."""
+    from concurrent.futures import Future
+
+    from repro.serve.queue import _Request
+
+    eng = _StubEngine(delay_s=0.3)
+    mb = MicroBatcher(eng, max_wait_ms=1, max_batch=4)
+    # occupy the dispatcher inside engine.query for 0.3s
+    f1 = mb.submit(np.zeros(4, np.float32))
+    closer = threading.Thread(target=mb.close)
+    import time
+    time.sleep(0.05)          # let the dispatcher pick f1 up
+    closer.start()
+    time.sleep(0.05)          # close() has put its sentinel by now
+    racer = _Request(Q=np.zeros((2, 4), np.float32), k=None, single=False,
+                     future=Future())
+    mb._q.put(racer)          # the race: enqueued behind the sentinel
+    closer.join(timeout=60)
+    ids, dists = f1.result(timeout=60)
+    assert ids.shape == (3,)
+    ids2, _ = racer.future.result(timeout=60)   # served, not failed
+    assert ids2.shape == (2, 3)
+
+
+def test_queue_close_no_drain_fails_racing_submit():
+    from concurrent.futures import Future
+
+    from repro.serve.queue import _Request
+
+    eng = _StubEngine(delay_s=0.2)
+    mb = MicroBatcher(eng, max_wait_ms=1, max_batch=4)
+    f1 = mb.submit(np.zeros(4, np.float32))
+    import time
+    time.sleep(0.05)
+    closer = threading.Thread(target=lambda: mb.close(drain=False))
+    closer.start()
+    time.sleep(0.05)
+    racer = _Request(Q=np.zeros((2, 4), np.float32), k=None, single=False,
+                     future=Future())
+    mb._q.put(racer)
+    closer.join(timeout=60)
+    with pytest.raises(RuntimeError, match="closed"):
+        racer.future.result(timeout=60)
