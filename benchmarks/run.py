@@ -61,8 +61,9 @@ def _cfg(**kw):
 # ==========================================================================
 
 def table2_diversification_time():
+    from repro.ann.pipeline import build_graph
     from repro.core.diversify import (append_reverse, build_gd_baseline,
-                                      build_tsdg, relaxed_gd, soft_gd)
+                                      relaxed_gd, soft_gd)
     from repro.core.knn_build import exact_knn
 
     ds = _dataset()
@@ -73,7 +74,7 @@ def table2_diversification_time():
     cfg = _cfg()
 
     def tsdg():
-        g = build_tsdg(X, cfg, knn_ids=ids, knn_dists=dists)
+        g = build_graph(X, cfg, knn_ids=ids, knn_dists=dists)
         jax.block_until_ready(g.neighbors)
         return g
 
@@ -105,7 +106,8 @@ def table2_diversification_time():
 
 def fig4_cpu_search():
     from repro.core import search_ref
-    from repro.core.diversify import build_gd_baseline, build_tsdg
+    from repro.ann.pipeline import build_graph
+    from repro.core.diversify import build_gd_baseline
     from repro.core.knn_build import exact_knn
     from repro.data.synthetic import recall_at_k
 
@@ -114,7 +116,7 @@ def fig4_cpu_search():
     ids, dists = exact_knn(X, 24)
     cfg = _cfg()
     graphs = {
-        "tsdg": build_tsdg(X, cfg, knn_ids=ids, knn_dists=dists),
+        "tsdg": build_graph(X, cfg, knn_ids=ids, knn_dists=dists),
         "gd": build_gd_baseline(X, cfg, knn_ids=ids, knn_dists=dists),
     }
     for name, g in graphs.items():
@@ -132,15 +134,16 @@ def fig4_cpu_search():
 # ==========================================================================
 
 def fig5_degree_sweep():
-    from repro.core.diversify import build_tsdg
+    from repro.ann.pipeline import build_graph
     from repro.core.knn_build import exact_knn
-    from repro.core.search_small import small_batch_search
+    from repro.core.search_small import \
+        _small_batch_search as small_batch_search
     from repro.data.synthetic import recall_at_k
 
     ds = _dataset(nq=64)
     X = jnp.asarray(ds.X)
     ids, dists = exact_knn(X, 24)
-    g = build_tsdg(X, _cfg(), knn_ids=ids, knn_dists=dists)
+    g = build_graph(X, _cfg(), knn_ids=ids, knn_dists=dists)
     Q = jnp.asarray(ds.Q)
     for lam_limit in (2, 5, 10):
         fn = lambda: small_batch_search(X, g, Q, k=10, t0=16, hops=6,
@@ -156,15 +159,16 @@ def fig5_degree_sweep():
 # ==========================================================================
 
 def fig6_small_batch():
-    from repro.core.diversify import build_tsdg
+    from repro.ann.pipeline import build_graph
     from repro.core.knn_build import exact_knn
-    from repro.core.search_small import small_batch_search
+    from repro.core.search_small import \
+        _small_batch_search as small_batch_search
     from repro.data.synthetic import recall_at_k
 
     ds = _dataset(nq=100)
     X = jnp.asarray(ds.X)
     ids, dists = exact_knn(X, 24)
-    g = build_tsdg(X, _cfg(), knn_ids=ids, knn_dists=dists)
+    g = build_graph(X, _cfg(), knn_ids=ids, knn_dists=dists)
     for B in ((1, 10) if QUICK else (1, 10, 100)):
         Q = jnp.asarray(ds.Q[:B])
         gt = ds.gt[:B]
@@ -180,9 +184,10 @@ def fig6_small_batch():
 # ==========================================================================
 
 def fig10_large_batch():
-    from repro.core.diversify import build_tsdg
+    from repro.ann.pipeline import build_graph
     from repro.core.knn_build import exact_knn
-    from repro.core.search_large import large_batch_search
+    from repro.core.search_large import \
+        _large_batch_search as large_batch_search
     from repro.data.synthetic import make_clustered, recall_at_k
 
     ds = make_clustered(n=4000 if QUICK else 20000, d=32,
@@ -190,7 +195,7 @@ def fig10_large_batch():
                         noise=0.6, seed=0)
     X = jnp.asarray(ds.X)
     ids, dists = exact_knn(X, 24)
-    g = build_tsdg(X, _cfg(), knn_ids=ids, knn_dists=dists)
+    g = build_graph(X, _cfg(), knn_ids=ids, knn_dists=dists)
     Q = jnp.asarray(ds.Q)
     for k, ef, ns in ((10, 64, 32), (10, 64, 128), (100, 128, 128)):
         fn = lambda: large_batch_search(X, g, Q, k=k, ef=ef, hops=128,
@@ -206,9 +211,10 @@ def fig10_large_batch():
 # ==========================================================================
 
 def ablation_alpha_lambda():
-    from repro.core.diversify import build_tsdg
+    from repro.ann.pipeline import build_graph
     from repro.core.knn_build import exact_knn
-    from repro.core.search_large import large_batch_search
+    from repro.core.search_large import \
+        _large_batch_search as large_batch_search
     from repro.data.synthetic import recall_at_k
 
     ds = _dataset(n=3000 if QUICK else 8000, nq=64)
@@ -217,14 +223,14 @@ def ablation_alpha_lambda():
     Q = jnp.asarray(ds.Q)
     for alpha in ((1.0, 1.2) if QUICK else (1.0, 1.1, 1.2, 1.4)):
         cfg = _cfg(alpha=alpha)
-        g = build_tsdg(X, cfg, knn_ids=ids, knn_dists=dists)
+        g = build_graph(X, cfg, knn_ids=ids, knn_dists=dists)
         out, _ = large_batch_search(X, g, Q, k=10, ef=64, hops=96)
         r = recall_at_k(np.asarray(out), ds.gt, 10)
         emit(f"ablation/alpha_{alpha}", 0.0,
              f"avg_degree={g.avg_degree():.1f};recall@10={r:.3f}")
     for lam0 in ((2, 8) if QUICK else (0, 2, 8, 16)):
         cfg = _cfg(lambda0=lam0)
-        g = build_tsdg(X, cfg, knn_ids=ids, knn_dists=dists)
+        g = build_graph(X, cfg, knn_ids=ids, knn_dists=dists)
         out, _ = large_batch_search(X, g, Q, k=10, ef=64, hops=96)
         r = recall_at_k(np.asarray(out), ds.gt, 10)
         emit(f"ablation/lambda0_{lam0}", 0.0,
@@ -236,18 +242,18 @@ def ablation_alpha_lambda():
 # ==========================================================================
 
 def serve_engine_mixed():
+    from repro.ann import Index
     from repro.data.synthetic import recall_at_k
-    from repro.serve.engine import ANNEngine
 
     ds = _dataset(nq=128)
-    eng = ANNEngine(ds.X, _cfg(), k=10)
+    eng = Index.build(ds.X, _cfg(), k=10)
     rng = np.random.default_rng(0)
     hits, total = 0.0, 0
     t0 = time.perf_counter()
     for _ in range(4 if QUICK else 12):
         B = int(rng.choice([1, 4, 16, 128]))
         sel = rng.integers(0, len(ds.Q), B)
-        ids, _ = eng.query(ds.Q[sel])
+        ids, _ = eng.search(ds.Q[sel])
         hits += recall_at_k(ids, ds.gt[sel], 10) * B
         total += B
     dt = time.perf_counter() - t0
@@ -260,14 +266,16 @@ def serve_bucketed_vs_raw():
     """Mixed-batch-size stream: shape-bucketed engine (compiles once per
     (regime, bucket), steady state never re-traces) vs calling the search
     kernels directly on raw shapes (every distinct B re-traces/compiles)."""
-    from repro.core.search_large import large_batch_search
-    from repro.core.search_small import small_batch_search
-    from repro.serve.engine import ANNEngine
+    from repro.core.search_large import \
+        _large_batch_search as large_batch_search
+    from repro.core.search_small import \
+        _small_batch_search as small_batch_search
+    from repro.ann import Index
 
     ds = _dataset(nq=600)
     cfg = _cfg(serve_buckets=(8, 32, 128, 512),
                large_hops=32 if QUICK else 64)
-    eng = ANNEngine(ds.X, cfg, k=10)
+    eng = Index.build(ds.X, cfg, k=10)
     X, graph = eng.X, eng.graph
     rng = np.random.default_rng(0)
     # bursty traffic over many *distinct* batch sizes — the serving reality
@@ -307,12 +315,44 @@ def serve_bucketed_vs_raw():
 
     # bucketed engine: same stream; steady-state excludes the few warmups
     for sel in stream:
-        eng.query(ds.Q[sel])
+        eng.search(ds.Q[sel])
     st = eng.stats
     eng_us = 1e6 / max(st.qps, 1e-9)
     emit("serve/bucketed_engine_steady", eng_us,
          f"compiles={st.compiles};hit_rate={st.bucket_hit_rate:.2f};"
          f"speedup_vs_raw={raw_us / max(eng_us, 1e-9):.1f}x")
+
+
+def serve_aot_reload():
+    """Cold start vs artifact restart: warmup compile sweep from scratch
+    against Index.load priming the persisted AOT executables (zero
+    compiles).  The row value is the restart's time-to-first-steady-query."""
+    import shutil
+    import tempfile
+
+    from repro.ann import Index
+
+    ds = _dataset(n=2000 if QUICK else 6000, nq=32)
+    cfg = _cfg(serve_buckets=(8, 32), large_hops=16 if QUICK else 32)
+    index = Index.build(ds.X, cfg, k=10)
+    t0 = time.perf_counter()
+    n_cold = index.warmup()
+    cold_s = time.perf_counter() - t0
+    emit("serve/cold_warmup_sweep", cold_s * 1e6, f"compiles={n_cold}")
+
+    td = tempfile.mkdtemp(prefix="repro_aot_bench_")
+    try:
+        index.save(td)
+        t0 = time.perf_counter()
+        loaded = Index.load(td)
+        loaded.search(ds.Q[:4])           # first real query, steady-state
+        warm_s = time.perf_counter() - t0
+        emit("serve/aot_reload_first_query", warm_s * 1e6,
+             f"compiles={loaded.stats.compiles};"
+             f"aot_primed={loaded.stats.aot_primed};"
+             f"speedup_vs_cold={cold_s / max(warm_s, 1e-9):.1f}x")
+    finally:
+        shutil.rmtree(td, ignore_errors=True)
 
 
 # ==========================================================================
@@ -418,16 +458,18 @@ def hotpath_micro():
 def search_backend_compare():
     """Both search regimes end-to-end under kernel_backend pallas vs xla —
     same graph, same queries; rows also record cross-backend id parity."""
-    from repro.core.diversify import build_tsdg
+    from repro.ann.pipeline import build_graph
     from repro.core.knn_build import exact_knn
-    from repro.core.search_large import large_batch_search
-    from repro.core.search_small import small_batch_search
+    from repro.core.search_large import \
+        _large_batch_search as large_batch_search
+    from repro.core.search_small import \
+        _small_batch_search as small_batch_search
     from repro.data.synthetic import recall_at_k
 
     ds = _dataset(n=2000 if QUICK else 6000, nq=32)
     X = jnp.asarray(ds.X)
     ids, dists = exact_knn(X, 24)
-    g = build_tsdg(X, _cfg(), knn_ids=ids, knn_dists=dists)
+    g = build_graph(X, _cfg(), knn_ids=ids, knn_dists=dists)
     Q = jnp.asarray(ds.Q)
     outs = {"small": {}, "large": {}}
     for backend in ("xla", "pallas"):
@@ -474,7 +516,8 @@ def roofline_table():
 
 BENCHES = [table2_diversification_time, fig4_cpu_search, fig5_degree_sweep,
            fig6_small_batch, fig10_large_batch, ablation_alpha_lambda,
-           serve_engine_mixed, serve_bucketed_vs_raw, kernel_micro,
+           serve_engine_mixed, serve_bucketed_vs_raw, serve_aot_reload,
+           kernel_micro,
            hotpath_micro, search_backend_compare, roofline_table]
 
 

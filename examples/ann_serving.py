@@ -1,34 +1,36 @@
 """End-to-end serving driver (the paper is a serving system): build a TSDG
-index once, then serve a mixed stream of small and large query batches
-through the regime-dispatching engine (paper §4's threshold).
+index once through the `repro.ann.Index` facade, then serve a mixed stream
+of small and large query batches (regime dispatch is the paper §4
+threshold, owned by `repro.ann.dispatch`).
 
 Demonstrates the production serving layer on top of the paper:
 shape-bucketed compile cache (one compile per (regime, bucket), steady
-state never re-traces), warmup pre-compilation, stats v2 (per-regime
-percentiles, bucket hit rate), and the async micro-batching queue
-coalescing concurrent single-query callers into one device dispatch.
+state never re-traces), warmup pre-compilation, save/load with the
+persistent AOT cache (a restart skips rebuild AND warmup), stats v2
+(per-regime percentiles, bucket hit rate), and the async micro-batching
+queue with the QoS bypass lane for bulk submits.
 
   PYTHONPATH=src python examples/ann_serving.py
 """
+import tempfile
 import threading
 import time
 
 import numpy as np
 
+from repro.ann import Index
 from repro.configs import get_arch
 from repro.data.synthetic import make_clustered, recall_at_k
-from repro.serve.engine import ANNEngine
-from repro.serve.queue import MicroBatcher
 
 ds = make_clustered(n=20000, d=32, n_queries=512, n_clusters=64, noise=0.6)
 
 t0 = time.perf_counter()
-engine = ANNEngine(ds.X, get_arch("tsdg-paper"), k=10)
+index = Index.build(ds.X, get_arch("tsdg-paper"), k=10)
 print(f"index built in {time.perf_counter() - t0:.1f}s "
-      f"(avg degree {engine.graph.avg_degree():.1f})")
+      f"(avg degree {index.graph.avg_degree():.1f})")
 
 t0 = time.perf_counter()
-n = engine.warmup()
+n = index.warmup()
 print(f"warmup: {n} compiles (regime x bucket x k) "
       f"in {time.perf_counter() - t0:.1f}s — steady state never re-traces")
 
@@ -37,13 +39,13 @@ recalls = []
 for step in range(20):
     B = int(rng.choice([1, 2, 8, 32, 256]))       # bursty traffic
     sel = rng.integers(0, len(ds.Q), B)
-    ids, dists = engine.query(ds.Q[sel])
+    ids, dists = index.search(ds.Q[sel])
     r = recall_at_k(ids, ds.gt[sel], 10)
     recalls.append((r, B))
-    print(f"batch={B:4d} regime={engine.regime(B):5s} "
-          f"bucket={engine.bucket_for(B):4d} recall@10={r:.3f}")
+    print(f"batch={B:4d} regime={index.regime(B):5s} "
+          f"bucket={index.engine.bucket_for(B):4d} recall@10={r:.3f}")
 
-s = engine.stats
+s = index.stats
 avg = sum(r * b for r, b in recalls) / sum(b for _, b in recalls)
 print(f"\nserved {s.n_queries} queries in {s.n_batches} batches "
       f"({s.small_batches} small / {s.large_batches} large), "
@@ -55,10 +57,26 @@ for regime in ("small", "large"):
     print(f"{regime:5s} latency ms: " + " ".join(
         f"{k}={v * 1e3:.1f}" for k, v in p.items()))
 
+# --- restart without the cold start ---------------------------------------
+with tempfile.TemporaryDirectory() as td:
+    t0 = time.perf_counter()
+    index.save(f"{td}/ix")
+    t_save = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    restarted = Index.load(f"{td}/ix")
+    print(f"\nsave {t_save:.1f}s / load {time.perf_counter() - t0:.1f}s — "
+          f"restart primed {restarted.stats.aot_primed} executables "
+          f"(rebuild AND warmup sweep skipped)")
+    ids2, _ = restarted.search(ds.Q[:8])
+    assert restarted.stats.compiles == 0, "loaded index must not compile"
+
 # --- async micro-batching: concurrent single-query callers ----------------
-print("\nmicro-batching queue: 64 concurrent single-query callers")
+print("\nmicro-batching queue: 64 concurrent single-query callers "
+      "+ one bulk job on the bypass lane")
 hits = []
-with MicroBatcher(engine, max_wait_ms=5.0, max_batch=256) as mb:
+with index.serve(max_wait_ms=5.0, max_batch=64) as mb:
+    bulk_fut = mb.submit(ds.Q[:256])  # >= max_batch -> QoS bypass lane
+
     def caller(i):
         ids, _ = mb.submit(ds.Q[i]).result(timeout=60)
         hits.append(recall_at_k(ids[None], ds.gt[i:i + 1], 10))
@@ -69,8 +87,9 @@ with MicroBatcher(engine, max_wait_ms=5.0, max_batch=256) as mb:
         t.start()
     for t in threads:
         t.join()
+    bulk_fut.result(timeout=120)
     dt = time.perf_counter() - t0
-q = mb.stats
-print(f"{q.n_requests} requests -> {q.n_dispatches} device dispatches "
-      f"(mean coalesced {q.mean_coalesced:.1f}), {dt * 1e3:.0f} ms total, "
-      f"recall@10 {np.mean(hits):.3f}")
+q = mb.stats.snapshot()
+print(f"{q['n_requests']} requests -> {q['n_dispatches']} device dispatches "
+      f"(mean coalesced {q['mean_coalesced']:.1f}, bypass={q['bypass']}), "
+      f"{dt * 1e3:.0f} ms total, recall@10 {np.mean(hits):.3f}")

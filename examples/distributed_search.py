@@ -1,4 +1,8 @@
-"""Multi-device sharded TSDG (the production layout at toy scale).
+"""Multi-device sharded TSDG (the production layout at toy scale), consumed
+through the `repro.ann.Index` facade: ``Index.build(X, cfg, mesh=mesh)``
+builds one independent sub-index per DB shard and ``index.search`` serves
+both regimes through the shard-mapped procedures — same API as the
+single-device path (DESIGN.md §6).
 
 Runs on 8 emulated host devices: DB sharded 4 ways (data axis), queries /
 search-populations over 2 model columns — the same shard_map code the
@@ -14,12 +18,10 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.ann import Index
 from repro.configs import get_arch
-from repro.core import distributed as D
 from repro.data.synthetic import make_clustered, recall_at_k
 
 mesh = jax.make_mesh((4, 2), ("data", "model"))
@@ -29,20 +31,18 @@ ds = make_clustered(n=16384, d=32, n_queries=64, n_clusters=64, noise=0.6)
 cfg = dataclasses.replace(get_arch("tsdg-paper"), k_graph=16, max_degree=24,
                           bridge_hubs=64)
 
-X = jax.device_put(jnp.asarray(ds.X), NamedSharding(mesh, P("data", None)))
 t0 = time.perf_counter()
-nbrs, lams, degs, hubs = D.make_build_fn(mesh, cfg)(X)
-jax.block_until_ready(nbrs)
+index = Index.build(ds.X, cfg, k=10, mesh=mesh)
 print(f"sharded build (4 independent sub-indexes): "
       f"{time.perf_counter() - t0:.1f}s")
 
-for kind, Bq in (("large", 64), ("small", 4)):
-    search = D.make_search_fn(mesh, cfg, kind=kind, k=10)
-    spec = P(None, None) if kind == "small" else P("model", None)
-    Q = jax.device_put(jnp.asarray(ds.Q[:Bq]), NamedSharding(mesh, spec))
+for Bq in (64, 4):  # large then small — dispatch is automatic
     t0 = time.perf_counter()
-    ids, dists = search(X, nbrs, lams, degs, hubs, Q)
-    jax.block_until_ready(ids)
+    ids, dists = index.search(ds.Q[:Bq])
     r = recall_at_k(np.asarray(ids), ds.gt[:Bq], 10)
-    print(f"{kind}-batch (B={Bq}): recall@10={r:.3f} "
+    print(f"{index.regime(Bq)}-batch (B={Bq}): recall@10={r:.3f} "
           f"({time.perf_counter() - t0:.1f}s incl. compile)")
+
+s = index.stats
+print(f"engine: {s.n_batches} batches, compiles={s.compiles} "
+      f"({s.small_batches} small / {s.large_batches} large)")

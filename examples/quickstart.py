@@ -1,34 +1,57 @@
-"""Quickstart: build a TSDG index and search it, 30 lines.
+"""Quickstart: the `repro.ann.Index` facade end-to-end, ~40 lines.
+
+Build a TSDG index, search it under both batch regimes (dispatch is
+automatic), persist it — graph, config, AND the AOT-compiled serving
+executables — then reload and serve without rebuilding or recompiling.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import jax.numpy as jnp
-import numpy as np
+import os
+import tempfile
 
-from repro.configs import get_arch
-from repro.core.diversify import build_tsdg
-from repro.core.search_large import large_batch_search
-from repro.core.search_small import small_batch_search
+from repro.ann import Index
 from repro.data.synthetic import make_clustered, recall_at_k
 
-# 1. data (swap in your own [N, d] float32 matrix)
-ds = make_clustered(n=20000, d=32, n_queries=100, n_clusters=64, noise=0.6)
+# 1. data (swap in your own [N, d] float32 matrix; REPRO_QUICKSTART_N
+#    shrinks the corpus for the CI smoke run)
+ds = make_clustered(n=int(os.environ.get("REPRO_QUICKSTART_N", 20000)),
+                    d=32, n_queries=100, n_clusters=64, noise=0.6)
 
-# 2. build the two-stage diversified graph (paper §3)
-cfg = get_arch("tsdg-paper")
-graph = build_tsdg(jnp.asarray(ds.X), cfg)
-print(f"TSDG built: N={graph.n} max_degree={graph.max_degree} "
-      f"avg_degree={graph.avg_degree():.1f}")
+# 2. build — staged pipeline (knn -> diversify -> bridges, paper §3);
+#    defaults come from ANNConfig, any knob is a dataclasses.replace away
+index = Index.build(ds.X, k=10)
+print(index)
 
-# 3a. small-batch search (paper Alg. 1): many cheap greedy searches
-ids, dists = small_batch_search(jnp.asarray(ds.X), graph,
-                                jnp.asarray(ds.Q[:10]), k=10, t0=32, hops=6)
-print("small-batch recall@10:",
-      recall_at_k(np.asarray(ids), ds.gt[:10], 10))
+# 3. search — one call, both regimes: the paper's §4 threshold routes a
+#    small batch to Algorithm 1 (t0 parallel greedy searches) and a large
+#    one to Algorithm 2 (batched best-first), behind the same API
+ids, dists = index.search(ds.Q[:10])
+print(f"B=10  -> {index.regime(10)}-batch procedure, "
+      f"recall@10={recall_at_k(ids, ds.gt[:10], 10):.3f}")
+ids, dists = index.search(ds.Q)
+print(f"B=100 -> {index.regime(100)}-batch procedure, "
+      f"recall@10={recall_at_k(ids, ds.gt, 10):.3f}")
 
-# 3b. large-batch search (paper Alg. 2): best-first with hashed structures
-# (n_seeds=128: one MXU pass evaluates 4x the paper's warp-width seed set)
-ids, dists = large_batch_search(jnp.asarray(ds.X), graph,
-                                jnp.asarray(ds.Q), k=10, ef=64, hops=128,
-                                n_seeds=128)
-print("large-batch recall@10:", recall_at_k(np.asarray(ids), ds.gt, 10))
+# 4. persist: versioned artifact = packed graph + config + fingerprint +
+#    jax-AOT-exported serving executables for every (regime, bucket) pair
+with tempfile.TemporaryDirectory() as td:
+    index.warmup()                       # compile the serving ladder once
+    index.save(f"{td}/tsdg-20k")
+
+    # 5. a "restarted process": load answers bitwise-identically with ZERO
+    #    compiles — the warmup sweep is restored from disk, not re-traced
+    loaded = Index.load(f"{td}/tsdg-20k")
+    ids2, _ = loaded.search(ds.Q)
+    s = loaded.stats
+    print(f"reloaded: identical={bool((ids == ids2).all())} "
+          f"compiles={s.compiles} aot_primed={s.aot_primed}")
+
+    # 6. serve concurrent callers through the micro-batching queue (QoS:
+    #    bulk submits >= max_batch take the bypass lane, never blocking
+    #    latency traffic)
+    with loaded.serve(max_wait_ms=2.0, max_batch=64) as mb:
+        futs = [mb.submit(q) for q in ds.Q[:32]]         # singles coalesce
+        bulk = mb.submit(ds.Q)                           # bypass lane
+        ids1, _ = futs[0].result()
+        print(f"queue: {mb.stats.snapshot()['n_dispatches']} dispatches, "
+              f"bypass={mb.stats.bypass}")

@@ -15,9 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ann import Index
 from repro.configs import get_arch, get_reduced
-from repro.core.diversify import build_tsdg
-from repro.core.search_small import small_batch_search
 from repro.data.recsys import CTRStream
 from repro.models import recsys as R
 from repro.models.module import init_params
@@ -48,19 +47,21 @@ top_exact = np.asarray(jax.lax.top_k(scores, 100)[1])
 t_exact = time.perf_counter() - t0
 print(f"brute force: {t_exact * 1e3:.1f} ms")
 
-# (b) TSDG index on inner-product metric
+# (b) TSDG index on inner-product metric, via the repro.ann facade
+# (small_t0=64 matches the old direct small_batch_search(t0=64) call; a
+# B=1 retrieval batch always takes the small regime)
 ann_cfg = dataclasses.replace(get_arch("tsdg-paper"), metric="ip",
-                              k_graph=24, max_degree=32)
+                              k_graph=24, max_degree=32, small_t0=64,
+                              small_hops=8)
 t0 = time.perf_counter()
-graph = build_tsdg(items_j, ann_cfg)
+index = Index.build(items_j, ann_cfg, k=100)
 print(f"TSDG build: {time.perf_counter() - t0:.1f} s "
-      f"(one-off, amortized over the query stream)")
+      f"(one-off, amortized over the query stream; "
+      f"index.save() persists it across restarts)")
 
 t0 = time.perf_counter()
-ids, dists = small_batch_search(items_j, graph, user_vec, k=100, t0=64,
-                                hops=8, metric="ip")
-ids.block_until_ready()
+ids, dists = index.search(user_vec)
 t_ann = time.perf_counter() - t0
-overlap = len(set(np.asarray(ids)[0].tolist()) & set(top_exact.tolist()))
-print(f"TSDG search: {t_ann * 1e3:.1f} ms (incl. compile), "
-      f"recall@100 vs exact: {overlap / 100:.2f}")
+overlap = len(set(ids[0].tolist()) & set(top_exact.tolist()))
+print(f"TSDG search ({index.regime(1)} regime): {t_ann * 1e3:.1f} ms "
+      f"(incl. compile), recall@100 vs exact: {overlap / 100:.2f}")

@@ -1,8 +1,11 @@
 #!/usr/bin/env bash
 # Quick CI tier: kernel-backend parity (including the gather-fused
-# scalar-prefetch DMA path, exercised in interpret mode), the fast test
-# suite, and smoke benchmarks (bucketed serving, an explicit
-# kernel_backend=xla serve run, and the fused-vs-gather hotpath rows).
+# scalar-prefetch DMA path, exercised in interpret mode), the facade
+# save/load round-trip tier, the fast test suite, and smoke benchmarks
+# (bucketed serving + AOT reload rows, an explicit kernel_backend=xla
+# serve run, the fused-vs-gather hotpath rows, and the facade
+# build->save->load->serve->query smoke through the launcher and
+# quickstart example).
 #
 # Excludes @slow tests and the multi-minute distributed subprocess tests
 # (those run in the full tier: `PYTHONPATH=src python -m pytest -q`).
@@ -14,15 +17,27 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== kernel backend + gather-fused parity (Pallas interpret vs XLA) =="
 python -m pytest -q tests/test_hotpath.py tests/test_search_dedup.py
 
+echo "== facade: save/load round-trip, AOT priming, QoS bypass =="
+python -m pytest -q tests/test_ann_facade.py
+
 echo "== quick test tier =="
 python -m pytest -q -m "not slow" --ignore=tests/test_distributed.py \
-    --ignore=tests/test_hotpath.py --ignore=tests/test_search_dedup.py
+    --ignore=tests/test_hotpath.py --ignore=tests/test_search_dedup.py \
+    --ignore=tests/test_ann_facade.py
 
-echo "== serving smoke bench =="
+echo "== serving smoke bench (incl. serve/aot_reload rows) =="
 REPRO_BENCH_QUICK=1 REPRO_BENCH_ONLY=serve python -m benchmarks.run
 
 echo "== hotpath micro bench (fused vs gather-then-block rows) =="
 REPRO_BENCH_QUICK=1 REPRO_BENCH_ONLY=hotpath python -m benchmarks.run
 
-echo "== kernel_backend=xla serving smoke =="
-python -m repro.launch.serve --n 4000 --d 16 --batches 6 --backend xla
+echo "== facade smoke: build -> save -> load -> serve -> query =="
+IXDIR="$(mktemp -d)/ix"
+python -m repro.launch.serve --n 4000 --d 16 --batches 4 --backend xla \
+    --save-index "$IXDIR"
+python -m repro.launch.serve --n 4000 --d 16 --batches 6 --backend xla \
+    --load-index "$IXDIR"
+rm -rf "$(dirname "$IXDIR")"
+
+echo "== examples smoke: quickstart (canonical facade demo) =="
+REPRO_QUICKSTART_N=4000 python examples/quickstart.py

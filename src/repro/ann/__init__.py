@@ -1,0 +1,52 @@
+"""`repro.ann` — the public facade of the ANN system (DESIGN.md §5).
+
+One object, four verbs, CAGRA-shaped::
+
+    from repro.ann import Index
+
+    index = Index.build(X, cfg, k=10)     # staged pipeline (register_stage)
+    ids, dists = index.search(Q)          # automatic regime dispatch
+    index.save(path)                      # versioned artifact + AOT cache
+    index = Index.load(path)              # no rebuild, no warmup sweep
+    mb = index.serve(max_wait_ms=2.0)     # micro-batching queue + QoS
+
+The modules behind it stay importable (``repro.core`` is the internal
+layer; the old entry points remain as thin deprecation shims), but new
+code should consume the system through this package.
+
+Submodule imports are lazy: :mod:`repro.serve.engine` imports
+``repro.ann.dispatch`` (the regime rule lives here now), so an eager
+``from repro.ann.index import Index`` at package-init time would cycle.
+"""
+from __future__ import annotations
+
+from repro.ann.dispatch import regime_for  # noqa: F401  (dependency-light)
+
+_LAZY = {
+    "Index": ("repro.ann.index", "Index"),
+    "build_graph": ("repro.ann.pipeline", "build_graph"),
+    "register_stage": ("repro.ann.pipeline", "register_stage"),
+    "build_stages": ("repro.ann.pipeline", "build_stages"),
+    "BuildState": ("repro.ann.pipeline", "BuildState"),
+    "ArtifactError": ("repro.ann.artifact", "ArtifactError"),
+    "FORMAT_VERSION": ("repro.ann.artifact", "FORMAT_VERSION"),
+    "save_index": ("repro.ann.artifact", "save_index"),
+    "load_index": ("repro.ann.artifact", "load_index"),
+}
+
+__all__ = ["regime_for", *_LAZY]
+
+
+def __getattr__(name: str):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+
+    return getattr(importlib.import_module(mod_name), attr)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

@@ -1,0 +1,242 @@
+"""Versioned on-disk index artifact with a persistent AOT serving cache.
+
+Layout (a directory)::
+
+    <path>/
+      manifest.json       magic, format version, ANNConfig, k, fingerprint,
+                          sha256 integrity hashes for every payload file
+      arrays.npz          X + packed graph (neighbors/lambdas/degrees[/hubs])
+      aot/<regime>_b<bucket>_k<k>.jaxexp
+                          jax.export-serialized serving modules, one per
+                          warmup-reachable (regime, bucket, k) cache entry
+
+The AOT blobs are exported with the database and graph as *runtime
+arguments* (never embedded constants), so each is a few tens of KB
+regardless of index size.  :func:`load_index` closes the deserialized
+modules back over the restored device arrays, compiles them once, and
+primes the engine's compile cache — a restarted process skips both the
+graph rebuild *and* the warmup compile sweep, and `ServeStats.compiles`
+stays 0 (ROADMAP "AOT cache persistence").
+
+Safety gates:
+
+* ``magic`` / ``format_version`` mismatch  -> :class:`ArtifactError`;
+* any sha256 mismatch (corruption)         -> :class:`ArtifactError`;
+* runtime fingerprint mismatch (different jax version, platform, device
+  kind, kernel backend, or gather mode) -> the index still loads, but the
+  AOT cache is *skipped* with a warning and the engine recompiles on
+  demand — stale executables are never served.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import warnings
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ANNConfig
+from repro.core.diversify import PackedGraph
+
+FORMAT_VERSION = 1
+MAGIC = "repro-ann-index"
+_MANIFEST = "manifest.json"
+_ARRAYS = "arrays.npz"
+# fields that must match for persisted executables to be trusted
+_FP_KEYS = ("jax", "platform", "device_kind", "kernel_backend",
+            "gather_fused")
+
+
+class ArtifactError(RuntimeError):
+    """Unusable index artifact (bad magic/version, corruption)."""
+
+
+def _sha256(path: Path) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def runtime_fingerprint(engine) -> dict:
+    """What the AOT executables were lowered against.  Compared on load;
+    any `_FP_KEYS` difference falls back to on-demand recompilation."""
+    dev = jax.devices()[0]
+    return {
+        "jax": jax.__version__,
+        "platform": jax.default_backend(),
+        "device_kind": dev.device_kind,
+        "n_devices": jax.device_count(),
+        "kernel_backend": engine.backend,
+        "gather_fused": engine.gather_fused,
+    }
+
+
+def _config_to_dict(cfg: ANNConfig) -> dict:
+    return dataclasses.asdict(cfg)
+
+
+def _config_from_dict(d: dict) -> ANNConfig:
+    """Rebuild ANNConfig from manifest JSON; tuple fields arrive as lists.
+    Unknown keys (written by a newer minor revision) are dropped with a
+    warning rather than rejected — the format version gates real breaks."""
+    fields = {f.name: f for f in dataclasses.fields(ANNConfig)}
+    kwargs, unknown = {}, []
+    for name, val in d.items():
+        if name not in fields:
+            unknown.append(name)
+            continue
+        kwargs[name] = tuple(val) if isinstance(val, list) else val
+    if unknown:
+        warnings.warn(f"index artifact config has unknown fields {unknown}; "
+                      "ignored", stacklevel=3)
+    return ANNConfig(**kwargs)
+
+
+# --------------------------------------------------------------------------
+# save
+# --------------------------------------------------------------------------
+
+def save_index(index, path, *, aot: bool = True) -> Path:
+    """Write ``index`` to ``path`` (a directory, created if needed).
+
+    With ``aot=True`` every warmup-reachable (regime, bucket, k) serving
+    executable is exported alongside the graph, so :func:`load_index` can
+    skip the warmup compile sweep entirely.  Entries whose export fails
+    (e.g. an interpret-mode Pallas backend that cannot serialize) are
+    skipped with a warning — the artifact stays loadable, load just
+    recompiles those on demand.
+    """
+    eng = index.engine
+    if eng.mesh is not None:
+        raise ArtifactError(
+            "mesh-sharded indexes cannot be saved yet (the sharded "
+            "sub-index layout has no serialized form)")
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+
+    g = eng.graph
+    arrays = {"X": np.asarray(eng.X), "neighbors": np.asarray(g.neighbors),
+              "lambdas": np.asarray(g.lambdas),
+              "degrees": np.asarray(g.degrees)}
+    if g.hubs is not None:
+        arrays["hubs"] = np.asarray(g.hubs)
+    np.savez(path / _ARRAYS, **arrays)
+
+    aot_entries = []
+    if aot:
+        (path / "aot").mkdir(exist_ok=True)
+        # warmup_probes() already dedups (regime, bucket); mesh rounding
+        # can't perturb the bucket here because mesh saves are rejected
+        for kind, bucket, _ in eng.warmup_probes():
+            try:
+                blob = eng.export_executable(kind, bucket, k=index.k)
+            except Exception as e:  # noqa: BLE001 — degrade, don't fail save
+                warnings.warn(
+                    f"AOT export skipped for {kind}/b{bucket}/k{index.k}: "
+                    f"{e!r} (load will recompile this entry)", stacklevel=2)
+                continue
+            fname = f"aot/{kind}_b{bucket}_k{index.k}.jaxexp"
+            (path / fname).write_bytes(blob)
+            aot_entries.append({
+                "kind": kind, "bucket": bucket, "k": index.k,
+                "file": fname, "sha256": _sha256(path / fname)})
+
+    manifest = {
+        "magic": MAGIC,
+        "format_version": FORMAT_VERSION,
+        "config": _config_to_dict(eng.cfg),
+        "k": index.k,
+        "fingerprint": runtime_fingerprint(eng),
+        "arrays": {"file": _ARRAYS, "sha256": _sha256(path / _ARRAYS)},
+        "aot": aot_entries,
+    }
+    (path / _MANIFEST).write_text(json.dumps(manifest, indent=2))
+    return path
+
+
+# --------------------------------------------------------------------------
+# load
+# --------------------------------------------------------------------------
+
+def _compile_exported(eng, exported, bucket: int):
+    """Close a deserialized module over the engine's device arrays and
+    compile it back into the single-donated-argument executable form the
+    compile cache expects."""
+    parts = eng.aot_operands()
+    Qspec = jax.ShapeDtypeStruct((bucket, eng.X.shape[1]), jnp.float32)
+    donate = (0,) if eng._donate else ()
+    fn = jax.jit(lambda Qb: exported.call(*parts, Qb),
+                 donate_argnums=donate)
+    return fn.lower(Qspec).compile()
+
+
+def load_index(index_cls, path):
+    """Restore an `Index` saved by :func:`save_index`.  See the module
+    docstring for the verification/fallback contract."""
+    path = Path(path)
+    mpath = path / _MANIFEST
+    if not mpath.is_file():
+        raise ArtifactError(f"{path} is not an index artifact "
+                            f"(missing {_MANIFEST})")
+    try:
+        manifest = json.loads(mpath.read_text())
+    except ValueError as e:
+        raise ArtifactError(f"corrupt manifest in {path}: {e}") from e
+    if manifest.get("magic") != MAGIC:
+        raise ArtifactError(f"{path} is not a {MAGIC} artifact")
+    ver = manifest.get("format_version")
+    if ver != FORMAT_VERSION:
+        raise ArtifactError(
+            f"unsupported index artifact version {ver!r} "
+            f"(this build reads version {FORMAT_VERSION})")
+
+    apath = path / manifest["arrays"]["file"]
+    if not apath.is_file():
+        raise ArtifactError(f"missing payload {apath.name}")
+    if _sha256(apath) != manifest["arrays"]["sha256"]:
+        raise ArtifactError(f"corrupt artifact: checksum mismatch in "
+                            f"{apath.name}")
+    with np.load(apath) as arrs:
+        X = arrs["X"]
+        graph = PackedGraph(
+            neighbors=jnp.asarray(arrs["neighbors"]),
+            lambdas=jnp.asarray(arrs["lambdas"]),
+            degrees=jnp.asarray(arrs["degrees"]),
+            hubs=jnp.asarray(arrs["hubs"]) if "hubs" in arrs else None)
+
+    cfg = _config_from_dict(manifest["config"])
+    index = index_cls(X, cfg, k=manifest["k"], graph=graph)
+
+    entries = manifest.get("aot", ())
+    if not entries:
+        return index
+    eng = index.engine
+    saved_fp = manifest.get("fingerprint", {})
+    now_fp = runtime_fingerprint(eng)
+    stale = [f for f in _FP_KEYS if saved_fp.get(f) != now_fp.get(f)]
+    if stale:
+        warnings.warn(
+            "AOT serving cache skipped — fingerprint mismatch on "
+            + ", ".join(f"{f} ({saved_fp.get(f)!r} -> {now_fp.get(f)!r})"
+                        for f in stale)
+            + "; the engine will recompile on demand", stacklevel=3)
+        return index
+
+    from jax import export as jax_export
+    for e in entries:
+        bpath = path / e["file"]
+        if not bpath.is_file():
+            raise ArtifactError(f"missing AOT payload {e['file']}")
+        if _sha256(bpath) != e["sha256"]:
+            raise ArtifactError(
+                f"corrupt artifact: checksum mismatch in {e['file']}")
+        exported = jax_export.deserialize(bpath.read_bytes())
+        exe = _compile_exported(eng, exported, e["bucket"])
+        eng.prime_executable(e["kind"], e["bucket"], e["k"], exe)
+    return index

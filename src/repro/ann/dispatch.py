@@ -1,0 +1,25 @@
+"""Batch-regime dispatch — the facade's ownership of the paper's §4 split.
+
+The paper fits an empirical division threshold ``(a·SMs + b) / d`` per GPU
+and routes each batch to the small- or large-batch procedure.  Our TPU
+analogue compares the batch's *search population* (``B·t0`` for the small
+procedure, which runs ``t0`` independent greedy searches per query) against
+the device's matmul occupancy target, ``cfg.small_batch_threshold`` (per DB
+shard).  This module is the single home of that rule: the serving engine,
+the :class:`repro.ann.Index` facade, and the benchmarks all call
+:func:`regime_for` so the threshold can never drift between layers.
+"""
+from __future__ import annotations
+
+
+def regime_for(cfg, batch: int) -> str:
+    """``"small"`` or ``"large"`` for a batch of ``batch`` queries.
+
+    Paper §4: small-batch search wins while the search population
+    ``batch * t0`` undershoots the device saturation point; past it the
+    best-first large-batch procedure amortizes better.
+    """
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    return ("small" if batch * cfg.small_t0
+            < cfg.small_batch_threshold * 4 else "large")

@@ -1,0 +1,149 @@
+"""`Index` — the single public object of the ANN system (DESIGN.md §5).
+
+The paper describes a *serving system*: a diversified graph built once and
+then searched under wildly varying batch regimes.  `Index` is that system's
+one handle — CAGRA-shaped (build / search / save / load, PAPERS.md) with the
+serving layers of this repo behind it:
+
+    from repro.ann import Index
+
+    index = Index.build(X, cfg, k=10)        # staged pipeline (pipeline.py)
+    ids, dists = index.search(Q)             # automatic regime dispatch
+    index.save("/models/tsdg-1m")            # graph + config + AOT cache
+    ...
+    index = Index.load("/models/tsdg-1m")    # restart: no rebuild, and the
+    ids, dists = index.search(Q)             #   warmup compile sweep is
+                                             #   skipped (primed executables)
+    with index.serve(max_wait_ms=2.0) as mb: # micro-batching queue + QoS
+        fut = mb.submit(q)
+
+Everything underneath — the build stages, the shape-bucketed compile cache,
+the kernel-backend seam, the micro-batcher — stays reachable for power
+users, but this facade is the supported surface.
+"""
+from __future__ import annotations
+
+from repro.ann.dispatch import regime_for
+from repro.ann.pipeline import build_graph
+from repro.configs.base import ANNConfig
+
+
+class Index:
+    """A built TSDG index plus its serving engine.
+
+    Construct with :meth:`build` (or :meth:`load`); the constructor accepts
+    a prebuilt :class:`~repro.core.diversify.PackedGraph` via ``graph=`` to
+    skip the pipeline (how :meth:`load` restores an artifact).  Pass
+    ``mesh=`` to build shard-local sub-indices over a device mesh
+    (DESIGN.md §6) behind the same ``search()`` API.
+    """
+
+    def __init__(self, X, cfg: ANNConfig | None = None, *, k: int = 10,
+                 graph=None, mesh=None, stages=None, tile: int = 2048):
+        from repro.serve.engine import ANNEngine
+
+        cfg = cfg or ANNConfig()
+        if mesh is None and graph is None:
+            graph = build_graph(X, cfg, stages=stages, tile=tile)
+        elif stages is not None:
+            raise ValueError("stages= only applies when the pipeline runs "
+                             "(not with graph= or mesh=)")
+        self.engine = ANNEngine(X, cfg, k=k, graph=graph, mesh=mesh)
+
+    @classmethod
+    def build(cls, X, cfg: ANNConfig | None = None, *, k: int = 10,
+              mesh=None, stages=None, tile: int = 2048) -> "Index":
+        """Run the staged build pipeline (``cfg.build_pipeline``, default
+        knn -> diversify -> bridges) and wrap the result in an `Index`.
+
+        ``stages`` overrides the pipeline per call; names resolve through
+        :func:`repro.ann.pipeline.register_stage`'s registry.
+        """
+        return cls(X, cfg, k=k, mesh=mesh, stages=stages, tile=tile)
+
+    # -- search / serve -----------------------------------------------------
+
+    def search(self, Q, *, k: int | None = None):
+        """Answer one batch: (ids [B, k], dists [B, k]) numpy arrays.
+
+        Dispatches to the paper's small- or large-batch procedure by the
+        §4 regime threshold (:func:`repro.ann.dispatch.regime_for`), pads
+        to the engine's shape-bucket ladder, and serves from the AOT
+        compile cache — bitwise-identical to calling the raw procedures.
+        """
+        return self.engine.query(Q, k=k)
+
+    def regime(self, batch: int) -> str:
+        """Which procedure a batch of this size takes ("small"/"large")."""
+        return regime_for(self.cfg, batch)
+
+    def warmup(self, k: int | None = None) -> int:
+        """Pre-compile every reachable (regime, bucket) executable; returns
+        the number of fresh compiles (0 after a fingerprint-matched
+        :meth:`load`)."""
+        return self.engine.warmup(k=k)
+
+    def serve(self, **qos):
+        """A running :class:`~repro.serve.queue.MicroBatcher` over this
+        index — the concurrent-caller serving front.
+
+        QoS knobs pass through: ``max_wait_ms`` (coalescing window),
+        ``max_batch`` (dispatch cap; submits at or above it take the
+        bypass lane instead of queueing behind latency traffic).
+        """
+        from repro.serve.queue import MicroBatcher
+
+        return MicroBatcher(self.engine, **qos)
+
+    # -- persistence --------------------------------------------------------
+
+    def save(self, path, *, aot: bool = True):
+        """Write the versioned index artifact: packed graph + database +
+        config + fingerprint (+ the AOT-exported serving executables unless
+        ``aot=False``).  See :mod:`repro.ann.artifact` for the format."""
+        from repro.ann.artifact import save_index
+
+        return save_index(self, path, aot=aot)
+
+    @classmethod
+    def load(cls, path) -> "Index":
+        """Restore a saved index: no rebuild, and — when the saved
+        device/jax fingerprint matches this process — no warmup compile
+        sweep either (the persisted executables are primed straight into
+        the serving cache).  On fingerprint mismatch the index still loads
+        and falls back to on-demand recompilation."""
+        from repro.ann.artifact import load_index
+
+        return load_index(cls, path)
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def X(self):
+        return self.engine.X
+
+    @property
+    def graph(self):
+        return self.engine.graph
+
+    @property
+    def cfg(self) -> ANNConfig:
+        return self.engine.cfg
+
+    @property
+    def k(self) -> int:
+        return self.engine.k
+
+    @property
+    def stats(self):
+        return self.engine.stats
+
+    @property
+    def backend(self) -> str:
+        return self.engine.backend
+
+    def __repr__(self) -> str:
+        g = self.graph
+        return (f"Index(n={g.n}, d={self.X.shape[1]}, "
+                f"max_degree={g.max_degree}, metric={self.cfg.metric!r}, "
+                f"backend={self.backend!r}, k={self.k})")

@@ -223,6 +223,10 @@ class ANNConfig:
     # VMEM budget; "on" forces the DMA path (the parity tests); "off" always
     # gathers at the XLA level (DESIGN.md §2)
     gather_fused: str = "auto"
+    # staged build pipeline run by repro.ann.Index.build — stage names
+    # resolve through repro.ann.pipeline.register_stage's registry, so
+    # third-party stages slot in by name (mirrors the kernel-backend seam)
+    build_pipeline: tuple = ("knn", "diversify", "bridges")
     # beyond-paper connectivity augmentation (0 = paper-faithful off)
     bridge_hubs: int = 256
     bridge_k: int = 8
@@ -249,6 +253,31 @@ class ANNConfig:
     queue_max_wait_ms: float = 2.0
     queue_max_batch: int = 512
     family: str = "ann"
+
+    def __post_init__(self):
+        """Fail fast on knob typos — a bad metric/backend string used to
+        surface as a KeyError deep inside kernel dispatch, long after the
+        (expensive) build had started."""
+        if self.metric not in ("l2", "ip", "cos"):
+            raise ValueError(
+                f"metric={self.metric!r} must be one of 'l2', 'ip', 'cos'")
+        if self.gather_fused not in ("auto", "on", "off"):
+            raise ValueError(
+                f"gather_fused={self.gather_fused!r} must be 'auto', "
+                "'on', or 'off'")
+        if self.kernel_backend not in ("auto", "pallas", "xla"):
+            # third-party backends are legal if registered; consult the
+            # registry lazily so importing configs stays jax-free
+            try:
+                from repro.core.hotpath import backends
+                known = backends()
+            except Exception:  # noqa: BLE001 — validation must not crash
+                known = ("pallas", "xla")
+            if self.kernel_backend not in known:
+                raise ValueError(
+                    f"kernel_backend={self.kernel_backend!r} not "
+                    f"registered; known: {('auto',) + tuple(known)} "
+                    "(repro.core.hotpath.register_backend adds more)")
 
 
 ArchConfig = Any  # union of the dataclasses above
@@ -277,7 +306,14 @@ def list_archs() -> list:
 def get_arch(arch_id: str):
     mod_name = arch_id.replace("-", "_")
     if mod_name not in _ARCH_MODULES:
-        raise KeyError(f"unknown arch {arch_id!r}; known: {list_archs()}")
+        import difflib
+
+        close = difflib.get_close_matches(
+            arch_id.replace("_", "-"), list_archs(), n=3, cutoff=0.5)
+        hint = f"; did you mean {' or '.join(map(repr, close))}?" \
+            if close else ""
+        raise KeyError(
+            f"unknown arch {arch_id!r}{hint}; known: {list_archs()}")
     import importlib
 
     mod = importlib.import_module(f"repro.configs.{mod_name}")

@@ -22,9 +22,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ANNConfig
 from repro.core import metrics as M
-from repro.core.diversify import PackedGraph, build_tsdg
-from repro.core.search_large import large_batch_search
-from repro.core.search_small import small_batch_search
+from repro.core.diversify import PackedGraph
+from repro.core.search_large import _large_batch_search
+from repro.core.search_small import _small_batch_search
 from repro.utils.compat import shard_map
 
 
@@ -48,7 +48,8 @@ def make_build_fn(mesh: Mesh, cfg: ANNConfig):
     d_ax = db_axes(mesh)
 
     def local_build(X_shard):
-        g = build_tsdg(X_shard, cfg)
+        from repro.ann.pipeline import build_graph
+        g = build_graph(X_shard, cfg)
         return g.neighbors, g.lambdas, g.degrees, \
             (g.hubs if g.hubs is not None else jnp.zeros((0,), jnp.int32))
 
@@ -102,14 +103,14 @@ def make_search_fn(mesh: Mesh, cfg: ANNConfig, *, kind: str = "large",
             # this model-column runs its slice of the t0 searches
             q_idx = jax.lax.axis_index(q_ax[0]) if q_ax else 0
             t0_local = max(1, cfg.small_t0 // max(1, n_q_shards))
-            ids, dist = small_batch_search(
+            ids, dist = _small_batch_search(
                 X_s, graph, Q_s, k=k, t0=t0_local, hops=cfg.small_hops,
                 hop_width=cfg.hop_width, n_seeds=cfg.n_seeds,
                 lambda_limit=10, metric=cfg.metric, unroll=unroll,
                 seed_offset=q_idx, backend=backend,
                 gather_fused=gather_fused)
         else:
-            ids, dist = large_batch_search(
+            ids, dist = _large_batch_search(
                 X_s, graph, Q_s, k=k, ef=cfg.large_ef, hops=cfg.large_hops,
                 lambda_limit=5, metric=cfg.metric,
                 n_seeds=getattr(cfg, "large_n_seeds", cfg.n_seeds),

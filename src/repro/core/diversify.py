@@ -280,37 +280,19 @@ def add_bridges(X, nbrs, lams, *, n_hubs: int, hub_k: int, metric: str,
 def build_tsdg(X, cfg, knn_ids=None, knn_dists=None, *,
                tile: int = 2048) -> PackedGraph:
     """Full paper pipeline: k-NN graph -> stage 1 -> reverse -> stage 2
-    (-> optional hub bridges)."""
-    from repro.core.knn_build import nn_descent
+    (-> optional hub bridges).
 
-    unroll = getattr(cfg, "unroll_scans", False)
-    backend = getattr(cfg, "kernel_backend", "auto")
-    gather_fused = getattr(cfg, "gather_fused", None)
-    X = M.preprocess(jnp.asarray(X), cfg.metric)
-    if knn_ids is None:
-        knn_ids, knn_dists = nn_descent(X, cfg.k_graph, metric=cfg.metric,
-                                        unroll=unroll, backend=backend,
-                                        gather_fused=gather_fused)
-    keep = relaxed_gd(X, knn_ids, knn_dists, alpha=cfg.alpha,
-                      metric=cfg.metric, tile=tile, unroll=unroll,
-                      backend=backend, gather_fused=gather_fused)
-    adj_ids, adj_d = append_reverse(X, knn_ids, knn_dists, keep,
-                                    rev_cap=cfg.k_graph, metric=cfg.metric,
-                                    backend=backend,
-                                    gather_fused=gather_fused)
-    nbrs, lams, degs = soft_gd(X, adj_ids, adj_d, lambda0=cfg.lambda0,
-                               max_degree=cfg.max_degree, metric=cfg.metric,
-                               tile=tile, unroll=unroll, backend=backend,
-                               gather_fused=gather_fused)
-    hubs = None
-    n_hubs = getattr(cfg, "bridge_hubs", 0)
-    if n_hubs:
-        n_hubs = min(n_hubs, X.shape[0] // 4)
-        hub_k = min(getattr(cfg, "bridge_k", 8), cfg.max_degree // 2)
-        nbrs, lams, hubs = add_bridges(X, nbrs, lams, n_hubs=n_hubs,
-                                       hub_k=hub_k, metric=cfg.metric)
-        degs = jnp.sum(nbrs < X.shape[0], axis=1).astype(jnp.int32)
-    return PackedGraph(neighbors=nbrs, lambdas=lams, degrees=degs, hubs=hubs)
+    Deprecated public seam — prefer ``repro.ann.Index.build`` (DESIGN.md
+    §5).  Thin shim over the staged build pipeline
+    (:func:`repro.ann.pipeline.build_graph`), which runs the same stages
+    with the same arguments; the produced graph is bit-identical.
+    """
+    from repro.ann.pipeline import build_graph
+    from repro.utils.deprecation import warn_once
+
+    warn_once("repro.core.diversify.build_tsdg", "repro.ann.Index.build")
+    return build_graph(X, cfg, tile=tile, knn_ids=knn_ids,
+                       knn_dists=knn_dists)
 
 
 def build_gd_baseline(X, cfg, knn_ids=None, knn_dists=None, *,

@@ -52,7 +52,7 @@ def _seg_merge(d3, i3, keep: int, backend: str):
                      "n_seeds", "m_seg", "seg", "mv_seg", "segv",
                      "push_all_seeds", "unroll", "gather_limit",
                      "exact_visited", "backend", "gather_fused"))
-def large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
+def _large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
                        ef: int = 64, hops: int = 128, lambda_limit: int = 5,
                        metric: str = "l2", n_seeds: int = 32,
                        m_seg: int = 8, seg: int = 32, mv_seg: int = 8,
@@ -240,3 +240,13 @@ def large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
     (R_ids, R_d, *_), _ = jax.lax.scan(step, state, None, length=hops,
                                        unroll=unroll)
     return R_ids[:, :k].astype(jnp.int32), R_d[:, :k]
+
+
+def large_batch_search(*args, **kwargs):
+    """Deprecated public seam — prefer ``repro.ann.Index.search`` (DESIGN.md
+    §5), which dispatches to this procedure automatically for large batches.
+    Thin shim over :func:`_large_batch_search`; identical results."""
+    from repro.utils.deprecation import warn_once
+    warn_once("repro.core.search_large.large_batch_search",
+              "repro.ann.Index.search")
+    return _large_batch_search(*args, **kwargs)

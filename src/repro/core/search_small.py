@@ -46,7 +46,7 @@ INF = jnp.float32(3.4e38)
     static_argnames=("k", "t0", "hops", "hop_width", "n_seeds",
                      "lambda_limit", "metric", "exact_merge", "width",
                      "unroll", "backend", "gather_fused"))
-def small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
+def _small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
                        t0: int = 32, hops: int = 6, hop_width: int = 32,
                        n_seeds: int = 32, lambda_limit: int = 10,
                        metric: str = "l2", exact_merge: bool = False,
@@ -197,3 +197,13 @@ def small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
     out_d, out_ids = HP.rank_merge(sd2, sid, keep=k,
                                    mask=~dup & (sid < N), backend=backend)
     return out_ids.astype(jnp.int32), out_d
+
+
+def small_batch_search(*args, **kwargs):
+    """Deprecated public seam — prefer ``repro.ann.Index.search`` (DESIGN.md
+    §5), which dispatches to this procedure automatically for small batches.
+    Thin shim over :func:`_small_batch_search`; identical results."""
+    from repro.utils.deprecation import warn_once
+    warn_once("repro.core.search_small.small_batch_search",
+              "repro.ann.Index.search")
+    return _small_batch_search(*args, **kwargs)

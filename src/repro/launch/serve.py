@@ -1,7 +1,15 @@
-"""ANN serving launcher — build a TSDG index and serve query batches.
+"""ANN serving launcher — build (or load) a TSDG index and serve batches.
 
   PYTHONPATH=src python -m repro.launch.serve [--n 20000 --d 32] \
-      [--data vectors.npy --queries queries.npy] [--batches 20] [--k 10]
+      [--data vectors.npy --queries queries.npy] [--batches 20] [--k 10] \
+      [--save-index DIR | --load-index DIR]
+
+Drives the :class:`repro.ann.Index` facade: staged build (or artifact
+load), automatic regime dispatch, and the persistent AOT serving cache —
+``--save-index`` after a run writes the versioned artifact,
+``--load-index`` on the next run skips both the rebuild and the warmup
+compile sweep (``aot_primed`` in the stats line shows the restored
+executables).
 
 With --data/--queries, serves real vectors; otherwise a synthetic clustered
 corpus with exact ground truth (recall is then reported per batch).
@@ -18,7 +26,9 @@ def main() -> None:
     ap.add_argument("--queries", help="npy [B, d] float32 queries")
     ap.add_argument("--n", type=int, default=20000)
     ap.add_argument("--d", type=int, default=32)
-    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--k", type=int, default=None,
+                    help="neighbors per query (default: 10, or the saved "
+                         "index's k with --load-index)")
     ap.add_argument("--batches", type=int, default=20)
     ap.add_argument("--metric", default="l2", choices=("l2", "ip", "cos"))
     ap.add_argument("--backend", default="auto",
@@ -29,22 +39,24 @@ def main() -> None:
                     choices=("auto", "on", "off"),
                     help="Pallas in-kernel neighbor gather (auto = DMA "
                          "path on real TPU, gather-then-block elsewhere)")
+    ap.add_argument("--save-index", metavar="DIR",
+                    help="write the versioned index artifact (graph + "
+                         "config + AOT serving cache) after serving")
+    ap.add_argument("--load-index", metavar="DIR",
+                    help="load a saved artifact instead of building "
+                         "(skips rebuild AND the warmup compile sweep)")
+    ap.add_argument("--warmup", action="store_true",
+                    help="pre-compile every reachable (regime, bucket) "
+                         "executable before serving")
     ap.add_argument("--paper-faithful", action="store_true",
                     help="disable every beyond-paper feature")
     args = ap.parse_args()
 
     import dataclasses
 
+    from repro.ann import Index
     from repro.configs import get_arch
     from repro.data.synthetic import make_clustered, recall_at_k
-    from repro.serve.engine import ANNEngine
-
-    cfg = dataclasses.replace(get_arch("tsdg-paper"), metric=args.metric,
-                              kernel_backend=args.backend,
-                              gather_fused=args.gather_fused)
-    if args.paper_faithful:
-        cfg = dataclasses.replace(cfg, bridge_hubs=0, large_n_seeds=32,
-                                  db_bf16=False, gather_limit=0)
 
     gt = None
     if args.data:
@@ -56,11 +68,42 @@ def main() -> None:
         X, Q, gt = ds.X, ds.Q, ds.gt
 
     t0 = time.perf_counter()
-    engine = ANNEngine(X, cfg, k=args.k)
-    print(f"[serve] index: N={X.shape[0]} d={X.shape[1]} "
-          f"avg_degree={engine.graph.avg_degree():.1f} "
-          f"built in {time.perf_counter() - t0:.1f}s "
-          f"(kernel backend: {engine.backend})")
+    if args.load_index:
+        # build-time knobs are baked into the artifact; flag any the
+        # caller tried to override instead of silently dropping them
+        ignored = [f"--{n.replace('_', '-')}" for n, default in
+                   (("metric", "l2"), ("backend", "auto"),
+                    ("gather_fused", "auto"), ("paper_faithful", False))
+                   if getattr(args, n) != default]
+        if ignored:
+            print(f"[serve] note: {' '.join(ignored)} ignored with "
+                  "--load-index (the artifact's saved config governs)")
+        index = Index.load(args.load_index)
+        print(f"[serve] index loaded from {args.load_index} in "
+              f"{time.perf_counter() - t0:.1f}s "
+              f"(aot_primed={index.stats.aot_primed}, no rebuild, "
+              f"no warmup sweep)")
+    else:
+        cfg = dataclasses.replace(get_arch("tsdg-paper"),
+                                  metric=args.metric,
+                                  kernel_backend=args.backend,
+                                  gather_fused=args.gather_fused)
+        if args.paper_faithful:
+            cfg = dataclasses.replace(cfg, bridge_hubs=0, large_n_seeds=32,
+                                      db_bf16=False, gather_limit=0)
+        index = Index.build(X, cfg, k=args.k if args.k is not None else 10)
+        print(f"[serve] index: N={X.shape[0]} d={X.shape[1]} "
+              f"avg_degree={index.graph.avg_degree():.1f} "
+              f"built in {time.perf_counter() - t0:.1f}s "
+              f"(kernel backend: {index.backend})")
+    # a --k differing from the saved index's k still works (the engine
+    # compiles that (regime, bucket, k) on demand, it just isn't primed)
+    k = args.k if args.k is not None else index.k
+    if args.warmup:
+        t0 = time.perf_counter()
+        n = index.warmup(k=k)
+        print(f"[serve] warmup: {n} compiles in "
+              f"{time.perf_counter() - t0:.1f}s")
 
     rng = np.random.default_rng(0)
     hits = total = 0
@@ -68,24 +111,30 @@ def main() -> None:
         B = int(rng.choice([1, 4, 16, 64, 256]))
         sel = rng.integers(0, len(Q), B)
         t1 = time.perf_counter()
-        ids, dists = engine.query(Q[sel])
+        ids, dists = index.search(Q[sel], k=k)
         dt = (time.perf_counter() - t1) * 1e3
         line = (f"[serve] batch {i:3d} B={B:4d} "
-                f"regime={engine.regime(B):5s} {dt:7.1f} ms")
+                f"regime={index.regime(B):5s} {dt:7.1f} ms")
         if gt is not None:
-            r = recall_at_k(ids, gt[sel], args.k)
+            r = recall_at_k(ids, gt[sel], k)
             hits += r * B
             total += B
-            line += f"  recall@{args.k}={r:.3f}"
+            line += f"  recall@{k}={r:.3f}"
         print(line, flush=True)
-    s = engine.stats
+    s = index.stats
     print(f"[serve] {s.n_queries} queries / {s.n_batches} batches "
           f"({s.small_batches} small, {s.large_batches} large), "
           f"{s.qps:.0f} QPS steady-state"
           + (f", weighted recall {hits / total:.3f}" if total else ""))
-    print(f"[serve] compiles={s.compiles} "
+    print(f"[serve] compiles={s.compiles} aot_primed={s.aot_primed} "
           f"bucket_hit_rate={s.bucket_hit_rate:.2f} "
           f"padded_queries={s.padded_queries}")
+    if args.save_index:
+        t0 = time.perf_counter()
+        index.save(args.save_index)
+        print(f"[serve] artifact written to {args.save_index} in "
+              f"{time.perf_counter() - t0:.1f}s — next run: "
+              f"--load-index {args.save_index}")
 
 
 if __name__ == "__main__":

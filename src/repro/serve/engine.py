@@ -25,6 +25,12 @@ Serving additions on top of the paper:
   compile and bucket-hit counters, and warmup (compile-triggering) batches
   excluded from steady-state QPS.
 
+This engine is the internal serving layer behind the :class:`repro.ann.Index`
+facade (DESIGN.md §5): ``Index.search`` dispatches through ``query()``,
+``Index.serve`` wires the engine to the micro-batching queue, and
+``Index.save``/``Index.load`` persist the compile cache across processes via
+:meth:`ANNEngine.export_executable` / :meth:`ANNEngine.prime_executable`.
+
 Thread-safety: ``query()`` may be called from many threads (the
 micro-batching queue in :mod:`repro.serve.queue` does); the compile cache
 and stats are lock-protected.
@@ -40,11 +46,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ann.dispatch import regime_for
+from repro.ann.pipeline import build_graph
 from repro.configs.base import ANNConfig
 from repro.core import hotpath
-from repro.core.diversify import PackedGraph, build_tsdg
-from repro.core.search_large import large_batch_search
-from repro.core.search_small import small_batch_search
+from repro.core.diversify import PackedGraph
+from repro.core.search_large import _large_batch_search
+from repro.core.search_small import _small_batch_search
 
 # small_batch_search's compiled-in ranking width (its `width` kwarg default):
 # the per-query candidate pool is t0 * width entries
@@ -97,6 +105,7 @@ class ServeStats:
     total_s: float = 0.0            # steady-state wall time (both regimes)
     steady_queries: int = 0
     compiles: int = 0
+    aot_primed: int = 0             # executables restored from a saved index
     bucket_hits: int = 0            # calls served by a cached executable
     bucket_misses: int = 0          # calls that had to compile
     padded_queries: int = 0         # wasted rows added by bucketing
@@ -120,6 +129,7 @@ class ServeStats:
             "small_batches": self.small_batches,
             "large_batches": self.large_batches,
             "qps": self.qps, "compiles": self.compiles,
+            "aot_primed": self.aot_primed,
             "bucket_hit_rate": self.bucket_hit_rate,
             "padded_queries": self.padded_queries,
         }
@@ -162,7 +172,7 @@ class ANNEngine:
         if mesh is None:
             self.X = jnp.asarray(X)
             self.graph = graph if graph is not None \
-                else build_tsdg(self.X, self.cfg)
+                else build_graph(self.X, self.cfg)
         else:
             if graph is not None:
                 raise ValueError("mesh mode builds its own sharded graph; "
@@ -188,9 +198,10 @@ class ANNEngine:
     # -- regime & buckets ---------------------------------------------------
 
     def regime(self, batch: int) -> str:
-        """Paper §4: the division threshold between small and large."""
-        return ("small" if batch * self.cfg.small_t0
-                < self.cfg.small_batch_threshold * 4 else "large")
+        """Paper §4's division threshold — owned by the facade
+        (:func:`repro.ann.dispatch.regime_for`) so engine, ``Index``, and
+        benchmarks can never disagree on the split."""
+        return regime_for(self.cfg, batch)
 
     def bucket_for(self, batch: int) -> int:
         """Smallest ladder bucket >= batch; beyond the ladder, the next
@@ -239,7 +250,7 @@ class ANNEngine:
                           lambda_limit=10, metric=cfg.metric,
                           backend=self.backend,
                           gather_fused=self.gather_fused)
-            return small_batch_search, (self.X, self.graph, Q), kwargs
+            return _small_batch_search, (self.X, self.graph, Q), kwargs
         kwargs = dict(k=k, ef=cfg.large_ef, hops=cfg.large_hops,
                       lambda_limit=5, metric=cfg.metric,
                       n_seeds=getattr(cfg, "large_n_seeds", cfg.n_seeds),
@@ -247,7 +258,7 @@ class ANNEngine:
                       mv_seg=cfg.visited_segments, delta=cfg.delta,
                       backend=self.backend,
                       gather_fused=self.gather_fused)
-        return large_batch_search, (self.X, self.graph, Q), kwargs
+        return _large_batch_search, (self.X, self.graph, Q), kwargs
 
     def _get_executable(self, kind: str, bucket: int, k: int, Qpad):
         """Cached AOT executable for (regime, bucket, k, backend,
@@ -326,21 +337,92 @@ class ANNEngine:
         # padded rows are discarded before any caller-visible merge
         return np.asarray(ids[:B]), np.asarray(dists[:B])
 
-    def warmup(self, k: int | None = None) -> int:
-        """Pre-compile every reachable (regime, ladder bucket, k) pair so
-        the first real request is steady-state.  A bucket can be reached by
-        both regimes when the regime boundary falls inside its range, so
-        each bucket is probed at its smallest and largest mapped batch.
-        Returns the number of fresh compiles."""
-        before = self.stats.compiles
-        d = self.X.shape[1]
-        done = set()
-        prev = 0
+    def warmup_probes(self) -> list:
+        """``[(regime, bucket, probe_batch)]`` covering every (regime,
+        ladder bucket) pair a real request can reach.  A bucket can be
+        reached by both regimes when the regime boundary falls inside its
+        range, so each bucket is probed at its smallest and largest mapped
+        batch.  This enumeration is shared by :meth:`warmup` and the
+        facade's AOT artifact export (``repro.ann.artifact``), so a saved
+        index persists exactly the executables warmup would compile."""
+        probes, done, prev = [], set(), 0
         for b in self.buckets or (1,):
             for probe in (prev + 1, b):
                 pair = (self.regime(probe), b)
                 if pair not in done:
                     done.add(pair)
-                    self.query(np.zeros((probe, d), np.float32), k=k)
+                    probes.append((pair[0], b, probe))
             prev = b
+        return probes
+
+    def warmup(self, k: int | None = None) -> int:
+        """Pre-compile every reachable (regime, ladder bucket, k) pair so
+        the first real request is steady-state.  Returns the number of
+        fresh compiles (0 when a loaded index primed them all)."""
+        before = self.stats.compiles
+        d = self.X.shape[1]
+        for _, _, probe in self.warmup_probes():
+            self.query(np.zeros((probe, d), np.float32), k=k)
         return self.stats.compiles - before
+
+    # -- AOT persistence (repro.ann facade: Index.save / Index.load) --------
+
+    def export_executable(self, kind: str, bucket: int,
+                          k: int | None = None) -> bytes:
+        """Serialize one (regime, bucket, k) serving computation with
+        ``jax.export`` — the persistent form of a compile-cache entry.
+
+        The database and packed graph are *arguments* of the exported
+        module (not embedded constants), so blobs stay graph-independent
+        small and one artifact can hold many entries.  Loading closes the
+        module back over the device-resident arrays and re-wraps it in the
+        donated single-argument convention (:mod:`repro.ann.artifact`).
+        Bitwise contract: the exported module is lowered from the same
+        trace `_get_executable` compiles, so a primed executable answers
+        identically to a locally-compiled one.
+        """
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "mesh-sharded engines cannot export executables yet")
+        k = self._validate_k(k, kind)
+        from jax import export as jax_export
+        Qspec = jax.ShapeDtypeStruct((bucket, self.X.shape[1]), jnp.float32)
+        fn, _, kwargs = self._search_args(kind, Qspec, k)
+        # flat array args (jax.export cannot serialize the PackedGraph
+        # pytree type); aot_operands() is the shared flattening so the
+        # loader feeds arguments in exactly this order
+        parts = self.aot_operands()
+        has_hubs = self.graph.hubs is not None
+
+        def _call(*args):
+            Xa, nbrs, lams, degs = args[:4]
+            g = PackedGraph(neighbors=nbrs, lambdas=lams, degrees=degs,
+                            hubs=args[4] if has_hubs else None)
+            return fn(Xa, g, args[-1], **kwargs)
+
+        specs = tuple(jax.ShapeDtypeStruct(a.shape, a.dtype) for a in parts)
+        exported = jax_export.export(jax.jit(_call))(*specs, Qspec)
+        return bytes(exported.serialize())
+
+    def aot_operands(self) -> tuple:
+        """The exported modules' leading runtime arguments, in order:
+        (X, neighbors, lambdas, degrees[, hubs]) — the padded query batch
+        is appended last by the caller."""
+        g = self.graph
+        parts = (self.X, g.neighbors, g.lambdas, g.degrees)
+        return parts + ((g.hubs,) if g.hubs is not None else ())
+
+    def prime_executable(self, kind: str, bucket: int, k: int,
+                         call) -> None:
+        """Install a restored executable into the compile cache.
+
+        ``call`` must accept the bucket-padded query batch and return
+        (ids, dists) — the same convention `_get_executable` compiles.
+        Primed entries count as bucket *hits* (no compile is recorded):
+        a loaded index serves its first request steady-state.
+        """
+        key = (kind, bucket, k, self.backend, self.gather_fused)
+        with self._lock:
+            if key not in self._compiled:
+                self._compiled[key] = call
+                self.stats.aot_primed += 1

@@ -46,17 +46,21 @@ class BatcherStats:
     n_requests: int = 0
     n_queries: int = 0
     n_dispatches: int = 0
+    bypass: int = 0                 # dispatches that took the QoS bypass lane
     # recent dispatch sizes only (bounded; the means use the counters)
     dispatch_sizes: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=8192))
     _lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False)
 
-    def record_dispatch(self, n_requests: int, n_queries: int) -> None:
+    def record_dispatch(self, n_requests: int, n_queries: int, *,
+                        bypass: bool = False) -> None:
         with self._lock:
             self.n_requests += n_requests
             self.n_queries += n_queries
             self.n_dispatches += 1
+            if bypass:
+                self.bypass += 1
             self.dispatch_sizes.append(n_queries)
 
     @property
@@ -71,6 +75,7 @@ class BatcherStats:
                 "n_requests": self.n_requests,
                 "n_queries": self.n_queries,
                 "n_dispatches": self.n_dispatches,
+                "bypass": self.bypass,
                 "mean_coalesced":
                     self.n_queries / max(self.n_dispatches, 1),
                 "dispatch_sizes": tuple(self.dispatch_sizes),
@@ -84,12 +89,26 @@ class MicroBatcher:
     compiled shapes); a `k` change flushes the in-flight group.  Errors from
     the engine propagate to every future of the failed dispatch.
 
+    **QoS bypass lane** — a submit whose batch is already ``>= max_batch``
+    gains nothing from coalescing (it fills a dispatch by itself) but, in
+    the FIFO queue, would head-of-line block every latency-sensitive single
+    behind a multi-second bulk search.  Such requests skip the queue
+    entirely: they dispatch immediately on a dedicated thread while the
+    FIFO lane keeps draining interactive traffic (the engine's compile
+    cache and stats are thread-safe).  Counted in ``stats.bypass``.
+
+    At most ``MAX_BYPASS_LANES`` bypass dispatches run concurrently; bulk
+    submits beyond that fall back to the FIFO queue (bounded threads and
+    bounded resident batches under bursty bulk traffic).
+
     ``close(drain=True)`` (the default, also the context-manager exit)
     serves everything already enqueued — including submits that raced the
     shutdown sentinel — before returning; ``drain=False`` fails pending
     futures instead.  ``stats`` is safe to read from any thread; use
     ``stats.snapshot()`` for a consistent multi-field view.
     """
+
+    MAX_BYPASS_LANES = 8
 
     def __init__(self, engine, *, max_wait_ms: float | None = None,
                  max_batch: int | None = None):
@@ -104,6 +123,7 @@ class MicroBatcher:
         self.stats = BatcherStats()
         self._q: _queue.Queue = _queue.Queue()
         self._carry: _Request | None = None
+        self._bypass_threads: list = []
         self._closed = False
         # makes submit's closed-check + enqueue atomic against close()
         # setting the flag: every accepted request is enqueued BEFORE the
@@ -132,10 +152,29 @@ class MicroBatcher:
             # would be concatenated with in the dispatcher
             raise ValueError(f"Q must be [{d}] or [b, {d}], got {Q.shape}")
         fut: Future = Future()
+        req = _Request(Q=Q, k=k, single=single, future=fut)
         with self._submit_lock:
             if self._closed:
                 raise RuntimeError("MicroBatcher is closed")
-            self._q.put(_Request(Q=Q, k=k, single=single, future=fut))
+            self._bypass_threads = [x for x in self._bypass_threads
+                                    if x.is_alive()]
+            if (Q.shape[0] >= self.max_batch
+                    and len(self._bypass_threads) < self.MAX_BYPASS_LANES):
+                # QoS bypass lane: a full-dispatch bulk batch skips the
+                # FIFO coalescing wait so it can't head-of-line block
+                # latency traffic; served on its own thread immediately.
+                # The lane count is capped — a burst of bulk submits past
+                # the cap degrades gracefully to the FIFO queue instead of
+                # spawning one thread (and one resident concatenated
+                # batch) per request.
+                t = threading.Thread(
+                    target=self._serve_group, args=([req],),
+                    kwargs={"bypass": True}, daemon=True,
+                    name="repro-microbatcher-bypass")
+                self._bypass_threads.append(t)
+                t.start()
+            else:
+                self._q.put(req)
         return fut
 
     def close(self, *, drain: bool = True) -> None:
@@ -172,6 +211,8 @@ class MicroBatcher:
         if not drain:
             for req in leftovers:
                 req.future.set_exception(RuntimeError("MicroBatcher closed"))
+            for t in self._bypass_threads:  # already-dispatched bulk work
+                t.join()
             return
         while leftovers:
             group = [leftovers.pop(0)]
@@ -181,6 +222,12 @@ class MicroBatcher:
                 total += leftovers[0].Q.shape[0]
                 group.append(leftovers.pop(0))
             self._serve_group(group)
+        # bypass-lane dispatches run on their own threads; a close() must
+        # not return while their futures are still unresolved (unbounded
+        # join: killing a daemon thread mid-query would leave a future
+        # that never resolves, which is strictly worse than waiting)
+        for t in self._bypass_threads:
+            t.join()
 
     def __enter__(self):
         return self
@@ -221,10 +268,10 @@ class MicroBatcher:
             total += nxt.Q.shape[0]
         return group
 
-    def _serve_group(self, group: list) -> None:
+    def _serve_group(self, group: list, *, bypass: bool = False) -> None:
         """One coalesced dispatch: concat, query, slice results back out."""
         Q = np.concatenate([r.Q for r in group], axis=0)
-        self.stats.record_dispatch(len(group), Q.shape[0])
+        self.stats.record_dispatch(len(group), Q.shape[0], bypass=bypass)
         try:
             ids, dists = self.engine.query(Q, k=group[0].k)
         except Exception as e:  # noqa: BLE001 — deliver, don't die

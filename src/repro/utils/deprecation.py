@@ -1,0 +1,22 @@
+"""Warn-once deprecation helper for the pre-facade entry points.
+
+The old public seams (``build_tsdg``, the two ``*_batch_search`` functions)
+keep working as thin shims over the internal layer, but steer callers to
+the :mod:`repro.ann` facade (DESIGN.md §5).  Each seam warns at most once
+per process so hot loops and test suites are not flooded.
+"""
+from __future__ import annotations
+
+import warnings
+
+_seen: set = set()
+
+
+def warn_once(old: str, new: str) -> None:
+    if old in _seen:
+        return
+    _seen.add(old)
+    warnings.warn(
+        f"{old} is a deprecated entry point; use {new} (DESIGN.md §5). "
+        "It remains a thin shim over the same internal implementation.",
+        DeprecationWarning, stacklevel=3)

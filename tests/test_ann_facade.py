@@ -1,0 +1,418 @@
+"""repro.ann facade: build pipeline, regime dispatch, save/load artifact
+(bitwise round-trips, corruption/version rejection, AOT fingerprint
+fallback), queue QoS bypass lane, config validation, arch suggestions."""
+import dataclasses
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.ann import ArtifactError, Index, build_graph, regime_for
+from repro.ann.pipeline import BuildState, build_stages, register_stage
+from repro.configs import ANNConfig, get_arch
+from repro.data.synthetic import make_clustered, recall_at_k
+from repro.serve.queue import MicroBatcher
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_clustered(n=3000, d=16, n_queries=64, n_clusters=24,
+                          noise=0.6, seed=0)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return dataclasses.replace(get_arch("tsdg-paper"), k_graph=12,
+                               max_degree=16, lambda0=8, bridge_hubs=32,
+                               bridge_k=8, large_ef=48, large_hops=64,
+                               serve_buckets=(8, 32, 128))
+
+
+@pytest.fixture(scope="module")
+def index(ds, cfg):
+    return Index.build(ds.X, cfg, k=10)
+
+
+def _bitwise_equal(a, b):
+    ids_eq = bool(np.array_equal(a[0], b[0]))
+    d_eq = bool(np.array_equal(np.asarray(a[1]).view(np.uint32),
+                               np.asarray(b[1]).view(np.uint32)))
+    return ids_eq and d_eq
+
+
+# ----------------------------------------------------------------------
+# build pipeline
+# ----------------------------------------------------------------------
+
+def test_build_matches_legacy_build_tsdg(ds, cfg, index):
+    """The staged pipeline IS the old build: bit-identical packed graph."""
+    from repro.core.diversify import build_tsdg
+
+    g_old = build_tsdg(ds.X, cfg)
+    g_new = index.graph
+    np.testing.assert_array_equal(np.asarray(g_old.neighbors),
+                                  np.asarray(g_new.neighbors))
+    np.testing.assert_array_equal(np.asarray(g_old.lambdas),
+                                  np.asarray(g_new.lambdas))
+    np.testing.assert_array_equal(np.asarray(g_old.degrees),
+                                  np.asarray(g_new.degrees))
+    np.testing.assert_array_equal(np.asarray(g_old.hubs),
+                                  np.asarray(g_new.hubs))
+
+
+def test_default_stages_registered():
+    assert {"knn", "diversify", "bridges"} <= set(build_stages())
+
+
+def test_register_stage_runs_in_pipeline(ds, cfg):
+    seen = []
+
+    @register_stage("test_probe")
+    def _probe(state: BuildState) -> None:
+        seen.append(state.neighbors is not None)
+
+    try:
+        g = build_graph(ds.X, cfg,
+                        stages=("knn", "diversify", "bridges", "test_probe"))
+        assert seen == [True]          # ran, after the graph existed
+        assert g.neighbors.shape == (ds.X.shape[0], cfg.max_degree)
+    finally:
+        from repro.ann import pipeline
+        pipeline._STAGES.pop("test_probe", None)
+
+
+def test_unknown_stage_suggests_close_match(ds, cfg):
+    with pytest.raises(KeyError, match="diversify"):
+        build_graph(ds.X, cfg, stages=("knn", "diversfy"))
+
+
+def test_pipeline_without_graph_stage_rejected(ds, cfg):
+    with pytest.raises(ValueError, match="no graph"):
+        build_graph(ds.X, cfg, stages=("knn",))
+
+
+def test_stages_with_prebuilt_graph_rejected(ds, cfg, index):
+    with pytest.raises(ValueError, match="stages"):
+        Index(ds.X, cfg, graph=index.graph, stages=("knn", "diversify"))
+
+
+# ----------------------------------------------------------------------
+# search + regime dispatch
+# ----------------------------------------------------------------------
+
+def test_search_dispatches_both_regimes(ds, cfg, index):
+    small_before = index.stats.small_batches
+    large_before = index.stats.large_batches
+    index.search(ds.Q[:2])
+    index.search(ds.Q)
+    assert index.regime(2) == "small" and index.regime(64) == "large"
+    assert index.stats.small_batches == small_before + 1
+    assert index.stats.large_batches == large_before + 1
+
+
+def test_regime_rule_shared_with_engine(cfg, index):
+    for b in (1, 7, 16, 17, 64, 300):
+        assert index.regime(b) == index.engine.regime(b) \
+            == regime_for(cfg, b)
+
+
+def test_search_recall(ds, index):
+    ids, _ = index.search(ds.Q)
+    assert recall_at_k(ids, ds.gt, 10) > 0.85
+
+
+def test_facade_matches_raw_procedure_bitwise(ds, cfg, index):
+    """Index.search == calling the (deprecated shim) procedure directly."""
+    from repro.core.search_small import small_batch_search
+
+    B = 8                     # == bucket: no padding
+    got = index.search(ds.Q[:B])
+    raw = small_batch_search(
+        index.X, index.graph, np.asarray(ds.Q[:B]), k=10, t0=cfg.small_t0,
+        hops=cfg.small_hops, hop_width=cfg.hop_width, n_seeds=cfg.n_seeds,
+        lambda_limit=10, metric=cfg.metric, backend=index.backend,
+        gather_fused=index.engine.gather_fused)
+    assert _bitwise_equal(got, (np.asarray(raw[0]), np.asarray(raw[1])))
+
+
+# ----------------------------------------------------------------------
+# save / load artifact
+# ----------------------------------------------------------------------
+
+def test_save_load_bitwise_with_zero_compiles(ds, cfg, index, tmp_path):
+    """The acceptance criterion: a loaded index answers bitwise-identically
+    with ZERO new compiles — the warmup sweep is restored from disk."""
+    index.warmup()
+    ref_small = index.search(ds.Q[:5])
+    ref_large = index.search(ds.Q)
+    index.save(tmp_path / "ix")
+
+    loaded = Index.load(tmp_path / "ix")
+    assert loaded.stats.aot_primed > 0
+    got_small = loaded.search(ds.Q[:5])
+    got_large = loaded.search(ds.Q)
+    assert _bitwise_equal(ref_small, got_small)
+    assert _bitwise_equal(ref_large, got_large)
+    assert loaded.stats.compiles == 0          # nothing compiled, ever
+    assert loaded.warmup() == 0                # sweep fully pre-primed
+    assert loaded.stats.compiles == 0
+
+
+def test_save_load_restores_config_and_graph(ds, cfg, index, tmp_path):
+    index.save(tmp_path / "ix", aot=False)
+    loaded = Index.load(tmp_path / "ix")
+    assert loaded.cfg == index.cfg
+    assert loaded.k == index.k
+    np.testing.assert_array_equal(np.asarray(loaded.X), np.asarray(index.X))
+    np.testing.assert_array_equal(np.asarray(loaded.graph.neighbors),
+                                  np.asarray(index.graph.neighbors))
+    assert loaded.stats.aot_primed == 0        # aot=False wrote no blobs
+
+
+def test_load_rejects_non_artifact(tmp_path):
+    with pytest.raises(ArtifactError, match="manifest"):
+        Index.load(tmp_path / "nowhere")
+
+
+def test_load_rejects_version_mismatch(ds, cfg, index, tmp_path):
+    index.save(tmp_path / "ix", aot=False)
+    mpath = tmp_path / "ix" / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    manifest["format_version"] = 999
+    mpath.write_text(json.dumps(manifest))
+    with pytest.raises(ArtifactError, match="version"):
+        Index.load(tmp_path / "ix")
+
+
+def test_load_rejects_wrong_magic(ds, cfg, index, tmp_path):
+    index.save(tmp_path / "ix", aot=False)
+    mpath = tmp_path / "ix" / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    manifest["magic"] = "something-else"
+    mpath.write_text(json.dumps(manifest))
+    with pytest.raises(ArtifactError):
+        Index.load(tmp_path / "ix")
+
+
+def test_load_rejects_corrupt_arrays(ds, cfg, index, tmp_path):
+    index.save(tmp_path / "ix", aot=False)
+    apath = tmp_path / "ix" / "arrays.npz"
+    blob = bytearray(apath.read_bytes())
+    blob[len(blob) // 2] ^= 0xFF
+    apath.write_bytes(bytes(blob))
+    with pytest.raises(ArtifactError, match="checksum"):
+        Index.load(tmp_path / "ix")
+
+
+def test_load_rejects_corrupt_aot_blob(ds, cfg, index, tmp_path):
+    index.warmup()
+    index.save(tmp_path / "ix")
+    blobs = sorted((tmp_path / "ix" / "aot").glob("*.jaxexp"))
+    assert blobs
+    raw = bytearray(blobs[0].read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    blobs[0].write_bytes(bytes(raw))
+    with pytest.raises(ArtifactError, match="checksum"):
+        Index.load(tmp_path / "ix")
+
+
+def test_fingerprint_mismatch_falls_back_to_recompile(ds, cfg, index,
+                                                      tmp_path):
+    """Stale executables are never served: a foreign fingerprint loads the
+    index fine but skips the AOT cache, recompiling on demand with
+    identical results."""
+    index.warmup()
+    ref = index.search(ds.Q[:5])
+    index.save(tmp_path / "ix")
+    mpath = tmp_path / "ix" / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    manifest["fingerprint"]["jax"] = "0.0.0-other"
+    mpath.write_text(json.dumps(manifest))
+
+    with pytest.warns(UserWarning, match="fingerprint mismatch"):
+        loaded = Index.load(tmp_path / "ix")
+    assert loaded.stats.aot_primed == 0
+    got = loaded.search(ds.Q[:5])
+    assert _bitwise_equal(ref, got)
+    assert loaded.stats.compiles == 1          # recompiled, not primed
+
+
+def test_mesh_index_save_rejected(ds, cfg):
+    import jax
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    idx = Index.build(ds.X, dataclasses.replace(cfg, large_hops=24),
+                      k=10, mesh=mesh)
+    ids, _ = idx.search(ds.Q[:3])      # mesh serving works via the facade
+    assert ids.shape == (3, 10)
+    with pytest.raises(ArtifactError, match="mesh"):
+        idx.save("/tmp/never-written")
+
+
+# ----------------------------------------------------------------------
+# deprecation shims
+# ----------------------------------------------------------------------
+
+def test_old_entry_points_warn_once_and_match():
+    from repro.core import diversify, search_large, search_small
+    from repro.utils import deprecation
+
+    ds = make_clustered(n=400, d=8, n_queries=4, n_clusters=8, noise=0.5,
+                        seed=1)
+    cfg = dataclasses.replace(get_arch("tsdg-paper"), k_graph=8,
+                              max_degree=8, bridge_hubs=0)
+    deprecation._seen.clear()
+    with pytest.warns(DeprecationWarning, match="Index.build"):
+        g = diversify.build_tsdg(ds.X, cfg)
+    with pytest.warns(DeprecationWarning, match="Index.search"):
+        out = search_small.small_batch_search(
+            np.asarray(ds.X, np.float32), g, ds.Q, k=5, t0=4, hops=3)
+    with pytest.warns(DeprecationWarning, match="Index.search"):
+        search_large.large_batch_search(
+            np.asarray(ds.X, np.float32), g, ds.Q, k=5, ef=16, hops=8)
+    ref = search_small._small_batch_search(
+        np.asarray(ds.X, np.float32), g, ds.Q, k=5, t0=4, hops=3)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(ref[0]))
+    # second calls: silent (warn-once)
+    import warnings as _w
+    with _w.catch_warnings(record=True) as caught:
+        _w.simplefilter("always")
+        diversify.build_tsdg(ds.X, cfg)
+        search_small.small_batch_search(
+            np.asarray(ds.X, np.float32), g, ds.Q, k=5, t0=4, hops=3)
+        search_large.large_batch_search(
+            np.asarray(ds.X, np.float32), g, ds.Q, k=5, ef=16, hops=8)
+    assert not [w for w in caught
+                if issubclass(w.category, DeprecationWarning)
+                and "deprecated entry point" in str(w.message)]
+
+
+# ----------------------------------------------------------------------
+# queue QoS bypass lane
+# ----------------------------------------------------------------------
+
+class _SlowStubEngine:
+    """Stands in for ANNEngine: records dispatches, configurable delay."""
+
+    def __init__(self, d=4, delay_s=0.0):
+        self.cfg = ANNConfig(serve_buckets=(), queue_max_wait_ms=1e3,
+                             queue_max_batch=8)
+        self.X = np.zeros((16, d), np.float32)
+        self.delay_s = delay_s
+        self.calls = []
+        self._lock = threading.Lock()
+
+    def query(self, Q, *, k=None):
+        with self._lock:
+            self.calls.append(Q.shape[0])
+        if self.delay_s and Q.shape[0] >= 8:   # only bulk work is slow
+            time.sleep(self.delay_s)
+        B = Q.shape[0]
+        kk = k or 5
+        return (np.zeros((B, kk), np.int32), np.zeros((B, kk), np.float32))
+
+
+def test_bypass_lane_skips_coalescing_wait():
+    """A >= max_batch submit must resolve long before the FIFO lane's
+    coalescing window closes, and must be counted in stats.bypass."""
+    eng = _SlowStubEngine()
+    mb = MicroBatcher(eng, max_wait_ms=60_000.0, max_batch=8)
+    try:
+        # occupy the FIFO lane: a single that will wait for co-riders
+        f_small = mb.submit(np.zeros((4,), np.float32))
+        t0 = time.perf_counter()
+        f_bulk = mb.submit(np.zeros((8, 4), np.float32))   # == max_batch
+        f_bulk.result(timeout=10)
+        assert time.perf_counter() - t0 < 5           # not the 60s window
+        assert mb.stats.bypass == 1
+        assert not f_small.done()                     # still coalescing
+    finally:
+        mb.close()
+    assert f_small.result(timeout=1)[0].shape == (5,)  # drained on close
+    snap = mb.stats.snapshot()
+    assert snap["bypass"] == 1
+    assert snap["n_requests"] == 2
+
+
+def test_bypass_does_not_block_dispatcher():
+    """While a slow bulk bypass runs, latency traffic keeps flowing."""
+    eng = _SlowStubEngine(delay_s=1.0)
+    with MicroBatcher(eng, max_wait_ms=1.0, max_batch=8) as mb:
+        f_bulk = mb.submit(np.zeros((32, 4), np.float32))
+        t0 = time.perf_counter()
+        f_fast = mb.submit(np.zeros((4,), np.float32))
+        f_fast.result(timeout=10)
+        fast_latency = time.perf_counter() - t0
+        f_bulk.result(timeout=10)
+    assert fast_latency < 0.9      # did not queue behind the 1s bulk job
+    assert mb.stats.bypass == 1
+
+
+def test_bypass_rejected_after_close():
+    eng = _SlowStubEngine()
+    mb = MicroBatcher(eng, max_wait_ms=1.0, max_batch=4)
+    mb.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        mb.submit(np.zeros((4, 4), np.float32))
+
+
+def test_close_joins_inflight_bypass():
+    eng = _SlowStubEngine(delay_s=0.5)
+    mb = MicroBatcher(eng, max_wait_ms=1.0, max_batch=4)
+    fut = mb.submit(np.zeros((4, 4), np.float32))
+    mb.close()                                  # must wait for the thread
+    assert fut.done()
+    assert fut.result()[0].shape == (4, 5)
+
+
+def test_bypass_on_real_engine(ds, cfg, index):
+    with index.serve(max_wait_ms=1.0, max_batch=8) as mb:
+        fut = mb.submit(np.asarray(ds.Q[:16]))
+        ids, dists = fut.result(timeout=120)
+    assert ids.shape == (16, 10)
+    assert mb.stats.bypass == 1
+    ref_ids, _ = index.search(ds.Q[:16])
+    np.testing.assert_array_equal(ids, ref_ids)
+
+
+# ----------------------------------------------------------------------
+# config validation + arch suggestions
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", [
+    dict(metric="l3"), dict(metric="cosine"),
+    dict(kernel_backend="cuda"), dict(gather_fused="maybe"),
+])
+def test_annconfig_rejects_bad_knobs_at_construction(bad):
+    with pytest.raises(ValueError, match=next(iter(bad))):
+        ANNConfig(**bad)
+
+
+def test_annconfig_accepts_registered_backend():
+    from repro.core import hotpath
+
+    hotpath.register_backend("test_backend_cfg", object())
+    try:
+        assert ANNConfig(kernel_backend="test_backend_cfg") is not None
+    finally:
+        hotpath._REGISTRY.pop("test_backend_cfg", None)
+
+
+def test_annconfig_valid_defaults():
+    cfg = ANNConfig()
+    assert cfg.metric == "l2" and cfg.build_pipeline == (
+        "knn", "diversify", "bridges")
+
+
+def test_get_arch_suggests_close_match():
+    with pytest.raises(KeyError, match="tsdg-paper"):
+        get_arch("tsdg-papr")
+    with pytest.raises(KeyError, match="did you mean"):
+        get_arch("gemma3-27")
+
+
+def test_get_arch_unknown_still_lists_known():
+    with pytest.raises(KeyError, match="known"):
+        get_arch("zzz-nothing-close")
