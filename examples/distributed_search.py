@@ -1,8 +1,11 @@
 """Multi-device sharded TSDG (the production layout at toy scale), consumed
-through the `repro.ann.Index` facade: ``Index.build(X, cfg, mesh=mesh)``
-builds one independent sub-index per DB shard and ``index.search`` serves
-both regimes through the shard-mapped procedures — same API as the
-single-device path (DESIGN.md §6).
+through the `repro.ann.Index` facade: the mesh is an *execution plane*
+(DESIGN.md §6), so the four verbs are the same as single-device —
+
+    Index.build(X, cfg, mesh=mesh)   one independent sub-index per DB shard
+    index.search(Q)                  both regimes, shard-mapped, one merge
+    index.save(dir)                  shard-major artifact + mesh AOT cache
+    Index.load(dir, mesh=mesh)       zero rebuilds AND zero compiles
 
 Runs on 8 emulated host devices: DB sharded 4 ways (data axis), queries /
 search-populations over 2 model columns — the same shard_map code the
@@ -15,6 +18,8 @@ import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import dataclasses
+import shutil
+import tempfile
 import time
 
 import jax
@@ -27,9 +32,9 @@ from repro.data.synthetic import make_clustered, recall_at_k
 mesh = jax.make_mesh((4, 2), ("data", "model"))
 print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
-ds = make_clustered(n=16384, d=32, n_queries=64, n_clusters=64, noise=0.6)
+ds = make_clustered(n=8192, d=32, n_queries=64, n_clusters=64, noise=0.6)
 cfg = dataclasses.replace(get_arch("tsdg-paper"), k_graph=16, max_degree=24,
-                          bridge_hubs=64)
+                          bridge_hubs=64, serve_buckets=(8, 64))
 
 t0 = time.perf_counter()
 index = Index.build(ds.X, cfg, k=10, mesh=mesh)
@@ -46,3 +51,22 @@ for Bq in (64, 4):  # large then small — dispatch is automatic
 s = index.stats
 print(f"engine: {s.n_batches} batches, compiles={s.compiles} "
       f"({s.small_batches} small / {s.large_batches} large)")
+
+# --- sharded save -> load round-trip: no rebuild, no warmup sweep ----------
+index.warmup()           # cover every (regime, bucket) before exporting
+td = tempfile.mkdtemp(prefix="repro_mesh_demo_")
+try:
+    t0 = time.perf_counter()
+    index.save(td)
+    print(f"shard-major artifact written in {time.perf_counter() - t0:.1f}s "
+          f"(arrays/<i>.npz per DB shard + mesh AOT cache)")
+    t0 = time.perf_counter()
+    restored = Index.load(td, mesh=mesh)
+    ids2, _ = restored.search(ds.Q[:64])
+    print(f"restored + first query in {time.perf_counter() - t0:.1f}s: "
+          f"compiles={restored.stats.compiles} "
+          f"aot_primed={restored.stats.aot_primed} "
+          f"(bitwise match: {bool(np.array_equal(ids2, index.search(ds.Q[:64])[0]))})")
+    assert restored.stats.compiles == 0
+finally:
+    shutil.rmtree(td, ignore_errors=True)

@@ -1,11 +1,20 @@
 #!/usr/bin/env bash
-# Quick CI tier: kernel-backend parity (including the gather-fused
-# scalar-prefetch DMA path, exercised in interpret mode), the facade
-# save/load round-trip tier, the fast test suite, and smoke benchmarks
-# (bucketed serving + AOT reload rows, an explicit kernel_backend=xla
-# serve run, the fused-vs-gather hotpath rows, and the facade
-# build->save->load->serve->query smoke through the launcher and
-# quickstart example).
+# CI tiers.  Usage: scripts/ci.sh [quick|sharded|all]   (default: all)
+#
+# quick — kernel-backend parity (including the gather-fused scalar-prefetch
+#   DMA path, exercised in interpret mode), the facade save/load round-trip
+#   tier, queue QoS (deadlines + bypass), the fast test suite, and smoke
+#   benchmarks (bucketed serving + AOT reload rows, an explicit
+#   kernel_backend=xla serve run, the fused-vs-gather hotpath rows, and the
+#   facade build->save->load->serve->query smoke through the launcher and
+#   quickstart example).
+#
+# sharded — the mesh execution plane on 8 emulated host devices
+#   (XLA_FLAGS=--xla_force_host_platform_device_count=8): plane protocol +
+#   cross-shard merge oracle + mesh<->single bitwise parity + sharded
+#   artifact round-trip tests, the mesh_serve/mesh_aot_reload benchmark
+#   rows, and a sharded build->save->load->serve launcher smoke asserting
+#   zero compiles after a topology-matched load.
 #
 # Excludes @slow tests and the multi-minute distributed subprocess tests
 # (those run in the full tier: `PYTHONPATH=src python -m pytest -q`).
@@ -13,31 +22,65 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+TIER="${1:-all}"
 
-echo "== kernel backend + gather-fused parity (Pallas interpret vs XLA) =="
-python -m pytest -q tests/test_hotpath.py tests/test_search_dedup.py
+quick_tier() {
+    echo "== kernel backend + gather-fused parity (Pallas interpret vs XLA) =="
+    python -m pytest -q tests/test_hotpath.py tests/test_search_dedup.py
 
-echo "== facade: save/load round-trip, AOT priming, QoS bypass =="
-python -m pytest -q tests/test_ann_facade.py
+    echo "== facade: save/load round-trip, AOT priming, QoS bypass =="
+    python -m pytest -q tests/test_ann_facade.py tests/test_queue_qos.py
 
-echo "== quick test tier =="
-python -m pytest -q -m "not slow" --ignore=tests/test_distributed.py \
-    --ignore=tests/test_hotpath.py --ignore=tests/test_search_dedup.py \
-    --ignore=tests/test_ann_facade.py
+    echo "== quick test tier =="
+    python -m pytest -q -m "not slow" --ignore=tests/test_distributed.py \
+        --ignore=tests/test_hotpath.py --ignore=tests/test_search_dedup.py \
+        --ignore=tests/test_ann_facade.py --ignore=tests/test_queue_qos.py \
+        --ignore=tests/test_mesh_plane.py
 
-echo "== serving smoke bench (incl. serve/aot_reload rows) =="
-REPRO_BENCH_QUICK=1 REPRO_BENCH_ONLY=serve python -m benchmarks.run
+    echo "== serving smoke bench (incl. serve/aot_reload rows) =="
+    REPRO_BENCH_QUICK=1 REPRO_BENCH_ONLY=serve python -m benchmarks.run
 
-echo "== hotpath micro bench (fused vs gather-then-block rows) =="
-REPRO_BENCH_QUICK=1 REPRO_BENCH_ONLY=hotpath python -m benchmarks.run
+    echo "== hotpath micro bench (fused vs gather-then-block rows) =="
+    REPRO_BENCH_QUICK=1 REPRO_BENCH_ONLY=hotpath python -m benchmarks.run
 
-echo "== facade smoke: build -> save -> load -> serve -> query =="
-IXDIR="$(mktemp -d)/ix"
-python -m repro.launch.serve --n 4000 --d 16 --batches 4 --backend xla \
-    --save-index "$IXDIR"
-python -m repro.launch.serve --n 4000 --d 16 --batches 6 --backend xla \
-    --load-index "$IXDIR"
-rm -rf "$(dirname "$IXDIR")"
+    echo "== facade smoke: build -> save -> load -> serve -> query =="
+    IXDIR="$(mktemp -d)/ix"
+    python -m repro.launch.serve --n 4000 --d 16 --batches 4 --backend xla \
+        --save-index "$IXDIR"
+    python -m repro.launch.serve --n 4000 --d 16 --batches 6 --backend xla \
+        --load-index "$IXDIR"
+    rm -rf "$(dirname "$IXDIR")"
 
-echo "== examples smoke: quickstart (canonical facade demo) =="
-REPRO_QUICKSTART_N=4000 python examples/quickstart.py
+    echo "== examples smoke: quickstart (canonical facade demo) =="
+    REPRO_QUICKSTART_N=4000 python examples/quickstart.py
+}
+
+sharded_tier() {
+    export XLA_FLAGS="--xla_force_host_platform_device_count=8"
+
+    echo "== mesh plane: protocol, merge oracle, parity, round-trips =="
+    python -m pytest -q tests/test_mesh_plane.py
+
+    echo "== mesh serving bench (mesh_serve + mesh_aot_reload rows) =="
+    REPRO_BENCH_QUICK=1 REPRO_BENCH_ONLY=mesh python -m benchmarks.run
+
+    echo "== sharded smoke: build -> save -> load -> serve (4x2 mesh) =="
+    MXDIR="$(mktemp -d)/mx"
+    python -m repro.launch.serve --n 4096 --d 16 --batches 4 --backend xla \
+        --mesh 4x2 --save-index "$MXDIR"
+    # topology-matched reload must serve with ZERO compiles (AOT primed)
+    python -m repro.launch.serve --n 4096 --d 16 --batches 6 --backend xla \
+        --mesh 4x2 --load-index "$MXDIR" | tee /tmp/mesh_reload.log
+    grep -q "compiles=0" /tmp/mesh_reload.log
+    rm -rf "$(dirname "$MXDIR")" /tmp/mesh_reload.log
+
+    echo "== examples smoke: distributed_search (sharded facade demo) =="
+    python examples/distributed_search.py
+}
+
+case "$TIER" in
+    quick)   quick_tier ;;
+    sharded) sharded_tier ;;
+    all)     quick_tier; sharded_tier ;;
+    *) echo "unknown tier '$TIER' (quick|sharded|all)" >&2; exit 2 ;;
+esac

@@ -3,12 +3,18 @@
 Layout (a directory)::
 
     <path>/
-      manifest.json       magic, format version, ANNConfig, k, fingerprint,
-                          sha256 integrity hashes for every payload file
-      arrays.npz          X + packed graph (neighbors/lambdas/degrees[/hubs])
+      manifest.json       magic, format version, execution plane, ANNConfig,
+                          k, runtime fingerprint, mesh topology (sharded),
+                          calibrated regime threshold, sha256 per payload
+      arrays.npz          single plane: X + packed graph
+                          (neighbors/lambdas/degrees[/hubs])
+      arrays/<i>.npz      mesh plane: shard-major layout — DB shard i's
+                          slice of X and its OWN sub-index, one file +
+                          checksum per shard (shards stream/verify
+                          independently at pod scale)
       aot/<regime>_b<bucket>_k<k>.jaxexp
                           jax.export-serialized serving modules, one per
-                          warmup-reachable (regime, bucket, k) cache entry
+                          saved (regime, bucket, k) cache entry
 
 The AOT blobs are exported with the database and graph as *runtime
 arguments* (never embedded constants), so each is a few tens of KB
@@ -16,16 +22,24 @@ regardless of index size.  :func:`load_index` closes the deserialized
 modules back over the restored device arrays, compiles them once, and
 primes the engine's compile cache — a restarted process skips both the
 graph rebuild *and* the warmup compile sweep, and `ServeStats.compiles`
-stays 0 (ROADMAP "AOT cache persistence").
+stays 0 (ROADMAP "AOT cache persistence").  Both planes persist: a mesh
+artifact's modules record the operand shardings and logical device count,
+and re-bind onto a mesh of identical topology.
 
 Safety gates:
 
-* ``magic`` / ``format_version`` mismatch  -> :class:`ArtifactError`;
-* any sha256 mismatch (corruption)         -> :class:`ArtifactError`;
+* ``magic`` / unknown ``format_version``    -> :class:`ArtifactError`;
+* any sha256 mismatch (corruption)          -> :class:`ArtifactError`;
 * runtime fingerprint mismatch (different jax version, platform, device
-  kind, kernel backend, or gather mode) -> the index still loads, but the
-  AOT cache is *skipped* with a warning and the engine recompiles on
-  demand — stale executables are never served.
+  kind, kernel backend, gather mode, or execution plane) -> the index
+  still loads, but the AOT cache is *skipped* with a warning and the
+  engine recompiles on demand — stale executables are never served;
+* topology mismatch (sharded artifact onto a mesh with a different DB
+  shard count, a mesh artifact without ``mesh=``, or a single-device
+  artifact onto a mesh) -> gather-and-reshard fallback with a warning:
+  the database is gathered from the shards and the sub-indexes are
+  REBUILT for the requested layout (per-shard sub-indexes are only valid
+  for the shard cut they were built on), AOT cache skipped.
 """
 from __future__ import annotations
 
@@ -42,13 +56,16 @@ import numpy as np
 from repro.configs.base import ANNConfig
 from repro.core.diversify import PackedGraph
 
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2
+# still-readable older revisions (1 = pre-plane single-device layout)
+READ_VERSIONS = (1, 2)
 MAGIC = "repro-ann-index"
 _MANIFEST = "manifest.json"
 _ARRAYS = "arrays.npz"
+_GRAPH_KEYS = ("neighbors", "lambdas", "degrees")
 # fields that must match for persisted executables to be trusted
 _FP_KEYS = ("jax", "platform", "device_kind", "kernel_backend",
-            "gather_fused")
+            "gather_fused", "plane")
 
 
 class ArtifactError(RuntimeError):
@@ -64,17 +81,11 @@ def _sha256(path: Path) -> str:
 
 
 def runtime_fingerprint(engine) -> dict:
-    """What the AOT executables were lowered against.  Compared on load;
-    any `_FP_KEYS` difference falls back to on-demand recompilation."""
-    dev = jax.devices()[0]
-    return {
-        "jax": jax.__version__,
-        "platform": jax.default_backend(),
-        "device_kind": dev.device_kind,
-        "n_devices": jax.device_count(),
-        "kernel_backend": engine.backend,
-        "gather_fused": engine.gather_fused,
-    }
+    """What the AOT executables were lowered against (owned by the
+    execution plane; kept as a wrapper for older callers).  Compared on
+    load; any `_FP_KEYS` difference falls back to on-demand
+    recompilation."""
+    return engine.plane.fingerprint()
 
 
 def _config_to_dict(cfg: ANNConfig) -> dict:
@@ -102,60 +113,106 @@ def _config_from_dict(d: dict) -> ANNConfig:
 # save
 # --------------------------------------------------------------------------
 
-def save_index(index, path, *, aot: bool = True) -> Path:
+def _shard_arrays(eng) -> list:
+    """Gather the mesh plane's operands to host and cut them shard-major:
+    one dict per DB shard holding its X slice and its own sub-index.  The
+    build laid every row-sharded operand out as the concatenation of the
+    shard-local results (shard_map out_specs), so equal row slices ARE the
+    per-shard arrays."""
+    plane = eng.plane
+    n_shards = plane.n_db_shards
+    full = {"X": np.asarray(plane.X)}
+    g = plane.graph
+    full["neighbors"] = np.asarray(g.neighbors)
+    full["lambdas"] = np.asarray(g.lambdas)
+    full["degrees"] = np.asarray(g.degrees)
+    full["hubs"] = (np.asarray(g.hubs) if g.hubs is not None
+                    else np.zeros((0,), np.int32))
+    shards = []
+    for i in range(n_shards):
+        shard = {}
+        for name, arr in full.items():
+            n_local = arr.shape[0] // n_shards
+            shard[name] = arr[i * n_local:(i + 1) * n_local]
+        shards.append(shard)
+    return shards
+
+
+def save_index(index, path, *, aot: bool = True, extra_ks=()) -> Path:
     """Write ``index`` to ``path`` (a directory, created if needed).
 
-    With ``aot=True`` every warmup-reachable (regime, bucket, k) serving
-    executable is exported alongside the graph, so :func:`load_index` can
-    skip the warmup compile sweep entirely.  Entries whose export fails
-    (e.g. an interpret-mode Pallas backend that cannot serialize) are
-    skipped with a warning — the artifact stays loadable, load just
-    recompiles those on demand.
+    With ``aot=True`` every warmup-reachable (regime, bucket) serving
+    executable is exported alongside the graph — for the index's default
+    ``k`` and for every ``k`` in ``extra_ks`` — so :func:`load_index` can
+    skip the warmup compile sweep entirely and additionally serve those
+    extra ``k`` values steady-state from the first request.  Entries whose
+    export fails (e.g. an interpret-mode Pallas backend that cannot
+    serialize) are skipped with a warning — the artifact stays loadable,
+    load just recompiles those on demand.
     """
     eng = index.engine
-    if eng.mesh is not None:
-        raise ArtifactError(
-            "mesh-sharded indexes cannot be saved yet (the sharded "
-            "sub-index layout has no serialized form)")
+    plane = eng.plane
     path = Path(path)
     path.mkdir(parents=True, exist_ok=True)
 
-    g = eng.graph
-    arrays = {"X": np.asarray(eng.X), "neighbors": np.asarray(g.neighbors),
-              "lambdas": np.asarray(g.lambdas),
-              "degrees": np.asarray(g.degrees)}
-    if g.hubs is not None:
-        arrays["hubs"] = np.asarray(g.hubs)
-    np.savez(path / _ARRAYS, **arrays)
-
-    aot_entries = []
-    if aot:
-        (path / "aot").mkdir(exist_ok=True)
-        # warmup_probes() already dedups (regime, bucket); mesh rounding
-        # can't perturb the bucket here because mesh saves are rejected
-        for kind, bucket, _ in eng.warmup_probes():
-            try:
-                blob = eng.export_executable(kind, bucket, k=index.k)
-            except Exception as e:  # noqa: BLE001 — degrade, don't fail save
-                warnings.warn(
-                    f"AOT export skipped for {kind}/b{bucket}/k{index.k}: "
-                    f"{e!r} (load will recompile this entry)", stacklevel=2)
-                continue
-            fname = f"aot/{kind}_b{bucket}_k{index.k}.jaxexp"
-            (path / fname).write_bytes(blob)
-            aot_entries.append({
-                "kind": kind, "bucket": bucket, "k": index.k,
-                "file": fname, "sha256": _sha256(path / fname)})
+    ks = sorted({index.k, *extra_ks})
+    probes = eng.warmup_probes()
+    for k in ks:  # fail fast, before any bytes hit disk
+        for kind in {p[0] for p in probes}:
+            eng._validate_k(k, kind)
 
     manifest = {
         "magic": MAGIC,
         "format_version": FORMAT_VERSION,
+        "plane": plane.name,
         "config": _config_to_dict(eng.cfg),
         "k": index.k,
-        "fingerprint": runtime_fingerprint(eng),
-        "arrays": {"file": _ARRAYS, "sha256": _sha256(path / _ARRAYS)},
-        "aot": aot_entries,
+        "fingerprint": plane.fingerprint(),
+        "calibrated_threshold": eng.threshold,
     }
+
+    if plane.name == "mesh":
+        manifest["topology"] = plane.topology()
+        (path / "arrays").mkdir(exist_ok=True)
+        entries = []
+        for i, shard in enumerate(_shard_arrays(eng)):
+            fname = f"arrays/{i}.npz"
+            np.savez(path / fname, **shard)
+            entries.append({"file": fname, "sha256": _sha256(path / fname)})
+        manifest["arrays"] = entries
+    else:
+        g = eng.graph
+        arrays = {"X": np.asarray(eng.X),
+                  "neighbors": np.asarray(g.neighbors),
+                  "lambdas": np.asarray(g.lambdas),
+                  "degrees": np.asarray(g.degrees)}
+        if g.hubs is not None:
+            arrays["hubs"] = np.asarray(g.hubs)
+        np.savez(path / _ARRAYS, **arrays)
+        manifest["arrays"] = {"file": _ARRAYS,
+                              "sha256": _sha256(path / _ARRAYS)}
+
+    aot_entries = []
+    if aot:
+        (path / "aot").mkdir(exist_ok=True)
+        # warmup_probes() already dedups (regime, bucket) after the plane's
+        # batch-multiple rounding, so entry names cannot collide
+        for kind, bucket, _ in probes:
+            for k in ks:
+                try:
+                    blob = eng.export_executable(kind, bucket, k=k)
+                except Exception as e:  # noqa: BLE001 — degrade, not fail
+                    warnings.warn(
+                        f"AOT export skipped for {kind}/b{bucket}/k{k}: "
+                        f"{e!r} (load will recompile this entry)",
+                        stacklevel=2)
+                    continue
+                fname = f"aot/{kind}_b{bucket}_k{k}.jaxexp"
+                (path / fname).write_bytes(blob)
+                aot_entries.append({
+                    "kind": kind, "bucket": bucket, "k": k,
+                    "file": fname, "sha256": _sha256(path / fname)})
+    manifest["aot"] = aot_entries
     (path / _MANIFEST).write_text(json.dumps(manifest, indent=2))
     return path
 
@@ -164,20 +221,61 @@ def save_index(index, path, *, aot: bool = True) -> Path:
 # load
 # --------------------------------------------------------------------------
 
-def _compile_exported(eng, exported, bucket: int):
-    """Close a deserialized module over the engine's device arrays and
-    compile it back into the single-donated-argument executable form the
-    compile cache expects."""
-    parts = eng.aot_operands()
-    Qspec = jax.ShapeDtypeStruct((bucket, eng.X.shape[1]), jnp.float32)
-    donate = (0,) if eng._donate else ()
-    fn = jax.jit(lambda Qb: exported.call(*parts, Qb),
-                 donate_argnums=donate)
-    return fn.lower(Qspec).compile()
+def _verified_npz(root: Path, entry: dict) -> dict:
+    fpath = root / entry["file"]
+    if not fpath.is_file():
+        raise ArtifactError(f"missing payload {entry['file']}")
+    if _sha256(fpath) != entry["sha256"]:
+        raise ArtifactError(f"corrupt artifact: checksum mismatch in "
+                            f"{entry['file']}")
+    with np.load(fpath) as arrs:
+        return {k: arrs[k] for k in arrs.files}
 
 
-def load_index(index_cls, path):
-    """Restore an `Index` saved by :func:`save_index`.  See the module
+def _prime_aot(index, path: Path, manifest: dict) -> None:
+    """Verify fingerprint (+ mesh topology, via the mesh_axes fingerprint
+    field) and prime the engine's compile cache from the persisted modules;
+    on any mismatch, warn and leave the engine to recompile on demand."""
+    entries = manifest.get("aot", ())
+    if not entries:
+        return
+    eng = index.engine
+    saved_fp = manifest.get("fingerprint", {})
+    now_fp = eng.plane.fingerprint()
+    # version-1 artifacts predate the plane field; they were all single
+    saved_fp.setdefault("plane", "single")
+    stale = [f for f in _FP_KEYS if saved_fp.get(f) != now_fp.get(f)]
+    if eng.plane.name == "mesh":
+        # exported mesh modules are pinned to the device count and the
+        # operand shardings — the full axis map must match exactly
+        if saved_fp.get("n_devices") != now_fp.get("n_devices"):
+            stale.append("n_devices")
+        if saved_fp.get("mesh_axes") != now_fp.get("mesh_axes"):
+            stale.append("mesh_axes")
+    if stale:
+        warnings.warn(
+            "AOT serving cache skipped — fingerprint mismatch on "
+            + ", ".join(f"{f} ({saved_fp.get(f)!r} -> {now_fp.get(f)!r})"
+                        for f in stale)
+            + "; the engine will recompile on demand", stacklevel=3)
+        return
+
+    from jax import export as jax_export
+    for e in entries:
+        bpath = path / e["file"]
+        if not bpath.is_file():
+            raise ArtifactError(f"missing AOT payload {e['file']}")
+        if _sha256(bpath) != e["sha256"]:
+            raise ArtifactError(
+                f"corrupt artifact: checksum mismatch in {e['file']}")
+        exported = jax_export.deserialize(bpath.read_bytes())
+        exe = eng.plane.prime(exported, e["kind"], e["bucket"], e["k"])
+        eng.prime_executable(e["kind"], e["bucket"], e["k"], exe)
+
+
+def load_index(index_cls, path, *, mesh=None):
+    """Restore an `Index` saved by :func:`save_index`; pass ``mesh=`` to
+    restore a sharded artifact onto a compatible mesh.  See the module
     docstring for the verification/fallback contract."""
     path = Path(path)
     mpath = path / _MANIFEST
@@ -191,52 +289,85 @@ def load_index(index_cls, path):
     if manifest.get("magic") != MAGIC:
         raise ArtifactError(f"{path} is not a {MAGIC} artifact")
     ver = manifest.get("format_version")
-    if ver != FORMAT_VERSION:
+    if ver not in READ_VERSIONS:
         raise ArtifactError(
             f"unsupported index artifact version {ver!r} "
-            f"(this build reads version {FORMAT_VERSION})")
+            f"(this build reads versions {READ_VERSIONS})")
 
-    apath = path / manifest["arrays"]["file"]
-    if not apath.is_file():
-        raise ArtifactError(f"missing payload {apath.name}")
-    if _sha256(apath) != manifest["arrays"]["sha256"]:
-        raise ArtifactError(f"corrupt artifact: checksum mismatch in "
-                            f"{apath.name}")
-    with np.load(apath) as arrs:
+    cfg = _config_from_dict(manifest["config"])
+    k = manifest["k"]
+    threshold = manifest.get("calibrated_threshold")
+    saved_plane = manifest.get("plane", "single")
+
+    if saved_plane == "single":
+        arrs = _verified_npz(path, manifest["arrays"])
         X = arrs["X"]
         graph = PackedGraph(
             neighbors=jnp.asarray(arrs["neighbors"]),
             lambdas=jnp.asarray(arrs["lambdas"]),
             degrees=jnp.asarray(arrs["degrees"]),
             hubs=jnp.asarray(arrs["hubs"]) if "hubs" in arrs else None)
-
-    cfg = _config_from_dict(manifest["config"])
-    index = index_cls(X, cfg, k=manifest["k"], graph=graph)
-
-    entries = manifest.get("aot", ())
-    if not entries:
+        if mesh is not None:
+            warnings.warn(
+                "single-device artifact loaded with mesh=: resharding — "
+                "the database is re-laid over the mesh and shard-local "
+                "sub-indexes are REBUILT (the saved graph spans the whole "
+                "database); AOT cache skipped", stacklevel=3)
+            return index_cls(X, cfg, k=k, mesh=mesh, threshold=threshold)
+        index = index_cls(X, cfg, k=k, graph=graph, threshold=threshold)
+        _prime_aot(index, path, manifest)
         return index
-    eng = index.engine
-    saved_fp = manifest.get("fingerprint", {})
-    now_fp = runtime_fingerprint(eng)
-    stale = [f for f in _FP_KEYS if saved_fp.get(f) != now_fp.get(f)]
-    if stale:
+
+    # ---- sharded (mesh) artifact -----------------------------------------
+    shard_entries = manifest["arrays"]
+    shards = [_verified_npz(path, e) for e in shard_entries]
+    full = {name: np.concatenate([s[name] for s in shards], axis=0)
+            for name in ("X", *_GRAPH_KEYS, "hubs")}
+    topo = manifest.get("topology", {})
+
+    if mesh is None:
         warnings.warn(
-            "AOT serving cache skipped — fingerprint mismatch on "
-            + ", ".join(f"{f} ({saved_fp.get(f)!r} -> {now_fp.get(f)!r})"
-                        for f in stale)
-            + "; the engine will recompile on demand", stacklevel=3)
-        return index
+            f"sharded artifact ({topo.get('n_db_shards')} DB shards) "
+            "loaded without mesh=: gathering shards and REBUILDING a "
+            "single-device index (per-shard sub-indexes only search their "
+            "own slice); pass mesh= to restore the sharded layout",
+            stacklevel=3)
+        return index_cls(full["X"], cfg, k=k, threshold=threshold)
 
-    from jax import export as jax_export
-    for e in entries:
-        bpath = path / e["file"]
-        if not bpath.is_file():
-            raise ArtifactError(f"missing AOT payload {e['file']}")
-        if _sha256(bpath) != e["sha256"]:
-            raise ArtifactError(
-                f"corrupt artifact: checksum mismatch in {e['file']}")
-        exported = jax_export.deserialize(bpath.read_bytes())
-        exe = _compile_exported(eng, exported, e["bucket"])
-        eng.prime_executable(e["kind"], e["bucket"], e["k"], exe)
+    from repro.core import distributed as D
+    from repro.serve.plane import MeshPlane
+
+    if D.n_db_shards(mesh) != topo.get("n_db_shards"):
+        warnings.warn(
+            f"mesh topology mismatch: artifact has "
+            f"{topo.get('n_db_shards')} DB shards, requested mesh has "
+            f"{D.n_db_shards(mesh)} — gathering and resharding (sub-"
+            "indexes REBUILT for the new shard cut); AOT cache skipped",
+            stacklevel=3)
+        return index_cls(full["X"], cfg, k=k, mesh=mesh,
+                         threshold=threshold)
+
+    # compatible shard cut: re-bind the saved sub-indexes, no rebuild.
+    # concatenated row slices are exactly the shard_map build layout, so a
+    # sharded device_put reproduces the original placement bit-for-bit
+    sh = _mesh_shardings(mesh)
+    parts = (
+        jax.device_put(jnp.asarray(full["X"]), sh["row2"]),
+        jax.device_put(jnp.asarray(full["neighbors"]), sh["row2"]),
+        jax.device_put(jnp.asarray(full["lambdas"]), sh["row2"]),
+        jax.device_put(jnp.asarray(full["degrees"]), sh["row1"]),
+        jax.device_put(jnp.asarray(full["hubs"]), sh["row1"]),
+    )
+    plane = MeshPlane(None, cfg, mesh, parts=parts)
+    index = index_cls(None, cfg, k=k, plane=plane, threshold=threshold)
+    _prime_aot(index, path, manifest)
     return index
+
+
+def _mesh_shardings(mesh) -> dict:
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import distributed as D
+    d_ax = D.db_axes(mesh)
+    return {"row2": NamedSharding(mesh, P(d_ax, None)),
+            "row1": NamedSharding(mesh, P(d_ax))}

@@ -8,18 +8,142 @@ the device's matmul occupancy target, ``cfg.small_batch_threshold`` (per DB
 shard).  This module is the single home of that rule: the serving engine,
 the :class:`repro.ann.Index` facade, and the benchmarks all call
 :func:`regime_for` so the threshold can never drift between layers.
+
+**Calibration** (the paper's per-device fit, ``cfg.regime_calibration =
+"probe"``): instead of trusting the static config value,
+:func:`calibrate` times both procedures through the engine's execution
+plane at two probe batch sizes, fits a linear latency model per regime,
+and solves for the crossover batch B* where the large procedure starts
+winning — exactly the paper's §4 methodology, with the plane substituted
+for the bare GPU so a mesh engine calibrates against its *sharded*
+procedures.  The fitted threshold is overridable (``ANNEngine(...,
+threshold=)``) and cached in the index artifact manifest so a restarted
+process skips the probe sweep.
 """
 from __future__ import annotations
 
+import dataclasses
+import os
+import time
 
-def regime_for(cfg, batch: int) -> str:
+
+def regime_for(cfg, batch: int, *, threshold: float | None = None) -> str:
     """``"small"`` or ``"large"`` for a batch of ``batch`` queries.
 
     Paper §4: small-batch search wins while the search population
     ``batch * t0`` undershoots the device saturation point; past it the
-    best-first large-batch procedure amortizes better.
+    best-first large-batch procedure amortizes better.  ``threshold``
+    (a calibrated or caller-supplied value) replaces
+    ``cfg.small_batch_threshold`` under the same rule.
     """
     if batch < 1:
         raise ValueError(f"batch must be >= 1, got {batch}")
-    return ("small" if batch * cfg.small_t0
-            < cfg.small_batch_threshold * 4 else "large")
+    thr = cfg.small_batch_threshold if threshold is None else threshold
+    return "small" if batch * cfg.small_t0 < thr * 4 else "large"
+
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """A fitted regime split (see :func:`calibrate`).
+
+    ``threshold`` drops into the ``B·t0 < 4·threshold`` rule of
+    :func:`regime_for`.  ``a``/``b``/``cores``/``d`` express the same
+    division point in the paper's ``(a·cores + b) / d`` form — with probes
+    from a single device the fit is degenerate (``b = 0``,
+    ``a = B*·d/cores``); fitting ``a`` and ``b`` separately needs probes
+    from devices with different core counts, which is exactly how the
+    paper presents it (§4, one fit per GPU model).
+    """
+
+    threshold: float
+    crossover_batch: float     # B*: the batch where the procedures tie
+    a: float
+    b: float
+    cores: int
+    d: int
+    degenerate: bool           # probes could not order the procedures
+    probes: dict               # {regime: [(batch, seconds_per_call), ...]}
+
+    def to_manifest(self) -> dict:
+        out = dataclasses.asdict(self)
+        out["probes"] = {kind: [[int(B), float(t)] for B, t in rows]
+                         for kind, rows in self.probes.items()}
+        return out
+
+    @classmethod
+    def from_manifest(cls, d: dict) -> "Calibration":
+        d = dict(d)
+        d["probes"] = {kind: [(int(B), float(t)) for B, t in rows]
+                       for kind, rows in d.get("probes", {}).items()}
+        return cls(**d)
+
+
+def _device_cores() -> int:
+    import jax
+
+    dev = jax.devices()[0]
+    cores = getattr(dev, "core_count", None) \
+        or getattr(dev, "num_cores", None)
+    if not cores and jax.default_backend() == "cpu":
+        cores = os.cpu_count()
+    return int(cores or 1)
+
+
+def calibrate(plane, cfg, *, k: int = 10, probe_batches=(4, 32),
+              repeats: int = 3) -> Calibration:
+    """Fit the regime threshold from timed probe batches on ``plane``.
+
+    Both procedures are compiled (through the plane, so a mesh plane
+    probes its shard-mapped form) at each probe batch size and timed
+    steady-state (best of ``repeats``, compile excluded).  Per-regime
+    latency is modelled as ``t(B) = α + β·B``; the crossover
+    ``B* = (α_large − α_small) / (β_small − β_large)`` becomes the
+    threshold via the population rule ``threshold = B*·t0 / 4``.
+
+    Degenerate fits (the small procedure never loses, or the probes are
+    too noisy to order the slopes) fall back to the static config
+    threshold with ``degenerate=True`` — calibration never makes dispatch
+    *worse* than the shipped default.
+    """
+    import numpy as np
+
+    d = int(plane.X.shape[1])
+    mult = plane.batch_multiple()
+    times: dict = {"small": [], "large": []}
+    for kind in ("small", "large"):
+        for B in probe_batches:
+            Br = -(-int(B) // mult) * mult
+            exe = plane.compile(kind, Br, k)
+            Q = np.zeros((Br, d), np.float32)
+            out = exe(np.array(Q))         # warm dispatch (compile done)
+            out[0].block_until_ready()
+            best = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                out = exe(np.array(Q))     # fresh buffer: exe may donate
+                out[0].block_until_ready()
+                best = min(best, time.perf_counter() - t0)
+            times[kind].append((Br, best))
+
+    def _fit(rows):
+        (B1, t1), (B2, t2) = rows[0], rows[-1]
+        if B2 == B1:
+            return t1, 0.0
+        beta = (t2 - t1) / (B2 - B1)
+        return t1 - beta * B1, beta
+
+    a_s, b_s = _fit(times["small"])
+    a_l, b_l = _fit(times["large"])
+    cores = _device_cores()
+    if b_s <= b_l:  # small never loses per-query on these probes
+        return Calibration(
+            threshold=float(cfg.small_batch_threshold),
+            crossover_batch=float("inf"), a=0.0, b=0.0, cores=cores, d=d,
+            degenerate=True, probes=times)
+    b_star = (a_l - a_s) / (b_s - b_l)
+    b_star = min(max(b_star, 1.0), 1e7)
+    threshold = b_star * cfg.small_t0 / 4.0
+    return Calibration(
+        threshold=float(threshold), crossover_batch=float(b_star),
+        a=float(b_star * d / cores), b=0.0, cores=cores, d=d,
+        degenerate=False, probes=times)

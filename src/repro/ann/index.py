@@ -15,7 +15,14 @@ serving layers of this repo behind it:
     ids, dists = index.search(Q)             #   warmup compile sweep is
                                              #   skipped (primed executables)
     with index.serve(max_wait_ms=2.0) as mb: # micro-batching queue + QoS
-        fut = mb.submit(q)
+        fut = mb.submit(q, deadline_ms=15.0)
+
+Sharded serving is the same four verbs (DESIGN.md §6): ``Index.build(X,
+cfg, mesh=mesh)`` lays the database + one sub-index per DB shard over the
+mesh, ``save`` writes the shard-major artifact, and ``Index.load(path,
+mesh=mesh)`` restores it onto a compatible mesh with zero rebuilds and
+zero compiles — the mesh is a first-class execution plane
+(:mod:`repro.serve.plane`), not a separate API.
 
 Everything underneath — the build stages, the shape-bucketed compile cache,
 the kernel-backend seam, the micro-batcher — stays reachable for power
@@ -33,33 +40,50 @@ class Index:
 
     Construct with :meth:`build` (or :meth:`load`); the constructor accepts
     a prebuilt :class:`~repro.core.diversify.PackedGraph` via ``graph=`` to
-    skip the pipeline (how :meth:`load` restores an artifact).  Pass
-    ``mesh=`` to build shard-local sub-indices over a device mesh
-    (DESIGN.md §6) behind the same ``search()`` API.
+    skip the pipeline (how :meth:`load` restores a single-device artifact).
+    Pass ``mesh=`` to build shard-local sub-indices over a device mesh
+    (DESIGN.md §6) behind the same ``search()`` API, or ``plane=`` to
+    inject any prebuilt :class:`~repro.serve.plane.ExecutionPlane` (how
+    :meth:`load` restores a sharded artifact without rebuilding).
+
+    ``threshold=`` overrides the §4 regime split; with
+    ``cfg.regime_calibration="probe"`` the engine fits it from timed probe
+    batches instead (:func:`repro.ann.dispatch.calibrate`).
     """
 
     def __init__(self, X, cfg: ANNConfig | None = None, *, k: int = 10,
-                 graph=None, mesh=None, stages=None, tile: int = 2048):
+                 graph=None, mesh=None, plane=None, stages=None,
+                 tile: int = 2048, threshold: float | None = None):
         from repro.serve.engine import ANNEngine
 
         cfg = cfg or ANNConfig()
-        if mesh is None and graph is None:
+        if plane is not None:
+            if stages is not None or graph is not None or mesh is not None:
+                raise ValueError("plane= already fixes the layout and "
+                                 "graph; stages=/graph=/mesh= do not apply")
+        elif mesh is None and graph is None:
             graph = build_graph(X, cfg, stages=stages, tile=tile)
         elif stages is not None:
             raise ValueError("stages= only applies when the pipeline runs "
                              "(not with graph= or mesh=)")
-        self.engine = ANNEngine(X, cfg, k=k, graph=graph, mesh=mesh)
+        self.engine = ANNEngine(X, cfg, k=k, graph=graph, mesh=mesh,
+                                plane=plane, threshold=threshold)
 
     @classmethod
     def build(cls, X, cfg: ANNConfig | None = None, *, k: int = 10,
-              mesh=None, stages=None, tile: int = 2048) -> "Index":
+              mesh=None, stages=None, tile: int = 2048,
+              threshold: float | None = None) -> "Index":
         """Run the staged build pipeline (``cfg.build_pipeline``, default
         knn -> diversify -> bridges) and wrap the result in an `Index`.
 
         ``stages`` overrides the pipeline per call; names resolve through
-        :func:`repro.ann.pipeline.register_stage`'s registry.
+        :func:`repro.ann.pipeline.register_stage`'s registry.  With
+        ``mesh=`` each DB shard builds its own sub-index shard-locally
+        (zero cross-shard traffic) and serving goes through the mesh
+        execution plane.
         """
-        return cls(X, cfg, k=k, mesh=mesh, stages=stages, tile=tile)
+        return cls(X, cfg, k=k, mesh=mesh, stages=stages, tile=tile,
+                   threshold=threshold)
 
     # -- search / serve -----------------------------------------------------
 
@@ -75,7 +99,7 @@ class Index:
 
     def regime(self, batch: int) -> str:
         """Which procedure a batch of this size takes ("small"/"large")."""
-        return regime_for(self.cfg, batch)
+        return regime_for(self.cfg, batch, threshold=self.engine.threshold)
 
     def warmup(self, k: int | None = None) -> int:
         """Pre-compile every reachable (regime, bucket) executable; returns
@@ -89,7 +113,8 @@ class Index:
 
         QoS knobs pass through: ``max_wait_ms`` (coalescing window),
         ``max_batch`` (dispatch cap; submits at or above it take the
-        bypass lane instead of queueing behind latency traffic).
+        bypass lane instead of queueing behind latency traffic).  Per
+        request, ``submit(..., deadline_ms=)`` bounds the queue wait.
         """
         from repro.serve.queue import MicroBatcher
 
@@ -97,24 +122,34 @@ class Index:
 
     # -- persistence --------------------------------------------------------
 
-    def save(self, path, *, aot: bool = True):
+    def save(self, path, *, aot: bool = True, extra_ks=()):
         """Write the versioned index artifact: packed graph + database +
         config + fingerprint (+ the AOT-exported serving executables unless
-        ``aot=False``).  See :mod:`repro.ann.artifact` for the format."""
+        ``aot=False``).  Sharded indexes write the shard-major layout
+        (one ``arrays/<i>.npz`` per DB shard + mesh topology).
+
+        ``extra_ks`` exports the warmup-reachable executables for those
+        additional ``k`` values too, so a loaded index serves them
+        steady-state from the first request (they are primed on load like
+        the default ``k``).  See :mod:`repro.ann.artifact` for the format.
+        """
         from repro.ann.artifact import save_index
 
-        return save_index(self, path, aot=aot)
+        return save_index(self, path, aot=aot, extra_ks=extra_ks)
 
     @classmethod
-    def load(cls, path) -> "Index":
+    def load(cls, path, *, mesh=None) -> "Index":
         """Restore a saved index: no rebuild, and — when the saved
-        device/jax fingerprint matches this process — no warmup compile
-        sweep either (the persisted executables are primed straight into
-        the serving cache).  On fingerprint mismatch the index still loads
-        and falls back to on-demand recompilation."""
+        fingerprint (and, for sharded artifacts, mesh topology) matches
+        this process — no warmup compile sweep either (the persisted
+        executables are primed straight into the serving cache).  Pass
+        ``mesh=`` to restore a sharded artifact onto a compatible mesh.
+        On fingerprint mismatch the index still loads and falls back to
+        on-demand recompilation; on topology mismatch it gathers the
+        shards and rebuilds for the requested layout (with a warning)."""
         from repro.ann.artifact import load_index
 
-        return load_index(cls, path)
+        return load_index(cls, path, mesh=mesh)
 
     # -- introspection ------------------------------------------------------
 
@@ -142,8 +177,23 @@ class Index:
     def backend(self) -> str:
         return self.engine.backend
 
+    @property
+    def plane(self):
+        """The engine's execution plane (single-device or mesh)."""
+        return self.engine.plane
+
+    @property
+    def mesh(self):
+        return self.engine.mesh
+
+    @property
+    def calibration(self):
+        """The fitted regime split, when ``regime_calibration="probe"``."""
+        return self.engine.calibration
+
     def __repr__(self) -> str:
         g = self.graph
         return (f"Index(n={g.n}, d={self.X.shape[1]}, "
                 f"max_degree={g.max_degree}, metric={self.cfg.metric!r}, "
-                f"backend={self.backend!r}, k={self.k})")
+                f"backend={self.backend!r}, plane={self.plane.name!r}, "
+                f"k={self.k})")

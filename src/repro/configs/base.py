@@ -211,6 +211,11 @@ class ANNConfig:
     segment_size: int = 32
     visited_segments: int = 8
     small_batch_threshold: int = 256  # regime split (paper's a*SMs+b / d)
+    # regime-split source: "static" trusts small_batch_threshold as-is;
+    # "probe" fits the paper's per-device division point from timed probe
+    # batches at engine init (repro.ann.dispatch.calibrate — overridable
+    # via ANNEngine(threshold=), cached in the index artifact manifest)
+    regime_calibration: str = "static"
     faithful_rtemp: bool = True  # lane-paired R_temp update (paper Alg.1)
     # hot-path kernel backend (repro.core.hotpath): "pallas" | "xla" |
     # "auto" (pallas on TPU, xla fallback on CPU — explicit "pallas" off-TPU
@@ -265,6 +270,10 @@ class ANNConfig:
             raise ValueError(
                 f"gather_fused={self.gather_fused!r} must be 'auto', "
                 "'on', or 'off'")
+        if self.regime_calibration not in ("static", "probe"):
+            raise ValueError(
+                f"regime_calibration={self.regime_calibration!r} must be "
+                "'static' or 'probe'")
         if self.kernel_backend not in ("auto", "pallas", "xla"):
             # third-party backends are legal if registered; consult the
             # registry lazily so importing configs stays jax-free

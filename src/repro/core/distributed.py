@@ -1,6 +1,6 @@
 """Distributed TSDG: sharded index build + 2-D parallel search (shard_map).
 
-Production layout (DESIGN.md §2): the database (vectors + packed graph) is
+Production layout (DESIGN.md §6): the database (vectors + packed graph) is
 sharded over the ``data`` axis (and ``pod`` when multi-pod) — each shard owns
 an independent TSDG sub-index over its slice, built with zero cross-shard
 traffic (the paper's batched-GPU build, pod-scaled).  Queries are sharded
@@ -11,21 +11,37 @@ axes — k·shards ids/dists per query, the only collective in the hot path.
 This is the standard sharded-ANN serving architecture (sub-linear per-shard
 search, embarrassingly parallel scale-out); the paper is single-GPU, so this
 layer is our extension for the 1000+-node deployment target.
+
+Determinism contract (new with the execution-plane refactor): every search
+row is seeded by its GLOBAL index — the large regime passes each model
+column's row offset as ``seed_offset``, the small regime places each
+column's slice of the t0 population with ``t0_offset``/``t0_total``.  On a
+mesh with a single DB shard the union of the columns' searches is therefore
+*exactly* the single-device search population, and the merged answers are
+bitwise-identical to the single-device plane (asserted in
+``tests/test_mesh_plane.py``).  With several DB shards the per-shard
+sub-indexes genuinely differ from a global index, so only recall — not
+bitwise identity — is comparable.
+
+The callable returned by :func:`make_search_fn` is consumed by
+:class:`repro.serve.plane.MeshPlane`, which owns the mesh, the operand
+shardings, and the serving engine integration (AOT cache, donation, stats).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ANNConfig
-from repro.core import metrics as M
 from repro.core.diversify import PackedGraph
 from repro.core.search_large import _large_batch_search
 from repro.core.search_small import _small_batch_search
 from repro.utils.compat import shard_map
+
+PAD_ID = jnp.int32(-1)
+INF = jnp.float32(3.4e38)
 
 
 def db_axes(mesh: Mesh) -> tuple:
@@ -34,6 +50,26 @@ def db_axes(mesh: Mesh) -> tuple:
 
 def query_axes(mesh: Mesh) -> tuple:
     return tuple(a for a in ("model",) if a in mesh.axis_names)
+
+
+def axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def n_db_shards(mesh: Mesh) -> int:
+    sizes = axis_sizes(mesh)
+    out = 1
+    for a in db_axes(mesh):
+        out *= sizes[a]
+    return out
+
+
+def n_query_shards(mesh: Mesh) -> int:
+    sizes = axis_sizes(mesh)
+    out = 1
+    for a in query_axes(mesh):
+        out *= sizes[a]
+    return out
 
 
 def graph_pspec(mesh: Mesh):
@@ -61,6 +97,40 @@ def make_build_fn(mesh: Mesh, cfg: ANNConfig):
     return jax.jit(fn)
 
 
+def merge_topk(all_ids, all_d, k: int):
+    """Dedup-top-k merge of per-shard candidate lists — THE cross-shard
+    collective's reduction, extracted so it is testable against an
+    explicit-set oracle (``tests/test_mesh_plane.py``).
+
+    ``all_ids`` [B, n_cand] carries *global* ids with ``PAD_ID`` (-1) for
+    invalid lanes, ``all_d`` the matching distances (PAD lanes hold INF).
+    Different searches (other shards, other t0 columns) may surface the same
+    global id; duplicates must occupy exactly ONE output slot, keeping the
+    best (equal-valued — same query, same vector, same arithmetic) copy.
+
+    Returns (ids [B, k], dists [B, k]) ascending by distance; rows with
+    fewer than k distinct valid candidates are padded with (PAD_ID, INF).
+    """
+    if k > all_ids.shape[1]:  # fewer candidates than k: pad the pool
+        pad = k - all_ids.shape[1]
+        all_ids = jnp.pad(all_ids, ((0, 0), (0, pad)),
+                          constant_values=PAD_ID)
+        all_d = jnp.pad(all_d, ((0, 0), (0, pad)), constant_values=INF)
+    # (id, dist)-lexsorted so the dedup keeps the BEST copy of each id
+    # (mirrors the single-device t0-merge in search_small; a plain stable
+    # id-sort would keep whichever copy arrived first)
+    o = jnp.lexsort((all_d, all_ids), axis=1)
+    sid = jnp.take_along_axis(all_ids, o, axis=1)
+    sd = jnp.take_along_axis(all_d, o, axis=1)
+    dup = jnp.concatenate(
+        [jnp.zeros((sid.shape[0], 1), bool),
+         sid[:, 1:] == sid[:, :-1]], axis=1)
+    sd = jnp.where(dup | (sid == PAD_ID), INF, sd)
+    neg, pos = jax.lax.top_k(-sd, k)
+    out_ids = jnp.take_along_axis(sid, pos, axis=1)
+    return jnp.where(-neg < INF, out_ids, PAD_ID), -neg
+
+
 def make_search_fn(mesh: Mesh, cfg: ANNConfig, *, kind: str = "large",
                    k: int = 10, batch: int | None = None):
     """Returns jit(search)(X, neighbors, lambdas, degrees, hubs, Q) ->
@@ -69,20 +139,19 @@ def make_search_fn(mesh: Mesh, cfg: ANNConfig, *, kind: str = "large",
     Layouts mirror the paper's two regimes:
       * large batch — queries sharded over `model` (one best-first search
         per query, thousands in flight), DB sharded over `data`(+`pod`);
+        each column seeds its rows by GLOBAL batch index (`seed_offset`),
+        so column placement is bit-invisible;
       * small batch — queries REPLICATED; the paper's `t0` independent
         greedy searches are split across the `model` axis (that is the
-        small-batch parallelism unit, §4.1), results merged with the same
-        dedup-top-k that merges the DB shards.
+        small-batch parallelism unit, §4.1) via `t0_offset`/`t0_total`
+        global placement, results merged with the same dedup-top-k that
+        merges the DB shards.
     """
     d_ax = db_axes(mesh)
     q_ax = query_axes(mesh)
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    n_db_shards = 1
-    for a in d_ax:
-        n_db_shards *= sizes[a]
-    n_q_shards = 1
-    for a in q_ax:
-        n_q_shards *= sizes[a]
+    sizes = axis_sizes(mesh)
+    n_db = n_db_shards(mesh)
+    n_q = n_query_shards(mesh)
     unroll = getattr(cfg, "unroll_scans", False)
     backend = getattr(cfg, "kernel_backend", "auto")
     gather_fused = getattr(cfg, "gather_fused", None)
@@ -99,16 +168,21 @@ def make_search_fn(mesh: Mesh, cfg: ANNConfig, *, kind: str = "large",
         for a in d_ax:
             idx = idx * sizes[a] + jax.lax.axis_index(a)
         offset = (idx * n_local).astype(jnp.int32)
+        # query-shard index along the model axes -> global row / t0 offset
+        q_idx = 0
+        for a in q_ax:
+            q_idx = q_idx * sizes[a] + jax.lax.axis_index(a)
         if kind == "small":
-            # this model-column runs its slice of the t0 searches
-            q_idx = jax.lax.axis_index(q_ax[0]) if q_ax else 0
-            t0_local = max(1, cfg.small_t0 // max(1, n_q_shards))
+            # this model-column runs its slice of the t0 searches, placed at
+            # its GLOBAL position inside the population so the union over
+            # columns reproduces the single-device searches exactly
+            t0_local = max(1, cfg.small_t0 // max(1, n_q))
             ids, dist = _small_batch_search(
                 X_s, graph, Q_s, k=k, t0=t0_local, hops=cfg.small_hops,
                 hop_width=cfg.hop_width, n_seeds=cfg.n_seeds,
                 lambda_limit=10, metric=cfg.metric, unroll=unroll,
-                seed_offset=q_idx, backend=backend,
-                gather_fused=gather_fused)
+                t0_offset=q_idx * t0_local, t0_total=t0_local * n_q,
+                backend=backend, gather_fused=gather_fused)
         else:
             ids, dist = _large_batch_search(
                 X_s, graph, Q_s, k=k, ef=cfg.large_ef, hops=cfg.large_hops,
@@ -116,31 +190,23 @@ def make_search_fn(mesh: Mesh, cfg: ANNConfig, *, kind: str = "large",
                 n_seeds=getattr(cfg, "large_n_seeds", cfg.n_seeds),
                 m_seg=cfg.queue_segments, seg=cfg.segment_size,
                 mv_seg=cfg.visited_segments, delta=cfg.delta,
+                seed_offset=q_idx * Q_s.shape[0],
                 unroll=unroll,
                 gather_limit=getattr(cfg, "gather_limit", 0),
                 exact_visited=getattr(cfg, "exact_visited", False),
                 backend=backend, gather_fused=gather_fused)
-        gids = jnp.where(ids < n_local, ids + offset, jnp.int32(-1))
-        dist = jnp.where(ids < n_local, dist, jnp.float32(3.4e38))
+        gids = jnp.where(ids < n_local, ids + offset, PAD_ID)
+        dist = jnp.where(ids < n_local, dist, INF)
         # merge across DB shards (and search shards in the small regime)
         merge_ax = d_ax + q_ax if kind == "small" else d_ax
-        n_merge = n_db_shards * (n_q_shards if kind == "small" else 1)
+        n_merge = n_db * (n_q if kind == "small" else 1)
         all_ids = jax.lax.all_gather(gids, merge_ax, tiled=False)
         all_d = jax.lax.all_gather(dist, merge_ax, tiled=False)
         all_ids = jnp.moveaxis(all_ids.reshape(n_merge, *gids.shape),
                                0, 1).reshape(gids.shape[0], -1)
         all_d = jnp.moveaxis(all_d.reshape(n_merge, *dist.shape),
                              0, 1).reshape(dist.shape[0], -1)
-        # dedup by id (different searches may find the same neighbor)
-        o = jnp.argsort(all_ids, axis=1)
-        sid = jnp.take_along_axis(all_ids, o, axis=1)
-        sd = jnp.take_along_axis(all_d, o, axis=1)
-        dup = jnp.concatenate(
-            [jnp.zeros((sid.shape[0], 1), bool),
-             sid[:, 1:] == sid[:, :-1]], axis=1)
-        sd = jnp.where(dup, jnp.float32(3.4e38), sd)
-        neg, pos = jax.lax.top_k(-sd, k)
-        return jnp.take_along_axis(sid, pos, axis=1), -neg
+        return merge_topk(all_ids, all_d, k)
 
     q_spec = P(None, None) if kind == "small" else P(q_ax, None)
     out_spec = P(None, None) if kind == "small" else P(q_ax, None)

@@ -57,6 +57,7 @@ def _large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
                        metric: str = "l2", n_seeds: int = 32,
                        m_seg: int = 8, seg: int = 32, mv_seg: int = 8,
                        segv: int = 32, delta: float = 0.0, seed: int = 0,
+                       seed_offset=0,
                        push_all_seeds: bool = True, unroll: bool = False,
                        gather_limit: int = 0, exact_visited: bool = False,
                        backend: str = "auto",
@@ -80,9 +81,14 @@ def _large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
         raise ValueError(f"k={k} exceeds the ranking array size ef={ef}; "
                          "raise ef or lower k")
     key = jax.random.key(seed)
-    # per-row keys: row i's seeds depend only on (seed, i), never on B, so
-    # padded batches (serving shape buckets) match unpadded calls bitwise
-    row_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(B))
+    # per-row keys: row i's seeds depend only on (seed, seed_offset + i),
+    # never on B, so padded batches (serving shape buckets) match unpadded
+    # calls bitwise.  `seed_offset` may be traced — the mesh execution plane
+    # passes each model column's global row offset so a query's search is
+    # seeded by its GLOBAL batch row, making model-sharded execution
+    # bitwise-identical to the single-device plane (DESIGN.md §6).
+    row_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        jnp.arange(B) + seed_offset)
     seeds = jax.vmap(
         lambda rk: jax.random.randint(rk, (n_seeds,), 0, N, jnp.int32))(
         row_keys)                                             # [B, n_seeds]

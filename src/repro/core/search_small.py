@@ -45,22 +45,35 @@ INF = jnp.float32(3.4e38)
     jax.jit,
     static_argnames=("k", "t0", "hops", "hop_width", "n_seeds",
                      "lambda_limit", "metric", "exact_merge", "width",
-                     "unroll", "backend", "gather_fused"))
+                     "unroll", "backend", "gather_fused", "t0_total"))
 def _small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
                        t0: int = 32, hops: int = 6, hop_width: int = 32,
                        n_seeds: int = 32, lambda_limit: int = 10,
                        metric: str = "l2", exact_merge: bool = False,
                        width: int = 32, seed: int = 0,
                        unroll: bool = False, seed_offset=0,
+                       t0_offset=0, t0_total: int | None = None,
                        backend: str = "auto",
                        gather_fused: str | None = None):
     """Returns (ids [B, k], dists [B, k]).  `seed_offset` may be traced
-    (distributed small-batch: each model column runs different searches).
+    (it perturbs the base key — a cheap way to decorrelate restarts).
 
-    Random seeds are derived per search row (`fold_in` by row index), so row
-    i's draws depend only on (seed, seed_offset, i) — never on the batch
-    size.  Appending padding queries (the serving engine's shape buckets)
-    therefore leaves the real rows bitwise-identical to an unpadded call.
+    Random seeds are derived per search row (`fold_in` by global row index),
+    so row i's draws depend only on (seed, seed_offset, i) — never on the
+    batch size.  Appending padding queries (the serving engine's shape
+    buckets) therefore leaves the real rows bitwise-identical to an unpadded
+    call.
+
+    `t0_offset` / `t0_total` place this call's searches inside a LARGER
+    t0 population: query b's search j here is globally search
+    ``b * t0_total + t0_offset + j`` (defaults: ``t0_total = t0``,
+    ``t0_offset = 0`` — the whole population, bit-identical to older
+    revisions).  The mesh execution plane splits the paper's t0 searches
+    over the `model` axis with ``t0_offset = column * t0_local``, so the
+    union of the columns' searches IS the single-device search population —
+    the sharded small regime is bitwise-identical to the single-device one
+    (DESIGN.md §6).  `t0_offset` may be traced (it is an `axis_index`
+    product inside shard_map).
     """
     N, d = X.shape
     B = Q.shape[0]
@@ -71,7 +84,10 @@ def _small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
             "raise t0/width or lower k")
     half = width // 2
     key = jax.random.fold_in(jax.random.key(seed), seed_offset)
-    row_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(S))
+    t0_total = t0 if t0_total is None else t0_total
+    flat = jnp.arange(S)
+    row_ids = (flat // t0) * t0_total + t0_offset + flat % t0
+    row_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(row_ids)
 
     Qs = jnp.repeat(Q, t0, axis=0)                            # [S, d]
 

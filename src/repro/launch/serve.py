@@ -39,6 +39,20 @@ def main() -> None:
                     choices=("auto", "on", "off"),
                     help="Pallas in-kernel neighbor gather (auto = DMA "
                          "path on real TPU, gather-then-block elsewhere)")
+    ap.add_argument("--mesh", metavar="DxM",
+                    help="serve through the mesh execution plane: 'D' or "
+                         "'DxM' device counts for the data (DB shards) and "
+                         "model (query fan-out) axes, e.g. --mesh 4x2. "
+                         "Needs D*M visible devices (on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N). "
+                         "Combines with --save-index/--load-index: sharded "
+                         "artifacts restore onto a compatible mesh with "
+                         "zero rebuilds and zero compiles")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="fit the regime-dispatch threshold from timed "
+                         "probe batches at init (paper §4's per-device "
+                         "fit) instead of the static config value; the "
+                         "fit is cached in a saved artifact")
     ap.add_argument("--save-index", metavar="DIR",
                     help="write the versioned index artifact (graph + "
                          "config + AOT serving cache) after serving")
@@ -58,6 +72,30 @@ def main() -> None:
     from repro.configs import get_arch
     from repro.data.synthetic import make_clustered, recall_at_k
 
+    mesh = None
+    if args.mesh:
+        import jax
+
+        try:
+            dims = tuple(int(x) for x in args.mesh.lower().split("x"))
+        except ValueError:
+            raise SystemExit(f"--mesh {args.mesh!r} must be 'D' or 'DxM' "
+                             "integers, e.g. --mesh 4x2")
+        need = 1
+        for x in dims:
+            need *= x
+        if need > jax.device_count():
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {need} devices, only "
+                f"{jax.device_count()} visible; on CPU set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={need}")
+        axes = ("data",) if len(dims) == 1 else ("data", "model")
+        if len(dims) > 2:
+            raise SystemExit("--mesh takes at most two axes (data[xmodel])")
+        mesh = jax.make_mesh(dims, axes)
+        print(f"[serve] mesh plane: {dict(zip(axes, dims))} "
+              f"({need} devices)")
+
     gt = None
     if args.data:
         X = np.load(args.data).astype(np.float32)
@@ -73,29 +111,43 @@ def main() -> None:
         # caller tried to override instead of silently dropping them
         ignored = [f"--{n.replace('_', '-')}" for n, default in
                    (("metric", "l2"), ("backend", "auto"),
-                    ("gather_fused", "auto"), ("paper_faithful", False))
+                    ("gather_fused", "auto"), ("paper_faithful", False),
+                    ("calibrate", False))
                    if getattr(args, n) != default]
         if ignored:
             print(f"[serve] note: {' '.join(ignored)} ignored with "
                   "--load-index (the artifact's saved config governs)")
-        index = Index.load(args.load_index)
+        index = Index.load(args.load_index, mesh=mesh)
         print(f"[serve] index loaded from {args.load_index} in "
               f"{time.perf_counter() - t0:.1f}s "
-              f"(aot_primed={index.stats.aot_primed}, no rebuild, "
+              f"(plane={index.plane.name}, "
+              f"aot_primed={index.stats.aot_primed}, no rebuild, "
               f"no warmup sweep)")
     else:
         cfg = dataclasses.replace(get_arch("tsdg-paper"),
                                   metric=args.metric,
                                   kernel_backend=args.backend,
-                                  gather_fused=args.gather_fused)
+                                  gather_fused=args.gather_fused,
+                                  regime_calibration=("probe" if
+                                                      args.calibrate
+                                                      else "static"))
         if args.paper_faithful:
             cfg = dataclasses.replace(cfg, bridge_hubs=0, large_n_seeds=32,
                                       db_bf16=False, gather_limit=0)
-        index = Index.build(X, cfg, k=args.k if args.k is not None else 10)
-        print(f"[serve] index: N={X.shape[0]} d={X.shape[1]} "
-              f"avg_degree={index.graph.avg_degree():.1f} "
-              f"built in {time.perf_counter() - t0:.1f}s "
-              f"(kernel backend: {index.backend})")
+        index = Index.build(X, cfg, k=args.k if args.k is not None else 10,
+                            mesh=mesh)
+        line = (f"[serve] index: N={X.shape[0]} d={X.shape[1]} "
+                f"avg_degree={index.graph.avg_degree():.1f} "
+                f"built in {time.perf_counter() - t0:.1f}s "
+                f"(kernel backend: {index.backend}, "
+                f"plane: {index.plane.name})")
+        if index.calibration is not None:
+            cal = index.calibration
+            line += (f"\n[serve] calibrated regime threshold: "
+                     f"{index.engine.threshold:.1f} "
+                     f"(crossover B*={cal.crossover_batch:.1f}, "
+                     f"degenerate={cal.degenerate})")
+        print(line)
     # a --k differing from the saved index's k still works (the engine
     # compiles that (regime, bucket, k) on demand, it just isn't primed)
     k = args.k if args.k is not None else index.k

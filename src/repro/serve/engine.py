@@ -3,8 +3,11 @@
 The paper's empirical split  (a·SMs + b) / d  decides which procedure a
 batch takes; our TPU analogue compares the batch's *search population*
 (B·t0 for the small procedure) against the device's matmul occupancy target
-(`cfg.small_batch_threshold`, per DB shard).  One engine, one graph — the
-λ-prefix trick means both procedures share the index (paper §3.3).
+(`cfg.small_batch_threshold`, per DB shard) — or, with
+``cfg.regime_calibration="probe"``, against a threshold *fitted* from timed
+probe batches at engine init (:func:`repro.ann.dispatch.calibrate`, the
+paper's per-GPU fit).  One engine, one graph — the λ-prefix trick means
+both procedures share the index (paper §3.3).
 
 Serving additions on top of the paper:
 
@@ -17,10 +20,15 @@ Serving additions on top of the paper:
   randomness per row (``fold_in`` by row index), so the padded call is
   bitwise-identical to the unpadded one on the real rows — padding is free
   in ids/recall, it only rounds up compute.
-* **Mesh backend** — pass ``mesh=`` and the engine builds the sharded
-  sub-indices with :func:`repro.core.distributed.make_build_fn` and serves
-  through the shard-mapped search fns, behind the same ``query()`` API and
-  the same bucketing/compile-cache/stats machinery.
+* **Execution planes** — the engine is device-layout agnostic: every
+  lowering, operand, and fingerprint goes through an
+  :class:`~repro.serve.plane.ExecutionPlane`.  The default
+  ``SingleDevicePlane`` serves one resident database; pass ``mesh=`` and a
+  ``MeshPlane`` shards the database + sub-indexes over the mesh
+  (DESIGN.md §6) behind the same ``query()`` API — and, because the bucket
+  ladder / compile cache / donation / stats all thread through the plane,
+  a mesh engine gets per-(regime, bucket, k) cached executables, padded
+  donated batches, AOT persistence and percentile stats for free.
 * **Stats v2** — per-regime latency records (percentiles/histograms),
   compile and bucket-hit counters, and warmup (compile-triggering) batches
   excluded from steady-state QPS.
@@ -47,16 +55,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ann.dispatch import regime_for
-from repro.ann.pipeline import build_graph
 from repro.configs.base import ANNConfig
-from repro.core import hotpath
-from repro.core.diversify import PackedGraph
-from repro.core.search_large import _large_batch_search
-from repro.core.search_small import _small_batch_search
+from repro.serve.plane import (MeshPlane, SingleDevicePlane, SMALL_WIDTH)
 
-# small_batch_search's compiled-in ranking width (its `width` kwarg default):
-# the per-query candidate pool is t0 * width entries
-_SMALL_WIDTH = 32
+# back-compat alias (pre-plane revisions defined the ranking width here)
+_SMALL_WIDTH = SMALL_WIDTH
 
 
 @dataclasses.dataclass
@@ -144,69 +147,89 @@ class ANNEngine:
 
     Single-device by default; pass ``mesh=`` to shard the database over the
     mesh's ``data``(+``pod``) axes and fan queries/searches over ``model``
-    (see :mod:`repro.core.distributed`).  In mesh mode ``X`` is placed with
-    the DB sharding and the sub-indices are built shard-locally.
+    (see :mod:`repro.core.distributed`), or ``plane=`` to inject any
+    prebuilt :class:`~repro.serve.plane.ExecutionPlane`.  Everything above
+    the plane — bucket ladder, compile cache, warmup, donation hand-off,
+    stats — is identical for every plane.
+
+    ``threshold=`` overrides the regime split (a float compared against the
+    same ``B·t0 < 4·threshold`` rule as ``cfg.small_batch_threshold``);
+    with ``cfg.regime_calibration="probe"`` and no explicit override the
+    threshold is fitted from timed probe batches at init
+    (:func:`repro.ann.dispatch.calibrate`) and recorded in
+    ``self.calibration``.
     """
 
     def __init__(self, X, cfg: ANNConfig | None = None, *, k: int = 10,
-                 graph: PackedGraph | None = None, mesh=None):
+                 graph=None, mesh=None, plane=None,
+                 threshold: float | None = None):
         self.cfg = cfg or ANNConfig()
         self.k = k
-        self.mesh = mesh
         self.stats = ServeStats()
         self._lock = threading.Lock()
         # (regime, bucket, k, backend, gather_fused) -> executable
         self._compiled: dict = {}
         self.buckets = tuple(sorted(self.cfg.serve_buckets))
-        # kernel backend resolved once per engine; part of the AOT cache key
-        # so an engine rebuilt with a different backend never aliases entries
-        self.backend = hotpath.resolve_backend(
-            getattr(self.cfg, "kernel_backend", "auto"))
-        # gather placement for the Pallas backend ("auto"/"on"/"off"); part
-        # of the AOT cache key like the backend itself
-        self.gather_fused = getattr(self.cfg, "gather_fused", "auto")
-        # donate the bucket-padded query buffer into each dispatch so steady
-        # state reuses its HBM instead of re-allocating per call; skipped on
-        # CPU where XLA cannot alias the input (it would warn every call)
-        self._donate = jax.default_backend() != "cpu"
-        if mesh is None:
-            self.X = jnp.asarray(X)
-            self.graph = graph if graph is not None \
-                else build_graph(self.X, self.cfg)
+        if plane is not None:
+            if mesh is not None or graph is not None:
+                raise ValueError("plane= already fixes the device layout; "
+                                 "mesh=/graph= only apply when the engine "
+                                 "builds its own plane")
+            self.plane = plane
+        elif mesh is None:
+            self.plane = SingleDevicePlane(X, self.cfg, graph=graph)
         else:
             if graph is not None:
                 raise ValueError("mesh mode builds its own sharded graph; "
                                  "graph= is only for single-device engines")
-            from jax.sharding import NamedSharding, PartitionSpec as P
+            self.plane = MeshPlane(X, self.cfg, mesh)
+        self.mesh = getattr(self.plane, "mesh", None)
+        self.calibration = None
+        self.threshold = threshold
+        if (threshold is None
+                and getattr(self.cfg, "regime_calibration",
+                            "static") == "probe"):
+            from repro.ann.dispatch import calibrate
+            self.calibration = calibrate(self.plane, self.cfg, k=k)
+            self.threshold = self.calibration.threshold
 
-            from repro.core import distributed as D
-            self._D = D
-            d_ax = D.db_axes(mesh)
-            self.X = jax.device_put(
-                jnp.asarray(X), NamedSharding(mesh, P(d_ax, None)))
-            nbrs, lams, degs, hubs = D.make_build_fn(mesh, self.cfg)(self.X)
-            jax.block_until_ready(nbrs)
-            self._db_parts = (nbrs, lams, degs, hubs)
-            self.graph = PackedGraph(
-                neighbors=nbrs, lambdas=lams, degrees=degs,
-                hubs=hubs if hubs.shape[0] else None)
-            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-            self._n_q_shards = 1
-            for a in D.query_axes(mesh):
-                self._n_q_shards *= sizes[a]
+    # -- plane delegation (the engine's device-layout view) -----------------
+
+    @property
+    def X(self):
+        return self.plane.X
+
+    @property
+    def graph(self):
+        return self.plane.graph
+
+    @property
+    def backend(self) -> str:
+        return self.plane.backend
+
+    @property
+    def gather_fused(self) -> str:
+        return self.plane.gather_fused
+
+    @property
+    def _donate(self) -> bool:
+        return self.plane.donate
 
     # -- regime & buckets ---------------------------------------------------
 
     def regime(self, batch: int) -> str:
         """Paper §4's division threshold — owned by the facade
         (:func:`repro.ann.dispatch.regime_for`) so engine, ``Index``, and
-        benchmarks can never disagree on the split."""
-        return regime_for(self.cfg, batch)
+        benchmarks can never disagree on the split.  A calibrated/override
+        threshold (see class docstring) replaces the static config value."""
+        return regime_for(self.cfg, batch, threshold=self.threshold)
 
     def bucket_for(self, batch: int) -> int:
         """Smallest ladder bucket >= batch; beyond the ladder, the next
         multiple of the largest bucket (bounded shape variety either way).
-        No ladder -> raw batch size (one cache entry per distinct B)."""
+        No ladder -> raw batch size (one cache entry per distinct B).
+        Rounded up to the plane's batch multiple (a mesh plane splits
+        large batches over its query shards)."""
         if not self.buckets:
             bucket = batch
         else:
@@ -214,9 +237,8 @@ class ANNEngine:
             if bucket is None:
                 top = self.buckets[-1]
                 bucket = -(-batch // top) * top
-        if self.mesh is not None and self._n_q_shards > 1:
-            # sharded large-batch search splits B over the model axis
-            s = self._n_q_shards
+        s = self.plane.batch_multiple()
+        if s > 1:
             bucket = -(-bucket // s) * s
         return bucket
 
@@ -229,58 +251,26 @@ class ANNEngine:
             raise ValueError(
                 f"k={k} exceeds large-batch ranking size ef="
                 f"{self.cfg.large_ef}; raise cfg.large_ef or lower k")
-        if kind == "small" and k > self.cfg.small_t0 * _SMALL_WIDTH:
+        if kind == "small" and k > self.cfg.small_t0 * SMALL_WIDTH:
             raise ValueError(
                 f"k={k} exceeds small-batch candidate pool t0*width="
-                f"{self.cfg.small_t0 * _SMALL_WIDTH}; raise cfg.small_t0 "
+                f"{self.cfg.small_t0 * SMALL_WIDTH}; raise cfg.small_t0 "
                 "or lower k")
         return k
 
     # -- compile cache ------------------------------------------------------
 
-    def _search_args(self, kind: str, Q, k: int):
-        """(jitted fn, positional args, static kwargs) for one dispatch."""
-        cfg = self.cfg
-        if self.mesh is not None:
-            fn = self._D.make_search_fn(self.mesh, cfg, kind=kind, k=k)
-            return fn, (self.X, *self._db_parts, Q), {}
-        if kind == "small":
-            kwargs = dict(k=k, t0=cfg.small_t0, hops=cfg.small_hops,
-                          hop_width=cfg.hop_width, n_seeds=cfg.n_seeds,
-                          lambda_limit=10, metric=cfg.metric,
-                          backend=self.backend,
-                          gather_fused=self.gather_fused)
-            return _small_batch_search, (self.X, self.graph, Q), kwargs
-        kwargs = dict(k=k, ef=cfg.large_ef, hops=cfg.large_hops,
-                      lambda_limit=5, metric=cfg.metric,
-                      n_seeds=getattr(cfg, "large_n_seeds", cfg.n_seeds),
-                      m_seg=cfg.queue_segments, seg=cfg.segment_size,
-                      mv_seg=cfg.visited_segments, delta=cfg.delta,
-                      backend=self.backend,
-                      gather_fused=self.gather_fused)
-        return _large_batch_search, (self.X, self.graph, Q), kwargs
+    def _get_executable(self, kind: str, bucket: int, k: int):
+        """Cached executable for (regime, bucket, k, backend, gather_fused);
+        the plane compiles on miss.
 
-    def _get_executable(self, kind: str, bucket: int, k: int, Qpad):
-        """Cached AOT executable for (regime, bucket, k, backend,
-        gather_fused); compiles on miss.
-
-        Returns (callable taking the padded query batch, compiled_now).
-        The database, graph, and every search parameter are closed over so
-        the padded query batch is the executable's ONLY argument — which is
-        what lets its bucket-sized buffer be donated (ROADMAP "Donated
-        buffers"): steady-state serving reuses the input's device memory
-        instead of re-allocating per call.
-        """
+        Returns (callable taking the padded query batch, compiled_now)."""
         cache_key = (kind, bucket, k, self.backend, self.gather_fused)
         with self._lock:
             hit = self._compiled.get(cache_key)
         if hit is not None:
             return hit, False
-        fn, pos, kwargs = self._search_args(kind, Qpad, k)
-        head = pos[:-1]
-        wrapped = jax.jit(lambda Qb: fn(*head, Qb, **kwargs),
-                          donate_argnums=(0,) if self._donate else ())
-        exe = wrapped.lower(Qpad).compile()
+        exe = self.plane.compile(kind, bucket, k)
         with self._lock:
             # a racing thread may have compiled the same key; keep the first
             prior = self._compiled.get(cache_key)
@@ -313,7 +303,7 @@ class ANNEngine:
             Qpad = jnp.copy(Q)
         else:
             Qpad = Q
-        exe, compiled_now = self._get_executable(kind, bucket, k, Qpad)
+        exe, compiled_now = self._get_executable(kind, bucket, k)
         t0 = time.perf_counter()
         ids, dists = exe(Qpad)
         ids.block_until_ready()
@@ -346,13 +336,18 @@ class ANNEngine:
         facade's AOT artifact export (``repro.ann.artifact``), so a saved
         index persists exactly the executables warmup would compile."""
         probes, done, prev = [], set(), 0
-        for b in self.buckets or (1,):
-            for probe in (prev + 1, b):
+        for b_raw in self.buckets or (1,):
+            # record the bucket a request in this ladder step actually
+            # compiles (plane batch-multiple rounding), but keep the probe
+            # batches at the RAW ladder step — a rounded probe batch would
+            # fall through to the next ladder rung and mislabel the entry
+            b = self.bucket_for(b_raw)
+            for probe in (prev + 1, b_raw):
                 pair = (self.regime(probe), b)
                 if pair not in done:
                     done.add(pair)
                     probes.append((pair[0], b, probe))
-            prev = b
+            prev = b_raw
         return probes
 
     def warmup(self, k: int | None = None) -> int:
@@ -371,53 +366,23 @@ class ANNEngine:
                           k: int | None = None) -> bytes:
         """Serialize one (regime, bucket, k) serving computation with
         ``jax.export`` — the persistent form of a compile-cache entry.
-
-        The database and packed graph are *arguments* of the exported
-        module (not embedded constants), so blobs stay graph-independent
-        small and one artifact can hold many entries.  Loading closes the
-        module back over the device-resident arrays and re-wraps it in the
-        donated single-argument convention (:mod:`repro.ann.artifact`).
-        Bitwise contract: the exported module is lowered from the same
-        trace `_get_executable` compiles, so a primed executable answers
-        identically to a locally-compiled one.
-        """
-        if self.mesh is not None:
-            raise NotImplementedError(
-                "mesh-sharded engines cannot export executables yet")
+        Delegates to the plane (each plane owns its export scheme; the mesh
+        plane records shardings + device count in the module)."""
         k = self._validate_k(k, kind)
-        from jax import export as jax_export
-        Qspec = jax.ShapeDtypeStruct((bucket, self.X.shape[1]), jnp.float32)
-        fn, _, kwargs = self._search_args(kind, Qspec, k)
-        # flat array args (jax.export cannot serialize the PackedGraph
-        # pytree type); aot_operands() is the shared flattening so the
-        # loader feeds arguments in exactly this order
-        parts = self.aot_operands()
-        has_hubs = self.graph.hubs is not None
-
-        def _call(*args):
-            Xa, nbrs, lams, degs = args[:4]
-            g = PackedGraph(neighbors=nbrs, lambdas=lams, degrees=degs,
-                            hubs=args[4] if has_hubs else None)
-            return fn(Xa, g, args[-1], **kwargs)
-
-        specs = tuple(jax.ShapeDtypeStruct(a.shape, a.dtype) for a in parts)
-        exported = jax_export.export(jax.jit(_call))(*specs, Qspec)
-        return bytes(exported.serialize())
+        return self.plane.export(kind, bucket, k)
 
     def aot_operands(self) -> tuple:
         """The exported modules' leading runtime arguments, in order:
         (X, neighbors, lambdas, degrees[, hubs]) — the padded query batch
         is appended last by the caller."""
-        g = self.graph
-        parts = (self.X, g.neighbors, g.lambdas, g.degrees)
-        return parts + ((g.hubs,) if g.hubs is not None else ())
+        return self.plane.operands()
 
     def prime_executable(self, kind: str, bucket: int, k: int,
                          call) -> None:
         """Install a restored executable into the compile cache.
 
         ``call`` must accept the bucket-padded query batch and return
-        (ids, dists) — the same convention `_get_executable` compiles.
+        (ids, dists) — the same convention :meth:`_get_executable` caches.
         Primed entries count as bucket *hits* (no compile is recorded):
         a loaded index serves its first request steady-state.
         """

@@ -1,0 +1,384 @@
+"""Execution planes — the one seam between the serving engine and devices.
+
+The serving engine (:mod:`repro.serve.engine`) owns everything that is
+*traffic-shaped*: the shape-bucket ladder, the (regime, bucket, k) compile
+cache, warmup enumeration, micro-batching, stats.  Everything that is
+*device-shaped* — where the database lives, how a search computation is
+lowered, what a persisted executable must be fingerprinted against — lives
+behind the :class:`ExecutionPlane` protocol defined here, with two
+registered implementations:
+
+* :class:`SingleDevicePlane` — the default: database + packed graph resident
+  on one device, searches lowered from the raw procedures.  Extracted
+  verbatim from the pre-plane ``ANNEngine`` internals; behavior-identical
+  (same cache keys, same donation rule, same AOT export scheme).
+* :class:`MeshPlane` — the sharded peer: database + per-shard sub-indexes
+  laid out over a device mesh (DESIGN.md §6), searches lowered from the
+  shard-mapped procedures of :mod:`repro.core.distributed`.  The mesh, the
+  DB/query PartitionSpecs, and the global-id offset logic are owned here,
+  so the engine above it is mesh-agnostic: a mesh engine gets per-(regime,
+  bucket, k) cached executables, padded-batch donation, AOT persistence and
+  percentile stats for free.
+
+Both planes expose the same surface::
+
+    compile(regime, bucket, k) -> executable     # padded Q -> (ids, dists)
+    operands() -> tuple                          # flat AOT runtime args
+    fingerprint() -> dict                        # what executables bind to
+    shardings() -> dict                          # operand placements
+    export(regime, bucket, k) -> bytes           # jax.export serialization
+    prime(exported, regime, bucket, k) -> executable   # deserialize + bind
+
+plus ``X``, ``graph``, ``cfg``, ``backend``, ``gather_fused``, ``donate``,
+``batch_multiple()`` (bucket divisibility constraint) and ``topology()``
+(mesh shape; ``None`` on the single-device plane).  `register_plane()`
+accepts third-party planes by name, mirroring the kernel-backend registry
+(DESIGN.md §3): a future `jax.distributed` pod plane slots in without
+touching the engine.
+"""
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ANNConfig
+from repro.core import hotpath
+from repro.core.diversify import PackedGraph
+
+
+@runtime_checkable
+class ExecutionPlane(Protocol):
+    """Structural protocol for execution planes (see module docstring)."""
+
+    name: str
+    cfg: ANNConfig
+    X: jax.Array
+    graph: PackedGraph
+    backend: str
+    gather_fused: str
+    donate: bool
+
+    def compile(self, regime: str, bucket: int, k: int):
+        """Compiled executable for one (regime, bucket, k): takes the
+        bucket-padded query batch as its ONLY argument (donated when
+        ``donate``) and returns (ids [bucket, k], dists [bucket, k])."""
+        ...
+
+    def operands(self) -> tuple:
+        """Flat device-resident runtime arguments of exported modules, in
+        order: (X, neighbors, lambdas, degrees[, hubs])."""
+        ...
+
+    def fingerprint(self) -> dict:
+        """What persisted executables were lowered against; compared on
+        artifact load (any mismatch -> recompile on demand)."""
+        ...
+
+    def shardings(self) -> dict:
+        """Operand-name -> sharding placements ({} on a single device)."""
+        ...
+
+
+_PLANES: dict = {}
+
+
+def register_plane(name: str, factory) -> None:
+    """Register a plane factory ``(X, cfg, **kw) -> plane`` under ``name``."""
+    _PLANES[name] = factory
+
+
+def planes() -> tuple:
+    return tuple(sorted(_PLANES))
+
+
+def get_plane(name: str):
+    try:
+        return _PLANES[name]
+    except KeyError:
+        raise KeyError(f"unknown execution plane {name!r}; "
+                       f"registered: {planes()}") from None
+
+
+def _runtime_fingerprint(plane) -> dict:
+    dev = jax.devices()[0]
+    return {
+        "jax": jax.__version__,
+        "platform": jax.default_backend(),
+        "device_kind": dev.device_kind,
+        "n_devices": jax.device_count(),
+        "kernel_backend": plane.backend,
+        "gather_fused": plane.gather_fused,
+        "plane": plane.name,
+    }
+
+
+# ==========================================================================
+# single-device plane
+# ==========================================================================
+
+# small_batch_search's compiled-in ranking width (its `width` kwarg
+# default): the per-query candidate pool is t0 * width entries
+SMALL_WIDTH = 32
+
+
+class SingleDevicePlane:
+    """Database + graph on one device; searches lowered from the raw
+    procedures (extracted, behavior-identical, from the pre-plane engine)."""
+
+    name = "single"
+
+    def __init__(self, X, cfg: ANNConfig, *, graph: PackedGraph | None = None):
+        self.cfg = cfg
+        # kernel backend resolved once per plane; part of the engine's AOT
+        # cache key so an engine rebuilt with a different backend never
+        # aliases entries
+        self.backend = hotpath.resolve_backend(
+            getattr(cfg, "kernel_backend", "auto"))
+        self.gather_fused = getattr(cfg, "gather_fused", "auto")
+        # donate the bucket-padded query buffer into each dispatch so steady
+        # state reuses its HBM instead of re-allocating per call; skipped on
+        # CPU where XLA cannot alias the input (it would warn every call)
+        self.donate = jax.default_backend() != "cpu"
+        self.X = jnp.asarray(X)
+        if graph is None:
+            from repro.ann.pipeline import build_graph
+            graph = build_graph(self.X, cfg)
+        self.graph = graph
+
+    # -- engine-facing geometry --------------------------------------------
+
+    def batch_multiple(self) -> int:
+        return 1
+
+    def topology(self) -> dict | None:
+        return None
+
+    def shardings(self) -> dict:
+        return {}
+
+    def fingerprint(self) -> dict:
+        return _runtime_fingerprint(self)
+
+    # -- lowering -----------------------------------------------------------
+
+    def _search_args(self, kind: str, k: int):
+        """(procedure, static kwargs) for one regime at one k."""
+        from repro.core.search_large import _large_batch_search
+        from repro.core.search_small import _small_batch_search
+
+        cfg = self.cfg
+        if kind == "small":
+            kwargs = dict(k=k, t0=cfg.small_t0, hops=cfg.small_hops,
+                          hop_width=cfg.hop_width, n_seeds=cfg.n_seeds,
+                          lambda_limit=10, metric=cfg.metric,
+                          backend=self.backend,
+                          gather_fused=self.gather_fused)
+            return _small_batch_search, kwargs
+        kwargs = dict(k=k, ef=cfg.large_ef, hops=cfg.large_hops,
+                      lambda_limit=5, metric=cfg.metric,
+                      n_seeds=getattr(cfg, "large_n_seeds", cfg.n_seeds),
+                      m_seg=cfg.queue_segments, seg=cfg.segment_size,
+                      mv_seg=cfg.visited_segments, delta=cfg.delta,
+                      backend=self.backend,
+                      gather_fused=self.gather_fused)
+        return _large_batch_search, kwargs
+
+    def _qspec(self, bucket: int):
+        return jax.ShapeDtypeStruct((bucket, self.X.shape[1]), jnp.float32)
+
+    def compile(self, kind: str, bucket: int, k: int):
+        """The database, graph, and every search parameter are closed over
+        so the padded query batch is the executable's ONLY argument — which
+        is what lets its bucket-sized buffer be donated (ROADMAP "Donated
+        buffers"): steady-state serving reuses the input's device memory
+        instead of re-allocating per call."""
+        fn, kwargs = self._search_args(kind, k)
+        X, graph = self.X, self.graph
+        wrapped = jax.jit(lambda Qb: fn(X, graph, Qb, **kwargs),
+                          donate_argnums=(0,) if self.donate else ())
+        return wrapped.lower(self._qspec(bucket)).compile()
+
+    # -- AOT persistence ----------------------------------------------------
+
+    def operands(self) -> tuple:
+        g = self.graph
+        parts = (self.X, g.neighbors, g.lambdas, g.degrees)
+        return parts + ((g.hubs,) if g.hubs is not None else ())
+
+    def export(self, kind: str, bucket: int, k: int) -> bytes:
+        """Serialize one (regime, bucket, k) serving computation with
+        ``jax.export`` — the persistent form of a compile-cache entry.
+
+        The database and packed graph are *arguments* of the exported
+        module (not embedded constants), so blobs stay graph-independent
+        small and one artifact can hold many entries.  Bitwise contract:
+        the exported module is lowered from the same trace :meth:`compile`
+        compiles, so a primed executable answers identically to a
+        locally-compiled one.
+        """
+        from jax import export as jax_export
+        fn, kwargs = self._search_args(kind, k)
+        # flat array args (jax.export cannot serialize the PackedGraph
+        # pytree type); operands() is the shared flattening so the loader
+        # feeds arguments in exactly this order
+        parts = self.operands()
+        has_hubs = self.graph.hubs is not None
+
+        def _call(*args):
+            Xa, nbrs, lams, degs = args[:4]
+            g = PackedGraph(neighbors=nbrs, lambdas=lams, degrees=degs,
+                            hubs=args[4] if has_hubs else None)
+            return fn(Xa, g, args[-1], **kwargs)
+
+        specs = tuple(jax.ShapeDtypeStruct(a.shape, a.dtype) for a in parts)
+        exported = jax_export.export(jax.jit(_call))(
+            *specs, self._qspec(bucket))
+        return bytes(exported.serialize())
+
+    def prime(self, exported, kind: str, bucket: int, k: int):
+        """Close a deserialized module over the plane's device arrays and
+        compile it back into the single-donated-argument executable form
+        the engine's compile cache expects."""
+        parts = self.operands()
+        fn = jax.jit(lambda Qb: exported.call(*parts, Qb),
+                     donate_argnums=(0,) if self.donate else ())
+        return fn.lower(self._qspec(bucket)).compile()
+
+
+# ==========================================================================
+# mesh plane
+# ==========================================================================
+
+class MeshPlane:
+    """Database + per-shard sub-indexes over a device mesh; searches lowered
+    from the shard-mapped procedures (:mod:`repro.core.distributed`).
+
+    Owns the mesh, the DB/query PartitionSpecs, and (via the distributed
+    search bodies) the global-id offset logic.  ``parts=`` accepts prebuilt
+    device-resident ``(X, neighbors, lambdas, degrees, hubs)`` — how the
+    artifact loader restores a sharded index without rebuilding.
+    """
+
+    name = "mesh"
+
+    def __init__(self, X, cfg: ANNConfig, mesh, *, parts: tuple | None = None):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.core import distributed as D
+        self._D = D
+        self._P = P
+        self._NamedSharding = NamedSharding
+        self.cfg = cfg
+        self.mesh = mesh
+        self.backend = hotpath.resolve_backend(
+            getattr(cfg, "kernel_backend", "auto"))
+        self.gather_fused = getattr(cfg, "gather_fused", "auto")
+        self.donate = jax.default_backend() != "cpu"
+        d_ax = D.db_axes(mesh)
+        if not d_ax:
+            raise ValueError(
+                f"mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} has "
+                "no DB axis; name one of its axes 'data' (and optionally "
+                "'pod'/'model')")
+        self.n_db_shards = D.n_db_shards(mesh)
+        self.n_q_shards = D.n_query_shards(mesh)
+        self._db2 = NamedSharding(mesh, P(d_ax, None))   # [N, *] row-sharded
+        self._db1 = NamedSharding(mesh, P(d_ax))         # [N] row-sharded
+        self._repl = NamedSharding(mesh, P(None, None))
+        self._qsharded = NamedSharding(mesh, P(D.query_axes(mesh) or None,
+                                               None))
+        if parts is None:
+            Xs = jax.device_put(jnp.asarray(X), self._db2)
+            nbrs, lams, degs, hubs = D.make_build_fn(mesh, cfg)(Xs)
+            jax.block_until_ready(nbrs)
+        else:
+            Xs, nbrs, lams, degs, hubs = parts
+        self.X = Xs
+        self._parts = (nbrs, lams, degs, hubs)
+        self.graph = PackedGraph(
+            neighbors=nbrs, lambdas=lams, degrees=degs,
+            hubs=hubs if hubs.shape[0] else None)
+
+    # -- engine-facing geometry --------------------------------------------
+
+    def batch_multiple(self) -> int:
+        """Sharded large-batch search splits B over the model axis, so
+        buckets must divide evenly across the query shards."""
+        return self.n_q_shards
+
+    def topology(self) -> dict:
+        """Mesh shape persisted in the artifact manifest and compared on
+        load: ``n_db_shards`` gates sub-index reuse, the full axis map
+        (+ device count, via the fingerprint) gates AOT executable reuse."""
+        return {
+            "axes": {name: int(size) for name, size in
+                     zip(self.mesh.axis_names, self.mesh.devices.shape)},
+            "n_db_shards": self.n_db_shards,
+            "n_q_shards": self.n_q_shards,
+        }
+
+    def shardings(self) -> dict:
+        return {"X": self._db2, "neighbors": self._db2, "lambdas": self._db2,
+                "degrees": self._db1, "hubs": self._db1,
+                "query_small": self._repl, "query_large": self._qsharded}
+
+    def fingerprint(self) -> dict:
+        fp = _runtime_fingerprint(self)
+        fp["mesh_axes"] = self.topology()["axes"]
+        return fp
+
+    def query_sharding(self, kind: str):
+        """Small-regime queries are replicated (the t0 population splits
+        over `model` instead); large-regime queries shard over `model`."""
+        return self._repl if kind == "small" else self._qsharded
+
+    # -- lowering -----------------------------------------------------------
+
+    def _qspec(self, kind: str, bucket: int):
+        return jax.ShapeDtypeStruct((bucket, self.X.shape[1]), jnp.float32,
+                                    sharding=self.query_sharding(kind))
+
+    def compile(self, kind: str, bucket: int, k: int):
+        fn = self._D.make_search_fn(self.mesh, self.cfg, kind=kind, k=k)
+        ops = (self.X, *self._parts)
+        wrapped = jax.jit(lambda Qb: fn(*ops, Qb),
+                          in_shardings=(self.query_sharding(kind),),
+                          donate_argnums=(0,) if self.donate else ())
+        return wrapped.lower(self._qspec(kind, bucket)).compile()
+
+    # -- AOT persistence ----------------------------------------------------
+
+    def operands(self) -> tuple:
+        # hubs is always a dense array on the mesh plane (possibly empty) —
+        # the shard-mapped search takes the flat 5-tuple unconditionally
+        return (self.X, *self._parts)
+
+    def export(self, kind: str, bucket: int, k: int) -> bytes:
+        """jax.export of the shard-mapped computation.  The exported module
+        records the input shardings and logical device count; it can only
+        be re-bound on a mesh of identical shape (gated by the fingerprint
+        + topology check at load)."""
+        from jax import export as jax_export
+        fn = self._D.make_search_fn(self.mesh, self.cfg, kind=kind, k=k)
+        specs = tuple(
+            jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s)
+            for a, s in zip(self.operands(), self._operand_shardings()))
+        exported = jax_export.export(jax.jit(fn))(
+            *specs, self._qspec(kind, bucket))
+        return bytes(exported.serialize())
+
+    def prime(self, exported, kind: str, bucket: int, k: int):
+        ops = self.operands()
+        fn = jax.jit(lambda Qb: exported.call(*ops, Qb),
+                     in_shardings=(self.query_sharding(kind),),
+                     donate_argnums=(0,) if self.donate else ())
+        return fn.lower(self._qspec(kind, bucket)).compile()
+
+    def _operand_shardings(self) -> tuple:
+        return (self._db2, self._db2, self._db2, self._db1, self._db1)
+
+
+register_plane("single", lambda X, cfg, **kw: SingleDevicePlane(X, cfg, **kw))
+register_plane("mesh", lambda X, cfg, **kw: MeshPlane(X, cfg, **kw))

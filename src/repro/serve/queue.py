@@ -27,12 +27,20 @@ from concurrent.futures import Future
 import numpy as np
 
 
+class DeadlineExceeded(TimeoutError):
+    """The request's ``deadline_ms`` elapsed before it was dispatched.
+
+    Raised *through the future* (``Future.result()``), never out of
+    ``submit``; the request consumed no bucket slot and no device time."""
+
+
 @dataclasses.dataclass
 class _Request:
     Q: np.ndarray          # [b, d] float32
     k: int | None
     single: bool           # caller passed a bare vector -> return [k] rows
     future: Future
+    deadline: float | None = None   # absolute time.monotonic() cutoff
 
 
 @dataclasses.dataclass
@@ -47,6 +55,7 @@ class BatcherStats:
     n_queries: int = 0
     n_dispatches: int = 0
     bypass: int = 0                 # dispatches that took the QoS bypass lane
+    expired: int = 0                # requests failed with DeadlineExceeded
     # recent dispatch sizes only (bounded; the means use the counters)
     dispatch_sizes: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=8192))
@@ -63,6 +72,10 @@ class BatcherStats:
                 self.bypass += 1
             self.dispatch_sizes.append(n_queries)
 
+    def record_expired(self) -> None:
+        with self._lock:
+            self.expired += 1
+
     @property
     def mean_coalesced(self) -> float:
         with self._lock:
@@ -76,6 +89,7 @@ class BatcherStats:
                 "n_queries": self.n_queries,
                 "n_dispatches": self.n_dispatches,
                 "bypass": self.bypass,
+                "expired": self.expired,
                 "mean_coalesced":
                     self.n_queries / max(self.n_dispatches, 1),
                 "dispatch_sizes": tuple(self.dispatch_sizes),
@@ -100,6 +114,12 @@ class MicroBatcher:
     At most ``MAX_BYPASS_LANES`` bypass dispatches run concurrently; bulk
     submits beyond that fall back to the FIFO queue (bounded threads and
     bounded resident batches under bursty bulk traffic).
+
+    **QoS deadlines** — ``submit(..., deadline_ms=)`` bounds how long a
+    request may wait for dispatch; one that expires while queued fails
+    with :class:`DeadlineExceeded` instead of occupying a slot in a
+    coalesced batch (checked when the dispatcher pops it and again in the
+    close-drain sweep; counted in ``stats.expired``).
 
     ``close(drain=True)`` (the default, also the context-manager exit)
     serves everything already enqueued — including submits that raced the
@@ -136,12 +156,25 @@ class MicroBatcher:
 
     # -- client side --------------------------------------------------------
 
-    def submit(self, Q, *, k: int | None = None) -> Future:
+    def submit(self, Q, *, k: int | None = None,
+               deadline_ms: float | None = None) -> Future:
         """Enqueue one request; `Q` is a single vector [d] or a batch [b, d].
 
         Returns a Future resolving to (ids, dists) — shaped [k]/[b, k] to
         match the input rank.
+
+        ``deadline_ms`` (QoS): if the request is still waiting for dispatch
+        when the deadline elapses, its future fails with
+        :class:`DeadlineExceeded` instead of occupying a slot in a
+        coalesced batch — stale answers are never computed, and fresh
+        traffic isn't padded out by requests nobody is waiting for anymore.
+        The deadline gates *dispatch*, not completion: a request that makes
+        it into a device batch before the cutoff is answered normally even
+        if the answer lands after it.  Expired requests are counted in
+        ``stats.expired``.
         """
+        if deadline_ms is not None and deadline_ms <= 0:
+            raise ValueError(f"deadline_ms must be > 0, got {deadline_ms}")
         Q = np.asarray(Q, np.float32)
         single = Q.ndim == 1
         if single:
@@ -152,7 +185,9 @@ class MicroBatcher:
             # would be concatenated with in the dispatcher
             raise ValueError(f"Q must be [{d}] or [b, {d}], got {Q.shape}")
         fut: Future = Future()
-        req = _Request(Q=Q, k=k, single=single, future=fut)
+        req = _Request(Q=Q, k=k, single=single, future=fut,
+                       deadline=(None if deadline_ms is None
+                                 else time.monotonic() + deadline_ms / 1e3))
         with self._submit_lock:
             if self._closed:
                 raise RuntimeError("MicroBatcher is closed")
@@ -215,12 +250,20 @@ class MicroBatcher:
                 t.join()
             return
         while leftovers:
-            group = [leftovers.pop(0)]
+            req = leftovers.pop(0)
+            if self._expired(req):   # QoS: stale even at shutdown
+                self._expire(req)
+                continue
+            group = [req]
             total = group[0].Q.shape[0]
             while (leftovers and leftovers[0].k == group[0].k
                    and total < self.max_batch):
-                total += leftovers[0].Q.shape[0]
-                group.append(leftovers.pop(0))
+                nxt = leftovers.pop(0)
+                if self._expired(nxt):
+                    self._expire(nxt)
+                    continue
+                total += nxt.Q.shape[0]
+                group.append(nxt)
             self._serve_group(group)
         # bypass-lane dispatches run on their own threads; a close() must
         # not return while their futures are still unresolved (unbounded
@@ -237,16 +280,33 @@ class MicroBatcher:
 
     # -- dispatcher side ----------------------------------------------------
 
+    def _expired(self, req: _Request) -> bool:
+        return req.deadline is not None and time.monotonic() > req.deadline
+
+    def _expire(self, req: _Request) -> None:
+        """Fail one request whose deadline passed before dispatch."""
+        self.stats.record_expired()
+        req.future.set_exception(DeadlineExceeded(
+            "request expired before dispatch (deadline_ms elapsed while "
+            "queued)"))
+
     def _next_group(self) -> list | None:
         """Block for the first request, then coalesce same-k co-riders until
         `max_batch` queries are aboard or `max_wait` elapses.  Returns None
-        on shutdown."""
+        on shutdown.  Requests whose deadline passed while queued are
+        expired at pop time — they never occupy a slot in the group."""
         first = self._carry
         self._carry = None
-        if first is None:
+        while first is not None and self._expired(first):
+            self._expire(first)
+            first = None
+        while first is None:
             first = self._q.get()
             if first is None:
                 return None
+            if self._expired(first):
+                self._expire(first)
+                first = None
         group = [first]
         total = first.Q.shape[0]
         deadline = time.monotonic() + self.max_wait_s
@@ -261,6 +321,9 @@ class MicroBatcher:
             if nxt is None:  # shutdown after serving what we have
                 self._q.put(None)
                 break
+            if self._expired(nxt):
+                self._expire(nxt)
+                continue
             if nxt.k != first.k:
                 self._carry = nxt  # different compiled shape: next group
                 break

@@ -239,16 +239,28 @@ def test_fingerprint_mismatch_falls_back_to_recompile(ds, cfg, index,
     assert loaded.stats.compiles == 1          # recompiled, not primed
 
 
-def test_mesh_index_save_rejected(ds, cfg):
+def test_mesh_index_save_round_trips(ds, cfg, tmp_path):
+    """Sharded indexes now save/load as first-class artifacts (execution
+    planes): shard-major layout, topology in the manifest, AOT primed on a
+    topology match.  (Earlier revisions rejected mesh saves; the full
+    multi-shard matrix lives in tests/test_mesh_plane.py.)"""
     import jax
 
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     idx = Index.build(ds.X, dataclasses.replace(cfg, large_hops=24),
                       k=10, mesh=mesh)
-    ids, _ = idx.search(ds.Q[:3])      # mesh serving works via the facade
-    assert ids.shape == (3, 10)
-    with pytest.raises(ArtifactError, match="mesh"):
-        idx.save("/tmp/never-written")
+    ref = idx.search(ds.Q[:3])         # mesh serving works via the facade
+    assert ref[0].shape == (3, 10)
+    idx.warmup()
+    idx.save(tmp_path / "mx")
+    manifest = json.loads((tmp_path / "mx" / "manifest.json").read_text())
+    assert manifest["plane"] == "mesh"
+    assert manifest["topology"]["n_db_shards"] == 1
+    loaded = Index.load(tmp_path / "mx", mesh=mesh)
+    assert loaded.stats.aot_primed > 0
+    got = loaded.search(ds.Q[:3])
+    assert _bitwise_equal(ref, got)
+    assert loaded.stats.compiles == 0
 
 
 # ----------------------------------------------------------------------

@@ -1,0 +1,466 @@
+"""Execution planes: protocol, cross-shard merge oracle, mesh<->single
+bitwise parity, sharded artifact round-trips, regime calibration.
+
+Single-device-safe tests run in-process (1x1 meshes exercise the full mesh
+code path on one device); the genuinely multi-device acceptance tests run
+in subprocesses with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(device count is locked at jax init), mirroring ``tests/test_distributed``.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.ann import Index
+from repro.ann.dispatch import Calibration, calibrate, regime_for
+from repro.configs import get_arch
+from repro.core.distributed import merge_topk
+from repro.data.synthetic import make_clustered, recall_at_k
+from repro.serve.engine import ANNEngine
+from repro.serve.plane import (ExecutionPlane, MeshPlane, SingleDevicePlane,
+                               get_plane, planes)
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+INF = np.float32(3.4e38)
+
+
+def _run(code: str, devices: int = 8):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    return r.stdout
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_clustered(n=2000, d=16, n_queries=64, n_clusters=24,
+                          noise=0.6, seed=0)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return dataclasses.replace(get_arch("tsdg-paper"), k_graph=12,
+                               max_degree=16, lambda0=8, bridge_hubs=32,
+                               bridge_k=8, large_ef=48, large_hops=24,
+                               serve_buckets=(8, 32, 128))
+
+
+def _bitwise(a, b):
+    return (bool(np.array_equal(a[0], b[0]))
+            and bool(np.array_equal(np.asarray(a[1]).view(np.uint32),
+                                    np.asarray(b[1]).view(np.uint32))))
+
+
+# ----------------------------------------------------------------------
+# cross-shard dedup-top-k merge vs explicit-set oracle
+# ----------------------------------------------------------------------
+
+def _oracle_merge(all_ids, all_d, k):
+    """Python-set semantics: drop PAD/INF lanes, keep the best copy per
+    id, top-k ascending by (dist, id)."""
+    B = all_ids.shape[0]
+    out_i = np.full((B, k), -1, np.int32)
+    out_d = np.full((B, k), INF, np.float32)
+    for b in range(B):
+        best = {}
+        for ii, dd in zip(all_ids[b].tolist(), all_d[b].tolist()):
+            if ii < 0 or dd >= float(INF):
+                continue
+            if ii not in best or dd < best[ii]:
+                best[ii] = dd
+        top = sorted((dd, ii) for ii, dd in best.items())[:k]
+        for j, (dd, ii) in enumerate(top):
+            out_i[b, j] = ii
+            out_d[b, j] = np.float32(dd)
+    return out_i, out_d
+
+
+def _check_merge(all_ids, all_d, k):
+    got_i, got_d = merge_topk(np.asarray(all_ids, np.int32),
+                              np.asarray(all_d, np.float32), k)
+    ref_i, ref_d = _oracle_merge(np.asarray(all_ids, np.int32),
+                                 np.asarray(all_d, np.float32), k)
+    np.testing.assert_array_equal(np.asarray(got_i), ref_i)
+    np.testing.assert_array_equal(np.asarray(got_d).view(np.uint32),
+                                  ref_d.view(np.uint32))
+
+
+def test_merge_duplicate_ids_across_shards():
+    """The same global id surfacing from several shards/searches (bridge
+    splices, the small-regime t0 split) must occupy exactly one slot,
+    keeping the best copy."""
+    rng = np.random.default_rng(0)
+    B, shards, k = 5, 4, 8
+    ids = rng.integers(0, 40, size=(B, shards * k)).astype(np.int32)
+    d = rng.random((B, shards * k)).astype(np.float32)
+    # force exact duplicates with different dists AND with equal dists
+    ids[:, 1] = ids[:, 0]
+    d[:, 1] = d[:, 0] + 1.0
+    ids[:, 3] = ids[:, 2]
+    d[:, 3] = d[:, 2]
+    _check_merge(ids, d, k)
+
+
+def test_merge_all_pad_shards():
+    """Shards with zero valid candidates (tiny shards, λ-masked rows)
+    contribute nothing; rows short of k pad with (PAD_ID, INF)."""
+    rng = np.random.default_rng(1)
+    B, k = 4, 6
+    ids = np.full((B, 24), -1, np.int32)
+    d = np.full((B, 24), INF, np.float32)
+    # one shard of 6 entries is valid in row 0 and 2 only; row 3 all-PAD
+    for b in (0, 2):
+        ids[b, 6:10] = rng.integers(0, 100, 4)
+        d[b, 6:10] = rng.random(4).astype(np.float32)
+    _check_merge(ids, d, k)
+
+
+def test_merge_small_regime_t0_split():
+    """The small regime's layout: n_db x n_q candidate lists per query,
+    each a locally-deduped top-k, heavy overlap between the t0 columns
+    (they search the same sub-index)."""
+    rng = np.random.default_rng(2)
+    B, n_db, n_q, k = 3, 2, 4, 10
+    pool = []
+    for shard in range(n_db):
+        base = shard * 1000  # global offset: DB shards never collide
+        for _ in range(n_q):
+            ids = base + rng.integers(0, 30, size=(B, k)).astype(np.int32)
+            d = (ids % 97).astype(np.float32) / 97.0  # id-determined dist
+            pool.append((ids, d))
+    all_ids = np.concatenate([p[0] for p in pool], axis=1)
+    all_d = np.concatenate([p[1] for p in pool], axis=1)
+    _check_merge(all_ids, all_d, k)
+
+
+def test_merge_fuzz_roundtrip():
+    rng = np.random.default_rng(3)
+    for _ in range(10):
+        B = int(rng.integers(1, 6))
+        n = int(rng.integers(1, 8)) * 5
+        k = int(rng.integers(1, 12))
+        ids = rng.integers(-1, 25, size=(B, n)).astype(np.int32)
+        d = rng.random((B, n)).astype(np.float32)
+        d[ids < 0] = INF
+        _check_merge(ids, d, k)
+
+
+# ----------------------------------------------------------------------
+# plane protocol + registry
+# ----------------------------------------------------------------------
+
+def test_planes_registered():
+    assert {"single", "mesh"} <= set(planes())
+    assert get_plane("single") is not None
+    with pytest.raises(KeyError, match="unknown execution plane"):
+        get_plane("pod")
+
+
+def test_single_plane_protocol(ds, cfg):
+    plane = SingleDevicePlane(ds.X, cfg)
+    assert isinstance(plane, ExecutionPlane)
+    assert plane.name == "single"
+    assert plane.batch_multiple() == 1
+    assert plane.topology() is None
+    assert plane.shardings() == {}
+    fp = plane.fingerprint()
+    assert fp["plane"] == "single" and fp["kernel_backend"] == plane.backend
+    ops = plane.operands()
+    assert ops[0] is plane.X and len(ops) in (4, 5)
+    exe = plane.compile("small", 8, 10)
+    ids, dists = exe(np.zeros((8, 16), np.float32))
+    assert ids.shape == (8, 10)
+
+
+def test_mesh_plane_protocol_1x1(ds, cfg):
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    plane = MeshPlane(ds.X, cfg, mesh)
+    assert isinstance(plane, ExecutionPlane)
+    assert plane.name == "mesh"
+    assert plane.batch_multiple() == 1
+    topo = plane.topology()
+    assert topo["n_db_shards"] == 1 and topo["axes"] == {"data": 1,
+                                                         "model": 1}
+    assert plane.fingerprint()["mesh_axes"] == topo["axes"]
+    sh = plane.shardings()
+    assert {"X", "neighbors", "query_small", "query_large"} <= set(sh)
+    exe = plane.compile("large", 32, 10)
+    ids, _ = exe(np.zeros((32, 16), np.float32))
+    assert ids.shape == (32, 10)
+
+
+def test_mesh_plane_requires_db_axis(ds, cfg):
+    mesh = jax.make_mesh((1,), ("model",))
+    with pytest.raises(ValueError, match="no DB axis"):
+        MeshPlane(ds.X, cfg, mesh)
+
+
+def test_engine_accepts_prebuilt_plane(ds, cfg):
+    plane = SingleDevicePlane(ds.X, cfg)
+    eng = ANNEngine(None, cfg, k=10, plane=plane)
+    assert eng.plane is plane and eng.X is plane.X
+    ids, _ = eng.query(ds.Q[:3])
+    assert ids.shape == (3, 10)
+    with pytest.raises(ValueError, match="plane= already fixes"):
+        ANNEngine(ds.X, cfg, k=10, plane=plane,
+                  mesh=jax.make_mesh((1, 1), ("data", "model")))
+
+
+def test_engine_same_cache_and_stats_surface_over_mesh_plane(ds, cfg):
+    """The engine machinery (bucket ladder, compile cache, stats v2) must
+    be identical over a mesh plane — that is the point of the refactor."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    eng = ANNEngine(ds.X, cfg, k=10, mesh=mesh)
+    for B in (3, 33, 3, 33):
+        ids, _ = eng.query(ds.Q[:B])
+        assert ids.shape == (B, 10)
+    assert eng.stats.compiles == 2
+    assert eng.stats.bucket_hits == 2
+    st = eng.stats.snapshot()
+    assert st["small_batches"] == 2 and st["large_batches"] == 2
+    p = eng.stats.per_regime["large"].percentiles()
+    assert p["p50"] <= p["p99"]
+
+
+class _MultiplePlane(SingleDevicePlane):
+    """Single-device plane reporting a non-trivial batch multiple — the
+    bucket geometry of a 3-query-shard mesh without needing 3 devices."""
+
+    def batch_multiple(self) -> int:
+        return 3
+
+
+def test_warmup_covers_rounded_buckets(ds, cfg):
+    """Regression: with a batch multiple that does not divide the ladder,
+    probe batches must stay at the RAW ladder step (a rounded probe batch
+    falls through to the next rung) while the recorded bucket is the
+    rounded one a request actually compiles — so warmup covers every
+    reachable pair and a post-warmup stream never compiles."""
+    small = dataclasses.replace(cfg, serve_buckets=(8, 32), large_hops=8)
+    plane = _MultiplePlane(ds.X, small)
+    eng = ANNEngine(None, small, k=10, plane=plane)
+    assert eng.bucket_for(8) == 9 and eng.bucket_for(9) == 33
+    for kind, bucket, probe in eng.warmup_probes():
+        assert bucket % 3 == 0
+        assert eng.bucket_for(probe) == bucket   # probe maps to its label
+    n = eng.warmup()
+    assert n == eng.stats.compiles
+    for B in (1, 8, 9, 20, 32):
+        eng.query(ds.Q[:B])
+    assert eng.stats.compiles == n               # fully pre-compiled
+
+
+# ----------------------------------------------------------------------
+# regime calibration
+# ----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def fast_cfg(cfg):
+    return dataclasses.replace(cfg, large_hops=8, small_hops=3,
+                               small_t0=8, serve_buckets=(8, 32))
+
+
+def test_calibrate_returns_fit(ds, fast_cfg):
+    plane = SingleDevicePlane(ds.X, fast_cfg)
+    cal = calibrate(plane, fast_cfg, k=10, probe_batches=(4, 16), repeats=1)
+    assert cal.threshold > 0 and np.isfinite(cal.threshold)
+    assert cal.d == 16 and cal.cores >= 1
+    assert set(cal.probes) == {"small", "large"}
+    assert all(t > 0 for _, t in cal.probes["small"])
+    if not cal.degenerate:
+        # the paper's (a·cores + b)/d form reproduces the division point
+        assert (cal.a * cal.cores + cal.b) / cal.d == pytest.approx(
+            cal.crossover_batch)
+    rt = Calibration.from_manifest(
+        json.loads(json.dumps(cal.to_manifest())))
+    assert rt.threshold == cal.threshold and rt.probes == cal.probes
+
+
+def test_probe_calibration_at_engine_init(ds, fast_cfg):
+    cfg_p = dataclasses.replace(fast_cfg, regime_calibration="probe")
+    eng = ANNEngine(ds.X, cfg_p, k=10)
+    assert eng.calibration is not None
+    assert eng.threshold == eng.calibration.threshold
+    # dispatch follows the fitted threshold, via the shared rule
+    for b in (1, 4, 40, 400):
+        assert eng.regime(b) == regime_for(cfg_p, b,
+                                           threshold=eng.threshold)
+
+
+def test_threshold_override_rewires_dispatch(ds, fast_cfg):
+    plane = SingleDevicePlane(ds.X, fast_cfg)
+    eng_lo = ANNEngine(None, fast_cfg, k=10, plane=plane, threshold=1.0)
+    assert eng_lo.regime(1) == "large"
+    eng_hi = ANNEngine(None, fast_cfg, k=10, plane=plane, threshold=1e9)
+    assert eng_hi.regime(5000) == "small"
+
+
+def test_calibrated_threshold_cached_in_artifact(ds, fast_cfg, tmp_path):
+    cfg_p = dataclasses.replace(fast_cfg, regime_calibration="probe")
+    idx = Index.build(ds.X, cfg_p, k=10)
+    idx.save(tmp_path / "cal", aot=False)
+    man = json.loads((tmp_path / "cal" / "manifest.json").read_text())
+    assert man["calibrated_threshold"] == idx.engine.threshold
+    loaded = Index.load(tmp_path / "cal")
+    # restored from the manifest — no re-probe at load
+    assert loaded.engine.threshold == idx.engine.threshold
+    assert loaded.calibration is None
+
+
+def test_bad_calibration_knob_rejected():
+    from repro.configs import ANNConfig
+
+    with pytest.raises(ValueError, match="regime_calibration"):
+        ANNConfig(regime_calibration="probs")
+
+
+# ----------------------------------------------------------------------
+# sharded artifact round-trip (1x1 mesh: full code path on one device;
+# the multi-shard matrix runs in the 8-device subprocess tests below)
+# ----------------------------------------------------------------------
+
+def test_mesh_roundtrip_1x1_zero_compiles(ds, cfg, tmp_path):
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    idx = Index.build(ds.X, cfg, k=10, mesh=mesh)
+    idx.warmup()
+    ref_s = idx.search(ds.Q[:5])
+    ref_l = idx.search(ds.Q)
+    idx.save(tmp_path / "mx", extra_ks=[5])
+    loaded = Index.load(tmp_path / "mx", mesh=mesh)
+    assert loaded.stats.aot_primed > 0
+    assert _bitwise(ref_s, loaded.search(ds.Q[:5]))
+    assert _bitwise(ref_l, loaded.search(ds.Q))
+    ids5, _ = loaded.search(ds.Q[:5], k=5)     # extra_ks primed too
+    assert ids5.shape == (5, 5)
+    assert loaded.stats.compiles == 0
+    assert loaded.warmup() == 0
+    assert loaded.stats.compiles == 0
+
+
+def test_mesh_artifact_without_mesh_rebuilds_single(ds, cfg, tmp_path):
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    Index.build(ds.X, cfg, k=10, mesh=mesh).save(tmp_path / "mx", aot=False)
+    with pytest.warns(UserWarning, match="without mesh="):
+        loaded = Index.load(tmp_path / "mx")
+    assert loaded.plane.name == "single"
+    ids, _ = loaded.search(ds.Q)
+    assert recall_at_k(ids, ds.gt, 10) > 0.8
+
+
+def test_single_artifact_onto_mesh_reshards(ds, cfg, tmp_path):
+    Index.build(ds.X, cfg, k=10).save(tmp_path / "sx", aot=False)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with pytest.warns(UserWarning, match="resharding"):
+        loaded = Index.load(tmp_path / "sx", mesh=mesh)
+    assert loaded.plane.name == "mesh"
+    ids, _ = loaded.search(ds.Q)
+    assert recall_at_k(ids, ds.gt, 10) > 0.8
+
+
+def test_mesh_fingerprint_mismatch_recompiles(ds, cfg, tmp_path):
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    idx = Index.build(ds.X, cfg, k=10, mesh=mesh)
+    idx.warmup()
+    ref = idx.search(ds.Q[:5])
+    idx.save(tmp_path / "mx")
+    mpath = tmp_path / "mx" / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    manifest["fingerprint"]["jax"] = "0.0.0-other"
+    mpath.write_text(json.dumps(manifest))
+    with pytest.warns(UserWarning, match="fingerprint mismatch"):
+        loaded = Index.load(tmp_path / "mx", mesh=mesh)
+    assert loaded.stats.aot_primed == 0
+    got = loaded.search(ds.Q[:5])
+    assert _bitwise(ref, got)
+    assert loaded.stats.compiles == 1          # recompiled, not primed
+
+
+def test_extra_ks_validated_before_write(ds, cfg, tmp_path):
+    idx = Index.build(ds.X, cfg, k=10)
+    with pytest.raises(ValueError, match="exceeds large-batch"):
+        idx.save(tmp_path / "bad", extra_ks=[cfg.large_ef + 1])
+    assert not (tmp_path / "bad").exists() or \
+        not list((tmp_path / "bad").iterdir())
+
+
+# ----------------------------------------------------------------------
+# 8-device acceptance (subprocess: device count locked at jax init)
+# ----------------------------------------------------------------------
+
+_SETUP = """
+import dataclasses, numpy as np, jax
+from repro.ann import Index
+from repro.configs import get_arch
+from repro.data.synthetic import make_clustered, recall_at_k
+ds = make_clustered(n=2048, d=16, n_queries=64, n_clusters=24, noise=0.6,
+                    seed=0)
+cfg = dataclasses.replace(get_arch('tsdg-paper'), k_graph=12, max_degree=16,
+                          lambda0=8, bridge_hubs=32, bridge_k=8, large_ef=48,
+                          large_hops=24, serve_buckets=(8, 32, 128))
+def bitwise(a, b):
+    return (np.array_equal(a[0], b[0])
+            and np.array_equal(np.asarray(a[1]).view(np.uint32),
+                               np.asarray(b[1]).view(np.uint32)))
+"""
+
+
+def test_mesh_plane_bitwise_matches_single_plane():
+    """THE plane acceptance criterion: on a mesh with one DB shard, the
+    model-axis parallelism (query fan-out in the large regime, the t0
+    population split in the small regime) is bit-invisible — the mesh
+    plane answers exactly like the single-device plane, both regimes."""
+    out = _run(_SETUP + """
+single = Index.build(ds.X, cfg, k=10)
+for nm in (2, 4):
+    mesh = jax.make_mesh((1, nm), ('data', 'model'))
+    mi = Index.build(ds.X, cfg, k=10, mesh=mesh)
+    for B, regime in ((5, 'small'), (64, 'large')):
+        assert mi.regime(B) == regime
+        got = mi.search(ds.Q[:B]); ref = single.search(ds.Q[:B])
+        assert bitwise(got, ref), (nm, B, regime)
+print('PARITY OK')
+""")
+    assert "PARITY OK" in out
+
+
+def test_sharded_roundtrip_8dev_zero_compiles(tmp_path):
+    """THE artifact acceptance criterion: a 4x2-sharded index round-trips
+    build -> save -> load -> serve with ServeStats.compiles == 0 and
+    bitwise-identical answers; a topology-mismatched mesh falls back to
+    gather-and-reshard with a warning."""
+    d = str(tmp_path / "ix")
+    out = _run(_SETUP + f"""
+import warnings
+mesh = jax.make_mesh((4, 2), ('data', 'model'))
+idx = Index.build(ds.X, cfg, k=10, mesh=mesh)
+idx.warmup()
+ref_s = idx.search(ds.Q[:5]); ref_l = idx.search(ds.Q)
+idx.save({d!r}, extra_ks=[5])
+loaded = Index.load({d!r}, mesh=mesh)
+assert loaded.stats.aot_primed > 0
+assert bitwise(ref_s, loaded.search(ds.Q[:5]))
+assert bitwise(ref_l, loaded.search(ds.Q))
+ids5, _ = loaded.search(ds.Q[:5], k=5)
+assert ids5.shape == (5, 5)
+assert loaded.stats.compiles == 0, loaded.stats.compiles
+assert loaded.warmup() == 0 and loaded.stats.compiles == 0
+r = recall_at_k(loaded.search(ds.Q)[0], ds.gt, 10)
+assert r > 0.8, r
+mesh2 = jax.make_mesh((2,), ('data',))
+with warnings.catch_warnings(record=True) as w:
+    warnings.simplefilter('always')
+    re2 = Index.load({d!r}, mesh=mesh2)
+assert any('topology mismatch' in str(x.message) for x in w)
+r2 = recall_at_k(re2.search(ds.Q)[0], ds.gt, 10)
+assert r2 > 0.8, r2
+print('ROUNDTRIP OK')
+""")
+    assert "ROUNDTRIP OK" in out

@@ -1,0 +1,142 @@
+"""Micro-batcher QoS deadlines: expired requests fail with DeadlineExceeded
+instead of occupying a coalesced-batch slot (ROADMAP queue-QoS item)."""
+import dataclasses
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.serve.queue import DeadlineExceeded, MicroBatcher
+
+
+class _StubEngine:
+    """Engine stand-in with a controllable per-dispatch delay."""
+
+    def __init__(self, d: int = 4, delay_s: float = 0.0):
+        self.X = np.zeros((16, d), np.float32)
+        self.cfg = dataclasses.replace(
+            get_arch("tsdg-paper"), queue_max_wait_ms=5.0,
+            queue_max_batch=64)
+        self.delay_s = delay_s
+        self.served: list = []
+        self._lock = threading.Lock()
+
+    def query(self, Q, k=None):
+        with self._lock:
+            self.served.append(Q.shape[0])
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        k = 3 if k is None else k
+        B = Q.shape[0]
+        return (np.zeros((B, k), np.int32), np.zeros((B, k), np.float32))
+
+
+def test_deadline_exceeded_while_queued_behind_slow_dispatch():
+    """A request whose deadline elapses while the dispatcher is busy must
+    fail with DeadlineExceeded, be counted in stats.expired, and never
+    reach the engine."""
+    eng = _StubEngine(delay_s=0.5)
+    mb = MicroBatcher(eng, max_wait_ms=1, max_batch=4)
+    try:
+        f1 = mb.submit(np.zeros(4, np.float32))          # occupies 0.5s
+        time.sleep(0.05)                                 # dispatcher has it
+        f2 = mb.submit(np.zeros(4, np.float32), deadline_ms=100.0)
+        f3 = mb.submit(np.zeros(4, np.float32))          # no deadline
+        with pytest.raises(DeadlineExceeded):
+            f2.result(timeout=30)
+        assert f1.result(timeout=30)[0].shape == (3,)
+        assert f3.result(timeout=30)[0].shape == (3,)    # still served
+    finally:
+        mb.close()
+    snap = mb.stats.snapshot()
+    assert snap["expired"] == 1
+    # n_requests counts DISPATCHED requests; the expired one never
+    # occupied a slot and its rows never hit the engine
+    assert snap["n_requests"] == 2
+    assert sum(eng.served) == 2
+
+
+def test_deadline_not_reached_serves_normally():
+    eng = _StubEngine()
+    with MicroBatcher(eng, max_wait_ms=1, max_batch=8) as mb:
+        f = mb.submit(np.zeros(4, np.float32), deadline_ms=60_000.0)
+        ids, dists = f.result(timeout=30)
+    assert ids.shape == (3,) and dists.shape == (3,)
+    assert mb.stats.expired == 0
+
+
+def test_deadline_checked_in_close_drain():
+    """Requests still queued at close(drain=True) are expired, not served,
+    once their deadline passed — stale answers are never computed."""
+    from concurrent.futures import Future
+
+    from repro.serve.queue import _Request
+
+    eng = _StubEngine(delay_s=0.4)
+    mb = MicroBatcher(eng, max_wait_ms=1, max_batch=4)
+    f1 = mb.submit(np.zeros(4, np.float32))   # occupy the dispatcher
+    time.sleep(0.05)
+    closer = threading.Thread(target=mb.close)
+    closer.start()
+    time.sleep(0.05)                          # sentinel enqueued by now
+    expired = _Request(Q=np.zeros((1, 4), np.float32), k=None, single=False,
+                       future=Future(), deadline=time.monotonic() - 1.0)
+    live = _Request(Q=np.zeros((2, 4), np.float32), k=None, single=False,
+                    future=Future(), deadline=time.monotonic() + 60.0)
+    mb._q.put(expired)                        # race: behind the sentinel
+    mb._q.put(live)
+    closer.join(timeout=60)
+    assert f1.result(timeout=30)[0].shape == (3,)
+    with pytest.raises(DeadlineExceeded):
+        expired.future.result(timeout=30)
+    assert live.future.result(timeout=30)[0].shape == (2, 3)
+    assert mb.stats.expired == 1
+
+
+def test_deadline_validation():
+    eng = _StubEngine()
+    with MicroBatcher(eng, max_wait_ms=1, max_batch=8) as mb:
+        with pytest.raises(ValueError, match="deadline_ms"):
+            mb.submit(np.zeros(4, np.float32), deadline_ms=0.0)
+        with pytest.raises(ValueError, match="deadline_ms"):
+            mb.submit(np.zeros(4, np.float32), deadline_ms=-5.0)
+
+
+def test_expired_in_snapshot_consistency():
+    """expired is part of the locked snapshot like every other counter."""
+    eng = _StubEngine(delay_s=0.3)
+    mb = MicroBatcher(eng, max_wait_ms=1, max_batch=4)
+    try:
+        mb.submit(np.zeros(4, np.float32))
+        time.sleep(0.05)
+        futs = [mb.submit(np.zeros(4, np.float32), deadline_ms=50.0)
+                for _ in range(3)]
+        for f in futs:
+            with pytest.raises(DeadlineExceeded):
+                f.result(timeout=30)
+    finally:
+        mb.close()
+    snap = mb.stats.snapshot()
+    assert snap["expired"] == 3
+    assert snap["n_requests"] == 1      # only the first was dispatched
+
+
+def test_deadline_on_real_engine_index_serve():
+    """deadline_ms threads through Index.serve() on a real engine."""
+    from repro.ann import Index
+    from repro.data.synthetic import make_clustered
+
+    ds = make_clustered(n=400, d=8, n_queries=8, n_clusters=8, noise=0.5,
+                        seed=1)
+    cfg = dataclasses.replace(get_arch("tsdg-paper"), k_graph=8,
+                              max_degree=8, bridge_hubs=0, large_hops=8,
+                              serve_buckets=(8,))
+    index = Index.build(ds.X, cfg, k=5)
+    index.warmup()
+    with index.serve(max_wait_ms=1.0, max_batch=8) as mb:
+        f = mb.submit(ds.Q[0], deadline_ms=60_000.0)
+        ids, _ = f.result(timeout=120)
+    assert ids.shape == (5,)
+    assert mb.stats.expired == 0
