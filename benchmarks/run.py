@@ -355,6 +355,76 @@ def serve_aot_reload():
         shutil.rmtree(td, ignore_errors=True)
 
 
+def streaming_ingest():
+    """Streaming mutability (DESIGN.md §7) vs the frozen baseline.
+
+    Four serving phases over the same corpus and query stream, each row
+    reporting steady QPS + p50/p99 batch latency:
+
+    * ``frozen``  — the untouched generation-0 index (baseline);
+    * ``add_heavy``    — interleaved add / search (delta brute-force fused
+      into every answer);
+    * ``delete_heavy`` — interleaved delete / search (tombstone mask
+      threaded through the kernels);
+    * ``compact_concurrent`` — searches racing a background compaction,
+      timed across the generation hot-swap (the row's derived field shows
+      compiles across the swap — 0 when shapes are preserved).
+    """
+    import threading
+
+    from repro.ann import Index
+
+    ds = _dataset(n=2000 if QUICK else 6000, nq=128)
+    cfg = _cfg(serve_buckets=(8, 32), large_hops=16 if QUICK else 32,
+               delta_min_cap=256)
+    B, reps = 8, (6 if QUICK else 20)
+    rng = np.random.default_rng(0)
+
+    def _phase(index, mutate=None):
+        lat = []
+        index.search(ds.Q[:B])                       # warm / compile
+        for r in range(reps):
+            if mutate is not None:
+                mutate(r)
+            sel = rng.integers(0, len(ds.Q), B)
+            t0 = time.perf_counter()
+            index.search(ds.Q[sel])
+            lat.append(time.perf_counter() - t0)
+        lat = np.asarray(lat)
+        qps = B / max(float(lat.mean()), 1e-9)
+        return qps, float(np.percentile(lat, 50)) * 1e3, \
+            float(np.percentile(lat, 99)) * 1e3
+
+    index = Index.build(ds.X, cfg, k=10)
+    qps, p50, p99 = _phase(index)
+    emit("streaming/frozen_baseline", 1e6 / qps,
+         f"qps={qps:.0f};p50_ms={p50:.2f};p99_ms={p99:.2f}")
+
+    qps, p50, p99 = _phase(index, mutate=lambda r: index.add(
+        ds.Q[rng.integers(0, len(ds.Q), 4)]))
+    emit("streaming/add_heavy", 1e6 / qps,
+         f"qps={qps:.0f};p50_ms={p50:.2f};p99_ms={p99:.2f};"
+         f"n_added={index.stats.n_added}")
+
+    added = index.stats.n_added
+    victims = iter(range(ds.X.shape[0], ds.X.shape[0] + added))
+    qps, p50, p99 = _phase(index, mutate=lambda r: index.delete(
+        [next(victims), next(victims)]))
+    emit("streaming/delete_heavy", 1e6 / qps,
+         f"qps={qps:.0f};p50_ms={p50:.2f};p99_ms={p99:.2f};"
+         f"n_deleted={index.stats.n_deleted}")
+
+    compiles_before = index.stats.compiles
+    bg = threading.Thread(target=index.compact, daemon=True)
+    bg.start()
+    qps, p50, p99 = _phase(index)
+    bg.join(timeout=600)
+    emit("streaming/compact_concurrent", 1e6 / qps,
+         f"qps={qps:.0f};p50_ms={p50:.2f};p99_ms={p99:.2f};"
+         f"generation={index.stats.generation};"
+         f"swap_compiles={index.stats.compiles - compiles_before}")
+
+
 # ==========================================================================
 # mesh execution plane: single-device vs 2/4/8-shard host meshes
 # ==========================================================================
@@ -608,6 +678,7 @@ def roofline_table():
 BENCHES = [table2_diversification_time, fig4_cpu_search, fig5_degree_sweep,
            fig6_small_batch, fig10_large_batch, ablation_alpha_lambda,
            serve_engine_mixed, serve_bucketed_vs_raw, serve_aot_reload,
+           streaming_ingest,
            mesh_serve, mesh_aot_reload,
            kernel_micro,
            hotpath_micro, search_backend_compare, roofline_table]

@@ -31,14 +31,21 @@ quick_tier() {
     echo "== facade: save/load round-trip, AOT priming, QoS bypass =="
     python -m pytest -q tests/test_ann_facade.py tests/test_queue_qos.py
 
+    echo "== streaming mutability: add/delete/compact lifecycle =="
+    python -m pytest -q tests/test_streaming.py
+
     echo "== quick test tier =="
     python -m pytest -q -m "not slow" --ignore=tests/test_distributed.py \
         --ignore=tests/test_hotpath.py --ignore=tests/test_search_dedup.py \
         --ignore=tests/test_ann_facade.py --ignore=tests/test_queue_qos.py \
+        --ignore=tests/test_streaming.py \
         --ignore=tests/test_mesh_plane.py
 
     echo "== serving smoke bench (incl. serve/aot_reload rows) =="
     REPRO_BENCH_QUICK=1 REPRO_BENCH_ONLY=serve python -m benchmarks.run
+
+    echo "== streaming ingest bench (frozen vs add/delete/compact rows) =="
+    REPRO_BENCH_QUICK=1 REPRO_BENCH_ONLY=streaming python -m benchmarks.run
 
     echo "== hotpath micro bench (fused vs gather-then-block rows) =="
     REPRO_BENCH_QUICK=1 REPRO_BENCH_ONLY=hotpath python -m benchmarks.run
@@ -53,6 +60,9 @@ quick_tier() {
 
     echo "== examples smoke: quickstart (canonical facade demo) =="
     REPRO_QUICKSTART_N=4000 python examples/quickstart.py
+
+    echo "== examples smoke: streaming ingest (add/delete/compact demo) =="
+    REPRO_STREAMING_N=3000 python examples/streaming_ingest.py
 }
 
 sharded_tier() {

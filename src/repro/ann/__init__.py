@@ -32,6 +32,10 @@ _LAZY = {
     "FORMAT_VERSION": ("repro.ann.artifact", "FORMAT_VERSION"),
     "save_index": ("repro.ann.artifact", "save_index"),
     "load_index": ("repro.ann.artifact", "load_index"),
+    "StreamState": ("repro.ann.delta", "StreamState"),
+    "DeltaShard": ("repro.ann.delta", "DeltaShard"),
+    "compact": ("repro.ann.compaction", "compact"),
+    "effective_corpus": ("repro.ann.compaction", "effective_corpus"),
 }
 
 __all__ = ["regime_for", *_LAZY]

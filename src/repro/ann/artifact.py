@@ -12,9 +12,20 @@ Layout (a directory)::
                           slice of X and its OWN sub-index, one file +
                           checksum per shard (shards stream/verify
                           independently at pod scale)
+      streaming.npz       format v3, only when un-compacted mutations exist:
+                          tombstone bitmap (np.packbits of the base alive
+                          mask) + the delta shard's assigned rows/alive
+                          flags (DESIGN.md §7) — capacity padding is NOT
+                          persisted, load re-pads
       aot/<regime>_b<bucket>_k<k>.jaxexp
                           jax.export-serialized serving modules, one per
                           saved (regime, bucket, k) cache entry
+
+Format v3 adds the ``generation`` manifest field (completed compactions)
+and the optional ``streaming`` payload; v1/v2 artifacts still load (they
+are simply frozen indexes at generation 0).  AOT blobs persist only the
+frozen serving form — streaming executables are cheap shape-variants
+recompiled on demand after a load restores the mutation state.
 
 The AOT blobs are exported with the database and graph as *runtime
 arguments* (never embedded constants), so each is a few tens of KB
@@ -56,12 +67,14 @@ import numpy as np
 from repro.configs.base import ANNConfig
 from repro.core.diversify import PackedGraph
 
-FORMAT_VERSION = 2
-# still-readable older revisions (1 = pre-plane single-device layout)
-READ_VERSIONS = (1, 2)
+FORMAT_VERSION = 3
+# still-readable older revisions (1 = pre-plane single-device layout,
+# 2 = pre-streaming: no generation counter / streaming payload)
+READ_VERSIONS = (1, 2, 3)
 MAGIC = "repro-ann-index"
 _MANIFEST = "manifest.json"
 _ARRAYS = "arrays.npz"
+_STREAMING = "streaming.npz"
 _GRAPH_KEYS = ("neighbors", "lambdas", "degrees")
 # fields that must match for persisted executables to be trusted
 _FP_KEYS = ("jax", "platform", "device_kind", "kernel_backend",
@@ -169,7 +182,22 @@ def save_index(index, path, *, aot: bool = True, extra_ks=()) -> Path:
         "k": index.k,
         "fingerprint": plane.fingerprint(),
         "calibrated_threshold": eng.threshold,
+        "generation": int(eng.stats.generation),
     }
+
+    # un-compacted mutations (DESIGN.md §7): tombstone bitmap + the delta
+    # shard's assigned rows.  Saved OUTSIDE arrays.npz so the base payload
+    # stays byte-stable across pure-streaming saves of one generation.
+    stream = getattr(eng, "stream", None)
+    if stream is not None and stream.dirty:
+        count = stream.delta.count
+        np.savez(path / _STREAMING,
+                 alive_bits=np.packbits(stream.base_alive),
+                 n_base=np.int64(stream.n_base),
+                 delta_X=stream.delta.X[:count],
+                 delta_alive=stream.delta.alive[:count])
+        manifest["streaming"] = {"file": _STREAMING,
+                                 "sha256": _sha256(path / _STREAMING)}
 
     if plane.name == "mesh":
         manifest["topology"] = plane.topology()
@@ -273,6 +301,25 @@ def _prime_aot(index, path: Path, manifest: dict) -> None:
         eng.prime_executable(e["kind"], e["bucket"], e["k"], exe)
 
 
+def _finish_load(index, path: Path, manifest: dict):
+    """Apply the format-v3 streaming state to a restored index: the saved
+    generation counter and (when the artifact was saved mid-epoch) the
+    tombstone bitmap + delta shard.  v1/v2 manifests carry neither — they
+    load as frozen generation-0 indexes.  Runs on EVERY load path,
+    including the gather/reshard fallbacks: those rebuild over the same
+    base corpus in the same row order, so the saved ids stay valid."""
+    eng = index.engine
+    eng.stats.generation = int(manifest.get("generation", 0))
+    entry = manifest.get("streaming")
+    if entry:
+        arrs = _verified_npz(path, entry)
+        n_base = int(arrs["n_base"])
+        base_alive = np.unpackbits(
+            arrs["alive_bits"], count=n_base).astype(bool)
+        eng.restore_stream(base_alive, arrs["delta_X"], arrs["delta_alive"])
+    return index
+
+
 def load_index(index_cls, path, *, mesh=None):
     """Restore an `Index` saved by :func:`save_index`; pass ``mesh=`` to
     restore a sharded artifact onto a compatible mesh.  See the module
@@ -313,10 +360,12 @@ def load_index(index_cls, path, *, mesh=None):
                 "the database is re-laid over the mesh and shard-local "
                 "sub-indexes are REBUILT (the saved graph spans the whole "
                 "database); AOT cache skipped", stacklevel=3)
-            return index_cls(X, cfg, k=k, mesh=mesh, threshold=threshold)
+            return _finish_load(
+                index_cls(X, cfg, k=k, mesh=mesh, threshold=threshold),
+                path, manifest)
         index = index_cls(X, cfg, k=k, graph=graph, threshold=threshold)
         _prime_aot(index, path, manifest)
-        return index
+        return _finish_load(index, path, manifest)
 
     # ---- sharded (mesh) artifact -----------------------------------------
     shard_entries = manifest["arrays"]
@@ -332,7 +381,9 @@ def load_index(index_cls, path, *, mesh=None):
             "single-device index (per-shard sub-indexes only search their "
             "own slice); pass mesh= to restore the sharded layout",
             stacklevel=3)
-        return index_cls(full["X"], cfg, k=k, threshold=threshold)
+        return _finish_load(
+            index_cls(full["X"], cfg, k=k, threshold=threshold),
+            path, manifest)
 
     from repro.core import distributed as D
     from repro.serve.plane import MeshPlane
@@ -344,8 +395,9 @@ def load_index(index_cls, path, *, mesh=None):
             f"{D.n_db_shards(mesh)} — gathering and resharding (sub-"
             "indexes REBUILT for the new shard cut); AOT cache skipped",
             stacklevel=3)
-        return index_cls(full["X"], cfg, k=k, mesh=mesh,
-                         threshold=threshold)
+        return _finish_load(
+            index_cls(full["X"], cfg, k=k, mesh=mesh, threshold=threshold),
+            path, manifest)
 
     # compatible shard cut: re-bind the saved sub-indexes, no rebuild.
     # concatenated row slices are exactly the shard_map build layout, so a
@@ -361,7 +413,7 @@ def load_index(index_cls, path, *, mesh=None):
     plane = MeshPlane(None, cfg, mesh, parts=parts)
     index = index_cls(None, cfg, k=k, plane=plane, threshold=threshold)
     _prime_aot(index, path, manifest)
-    return index
+    return _finish_load(index, path, manifest)
 
 
 def _mesh_shardings(mesh) -> dict:

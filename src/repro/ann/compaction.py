@@ -1,0 +1,94 @@
+"""Compaction: fold streamed mutations back into a fresh index generation.
+
+DESIGN.md §7.  Streaming writes (:mod:`repro.ann.delta`) keep the built
+graph frozen and accumulate in a tombstone mask + brute-force delta shard;
+:func:`compact` ends an epoch by re-running the staged build pipeline over
+the *effective corpus* — live base rows followed by live delta rows — and
+hot-swapping the new generation into the serving plane:
+
+* **Bitwise parity.**  The new generation is produced by exactly the code
+  path a fresh ``Index.build`` runs (``build_graph`` on the single plane,
+  the shard-mapped build on the mesh plane), on exactly the fresh-build
+  array shapes (live rows only, no capacity padding), so post-compaction
+  searches are bitwise-identical to a cold build over the same vectors —
+  the correctness bar ``tests/test_streaming.py`` pins.
+* **Hot swap.**  ``plane.rebind`` replaces the operand snapshot atomically
+  between micro-batches: in-flight calls finish on the old (immutable)
+  arrays, and cached executables whose operand shapes survive the swap
+  keep serving with ZERO recompiles (``ServeStats.compiles == 0`` across a
+  same-shape generation swap).  Shape-changing swaps surface as
+  ``StaleGeneration`` and the engine re-dispatches.
+* **Renumbering.**  Compaction densifies ids.  The returned ``id_map``
+  (int64 [n_base + n_delta_slots], old global id -> new id, ``-1`` for
+  tombstoned/unassigned rows) is the caller's bridge for external id
+  bookkeeping.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def effective_corpus(stream, base_X: np.ndarray):
+    """(X_eff, id_map) for a mutation log over ``base_X``.
+
+    ``X_eff [n_active, d]`` is live base rows (original order) followed by
+    live delta rows (slot order) — the corpus a fresh build over the
+    mutated index covers.  ``id_map [n_total] int64`` maps every old global
+    id to its post-compaction row, -1 where tombstoned."""
+    base_X = np.asarray(base_X, np.float32)
+    n_base = stream.n_base
+    count = stream.delta.count
+    base_alive = stream.base_alive
+    delta_alive = stream.delta.alive[:count]
+    parts = [base_X[base_alive]]
+    if count:
+        parts.append(stream.delta.X[:count][delta_alive])
+    X_eff = np.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
+    id_map = np.full((n_base + count,), -1, np.int64)
+    id_map[:n_base][base_alive] = np.arange(int(base_alive.sum()))
+    if count:
+        id_map[n_base:][delta_alive] = int(base_alive.sum()) \
+            + np.arange(int(delta_alive.sum()))
+    return X_eff, id_map
+
+
+def compact(engine, *, tile: int = 2048) -> np.ndarray:
+    """Rebuild ``engine``'s index over its effective corpus and hot-swap
+    the new generation in (see module docstring).  Returns the old->new
+    ``id_map``.  A clean index (no mutations since the last generation) is
+    a no-op returning the identity map."""
+    with engine._mutlock:
+        stream = engine.stream
+        n_base = int(engine.X.shape[0])
+        if stream is None or not stream.dirty:
+            engine.stream = None
+            engine.plane.clear_stream()
+            return np.arange(n_base, dtype=np.int64)
+        if stream.n_active() == 0:
+            raise ValueError(
+                "cannot compact to an empty index: every row is "
+                "tombstoned; add vectors or rebuild")
+        X_eff, id_map = effective_corpus(stream, np.asarray(engine.X))
+        plane = engine.plane
+        if plane.name == "mesh":
+            shards = plane.n_db_shards
+            if X_eff.shape[0] % shards:
+                raise ValueError(
+                    f"effective corpus has {X_eff.shape[0]} rows, not "
+                    f"divisible over {shards} DB shards; add/delete "
+                    "vectors to a multiple or compact on a single plane")
+            # the same device_put + shard-mapped build a fresh MeshPlane
+            # runs -> bitwise a cold build of X_eff
+            plane.rebind(X_eff)
+        else:
+            from repro.ann.pipeline import build_graph
+            import jax.numpy as jnp
+            Xe = jnp.asarray(X_eff)
+            graph = build_graph(Xe, engine.cfg, tile=tile)
+            plane.rebind(Xe, graph)
+        engine.stream = None
+        engine._prune_stale_entries()
+        with engine._lock:
+            engine.stats.compactions += 1
+            engine.stats.generation += 1
+        return id_map

@@ -27,7 +27,8 @@ import os
 import time
 
 
-def regime_for(cfg, batch: int, *, threshold: float | None = None) -> str:
+def regime_for(cfg, batch: int, *, threshold: float | None = None,
+               n_delta: int = 0) -> str:
     """``"small"`` or ``"large"`` for a batch of ``batch`` queries.
 
     Paper §4: small-batch search wins while the search population
@@ -35,11 +36,22 @@ def regime_for(cfg, batch: int, *, threshold: float | None = None) -> str:
     best-first large-batch procedure amortizes better.  ``threshold``
     (a calibrated or caller-supplied value) replaces
     ``cfg.small_batch_threshold`` under the same rule.
+
+    ``n_delta`` (beyond-paper, streaming indexes only — DESIGN.md §7):
+    live rows in the brute-force delta shard.  Every query scores every
+    delta row regardless of regime, so the shard contributes
+    ``n_delta / hop_width`` hop-equivalents of extra population per query;
+    counting it nudges borderline batches into the large regime as the
+    un-compacted shard grows.  0 (a frozen index) reduces to the paper's
+    rule exactly.
     """
     if batch < 1:
         raise ValueError(f"batch must be >= 1, got {batch}")
     thr = cfg.small_batch_threshold if threshold is None else threshold
-    return "small" if batch * cfg.small_t0 < thr * 4 else "large"
+    pop = batch * cfg.small_t0
+    if n_delta > 0:
+        pop += batch * (n_delta // max(1, cfg.hop_width))
+    return "small" if pop < thr * 4 else "large"
 
 
 @dataclasses.dataclass(frozen=True)

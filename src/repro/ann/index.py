@@ -9,6 +9,9 @@ serving layers of this repo behind it:
 
     index = Index.build(X, cfg, k=10)        # staged pipeline (pipeline.py)
     ids, dists = index.search(Q)             # automatic regime dispatch
+    new_ids = index.add(V)                   # streaming insert (delta shard)
+    index.delete(new_ids[:2])                # tombstone (base or delta ids)
+    id_map = index.compact()                 # fold into a new generation
     index.save("/models/tsdg-1m")            # graph + config + AOT cache
     ...
     index = Index.load("/models/tsdg-1m")    # restart: no rebuild, and the
@@ -30,7 +33,6 @@ users, but this facade is the supported surface.
 """
 from __future__ import annotations
 
-from repro.ann.dispatch import regime_for
 from repro.ann.pipeline import build_graph
 from repro.configs.base import ANNConfig
 
@@ -98,8 +100,46 @@ class Index:
         return self.engine.query(Q, k=k)
 
     def regime(self, batch: int) -> str:
-        """Which procedure a batch of this size takes ("small"/"large")."""
-        return regime_for(self.cfg, batch, threshold=self.engine.threshold)
+        """Which procedure a batch of this size takes ("small"/"large").
+        Delegates to the engine so a live delta shard's extra brute-force
+        population counts (DESIGN.md §7); a frozen index reduces to the
+        paper's static rule."""
+        return self.engine.regime(batch)
+
+    # -- streaming mutability (DESIGN.md §7) --------------------------------
+
+    def add(self, V):
+        """Append vectors without rebuilding: they land in a brute-force
+        delta shard searched alongside the graph (results fused by
+        ``merge_topk``, recall-equivalent to a brute-force oracle over the
+        effective corpus).  Returns the new global ids (``n_base + slot``),
+        stable until :meth:`compact`."""
+        return self.engine.add(V)
+
+    def delete(self, ids) -> int:
+        """Tombstone ids (base or delta).  Deleted rows are still routed
+        *through* during graph traversal (connectivity is preserved) but
+        can never be returned.  All-or-nothing: unknown, duplicate, or
+        already-deleted ids raise KeyError without mutating anything."""
+        return self.engine.delete(ids)
+
+    def compact(self, *, tile: int = 2048):
+        """Fold adds/deletes into a fresh generation: re-runs the staged
+        build pipeline over the effective corpus and hot-swaps it into the
+        serving plane without dropping in-flight requests — post-compaction
+        searches are bitwise-identical to a cold :meth:`build` over the
+        same vectors.  Returns the old->new id map (int64, -1 = deleted)."""
+        return self.engine.compact(tile=tile)
+
+    @property
+    def generation(self) -> int:
+        """Completed compactions since this index was built/loaded."""
+        return self.engine.stats.generation
+
+    @property
+    def n_active(self) -> int:
+        """Rows a search can currently return (base + delta − tombstones)."""
+        return self.engine.n_active()
 
     def warmup(self, k: int | None = None) -> int:
         """Pre-compile every reachable (regime, bucket) executable; returns

@@ -257,6 +257,10 @@ class ANNConfig:
     # co-riders and never exceeding this many queries per dispatch
     queue_max_wait_ms: float = 2.0
     queue_max_batch: int = 512
+    # streaming mutability (DESIGN.md §7): initial delta-shard capacity;
+    # the shard grows by doubling from here, so streaming executables
+    # recompile O(log adds) times
+    delta_min_cap: int = 256
     family: str = "ann"
 
     def __post_init__(self):
@@ -274,6 +278,9 @@ class ANNConfig:
             raise ValueError(
                 f"regime_calibration={self.regime_calibration!r} must be "
                 "'static' or 'probe'")
+        if self.delta_min_cap < 1:
+            raise ValueError(
+                f"delta_min_cap={self.delta_min_cap} must be >= 1")
         if self.kernel_backend not in ("auto", "pallas", "xla"):
             # third-party backends are legal if registered; consult the
             # registry lazily so importing configs stays jax-free

@@ -110,7 +110,16 @@ def merge_topk(all_ids, all_d, k: int):
 
     Returns (ids [B, k], dists [B, k]) ascending by distance; rows with
     fewer than k distinct valid candidates are padded with (PAD_ID, INF).
+    This is also the streaming base+delta fuse (DESIGN.md §7), where the
+    edge cases are routine rather than exotic: pools narrower than ``k``
+    (tiny delta shard), rows whose candidates are ALL invalid (every shard
+    tombstoned), and the same id surfacing from several pools.  Any
+    negative id — not just ``PAD_ID`` — counts as invalid, and invalid
+    lanes are INF-demoted *before* the top-k so they can never shadow a
+    real candidate (oracle-fuzzed in ``tests/test_streaming.py``).
     """
+    if k <= 0:
+        raise ValueError(f"k must be >= 1, got {k}")
     if k > all_ids.shape[1]:  # fewer candidates than k: pad the pool
         pad = k - all_ids.shape[1]
         all_ids = jnp.pad(all_ids, ((0, 0), (0, pad)),
@@ -125,14 +134,15 @@ def merge_topk(all_ids, all_d, k: int):
     dup = jnp.concatenate(
         [jnp.zeros((sid.shape[0], 1), bool),
          sid[:, 1:] == sid[:, :-1]], axis=1)
-    sd = jnp.where(dup | (sid == PAD_ID), INF, sd)
+    sd = jnp.where(dup | (sid < 0), INF, sd)
     neg, pos = jax.lax.top_k(-sd, k)
     out_ids = jnp.take_along_axis(sid, pos, axis=1)
     return jnp.where(-neg < INF, out_ids, PAD_ID), -neg
 
 
 def make_search_fn(mesh: Mesh, cfg: ANNConfig, *, kind: str = "large",
-                   k: int = 10, batch: int | None = None):
+                   k: int = 10, batch: int | None = None,
+                   stream: bool = False):
     """Returns jit(search)(X, neighbors, lambdas, degrees, hubs, Q) ->
     (global ids [B, k], dists [B, k]).
 
@@ -146,6 +156,16 @@ def make_search_fn(mesh: Mesh, cfg: ANNConfig, *, kind: str = "large",
         small-batch parallelism unit, §4.1) via `t0_offset`/`t0_total`
         global placement, results merged with the same dedup-top-k that
         merges the DB shards.
+
+    ``stream=True`` is the mutable-index form (DESIGN.md §7): the callable
+    takes three extra operands before Q — ``alive`` ([N] bool, row-sharded
+    like ``degrees``: the tombstone mask over the base corpus, threaded
+    into each shard's in-kernel keep-mask) and the replicated delta shard
+    ``delta_X`` [cap, d] / ``delta_alive`` [cap].  Every shard scores the
+    delta brute-force (``hotpath.scan_distances``) against its own query
+    slice and splices the candidates — at global ids ``N_total + slot`` —
+    into the same dedup-top-k that merges the DB shards, so base+delta
+    fusion is bitwise the single-device streaming path's merge.
     """
     d_ax = db_axes(mesh)
     q_ax = query_axes(mesh)
@@ -156,7 +176,12 @@ def make_search_fn(mesh: Mesh, cfg: ANNConfig, *, kind: str = "large",
     backend = getattr(cfg, "kernel_backend", "auto")
     gather_fused = getattr(cfg, "gather_fused", None)
 
-    def local_search(X_s, nbrs_s, lams_s, degs_s, hubs_s, Q_s):
+    def local_search(X_s, nbrs_s, lams_s, degs_s, hubs_s, *rest):
+        if stream:
+            alive_s, delta_X, delta_alive, Q_s = rest
+        else:
+            alive_s, delta_X, delta_alive = None, None, None
+            (Q_s,) = rest
         n_local = X_s.shape[0]
         if getattr(cfg, "db_bf16", False):  # beyond-paper: bf16 database
             X_s = X_s.astype(jnp.bfloat16)
@@ -182,6 +207,7 @@ def make_search_fn(mesh: Mesh, cfg: ANNConfig, *, kind: str = "large",
                 hop_width=cfg.hop_width, n_seeds=cfg.n_seeds,
                 lambda_limit=10, metric=cfg.metric, unroll=unroll,
                 t0_offset=q_idx * t0_local, t0_total=t0_local * n_q,
+                alive=alive_s,
                 backend=backend, gather_fused=gather_fused)
         else:
             ids, dist = _large_batch_search(
@@ -194,6 +220,7 @@ def make_search_fn(mesh: Mesh, cfg: ANNConfig, *, kind: str = "large",
                 unroll=unroll,
                 gather_limit=getattr(cfg, "gather_limit", 0),
                 exact_visited=getattr(cfg, "exact_visited", False),
+                alive=alive_s,
                 backend=backend, gather_fused=gather_fused)
         gids = jnp.where(ids < n_local, ids + offset, PAD_ID)
         dist = jnp.where(ids < n_local, dist, INF)
@@ -206,14 +233,32 @@ def make_search_fn(mesh: Mesh, cfg: ANNConfig, *, kind: str = "large",
                                0, 1).reshape(gids.shape[0], -1)
         all_d = jnp.moveaxis(all_d.reshape(n_merge, *dist.shape),
                              0, 1).reshape(dist.shape[0], -1)
+        if stream:
+            # delta shard: replicated, scored once per shard against this
+            # shard's own query slice; global ids start past the base rows
+            from repro.core import hotpath as HP
+            cap = delta_X.shape[0]
+            n_total = n_local * n_db
+            dd = HP.scan_distances(Q_s, delta_X, metric=cfg.metric,
+                                   mask=delta_alive, backend=backend)
+            d_gids = jnp.where(
+                delta_alive,
+                n_total + jnp.arange(cap, dtype=jnp.int32), PAD_ID)
+            all_ids = jnp.concatenate(
+                [all_ids, jnp.broadcast_to(d_gids[None], dd.shape)], axis=1)
+            all_d = jnp.concatenate(
+                [all_d, jnp.where(delta_alive[None], dd, INF)], axis=1)
         return merge_topk(all_ids, all_d, k)
 
     q_spec = P(None, None) if kind == "small" else P(q_ax, None)
     out_spec = P(None, None) if kind == "small" else P(q_ax, None)
+    in_specs = (P(d_ax, None), P(d_ax, None), P(d_ax, None), P(d_ax),
+                P(d_ax))
+    if stream:
+        in_specs = in_specs + (P(d_ax), P(None, None), P(None))
     fn = shard_map(
         local_search, mesh=mesh,
-        in_specs=(P(d_ax, None), P(d_ax, None), P(d_ax, None), P(d_ax),
-                  P(d_ax), q_spec),
+        in_specs=in_specs + (q_spec,),
         out_specs=(out_spec, out_spec),
         check_vma=False)
     return jax.jit(fn)

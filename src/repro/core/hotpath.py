@@ -15,7 +15,10 @@ tiles — reduces to three primitives:
     into a ranking array, keeping the best ``keep`` per row (the id-carrying,
     keep-masked generalization of ``kernels/topk.py``);
   * :func:`seed_select` — distance + masked top-k over seed candidates
-    (composition of the two, sharing one backend).
+    (composition of the two, sharing one backend);
+  * :func:`scan_distances` — whole-shard brute-force distance block (the
+    streaming delta shard's scoring, DESIGN.md §7): no gather, one GEMM
+    of the query batch against a small append-only array.
 
 Two registered backends compute them:
 
@@ -107,6 +110,11 @@ class _XlaBackend:
         return (jnp.take_along_axis(dists, order, axis=1)[:, :keep],
                 jnp.take_along_axis(ids, order, axis=1)[:, :keep])
 
+    @staticmethod
+    def scan_distances(Q, Xd, *, metric, mask=None, interpret=None):
+        m = jnp.ones((Xd.shape[0],), bool) if mask is None else mask
+        return _dist_block(Q[None], Xd[None], m[None], metric)[0]
+
 
 class _PallasBackend:
     """Fused device kernels (interpret mode when not on TPU)."""
@@ -155,6 +163,18 @@ class _PallasBackend:
     def rank_merge(dists, ids, *, keep, mask=None, interpret=None):
         return _topk.rank_merge_pallas(dists, ids, mask, keep=keep,
                                        interpret=_interp(interpret))
+
+    @staticmethod
+    def scan_distances(Q, Xd, *, metric, mask=None, interpret=None):
+        # bs=1: the whole scan is ONE [1, B, cap] block — the same operand
+        # shapes as the XLA reference's single contraction, so the backends
+        # keep their bitwise-parity contract (row tiling would change the
+        # gemm's accumulation grouping)
+        m = jnp.ones((Xd.shape[0],), bool) if mask is None else mask
+        out = _l2.block_distances_pallas(Q[None], Xd[None], m[None],
+                                         metric=metric, bs=1,
+                                         interpret=_interp(interpret))
+        return out[0]
 
 
 _REGISTRY = {"xla": _XlaBackend, "pallas": _PallasBackend}
@@ -224,6 +244,32 @@ def rank_merge(dists, ids, *, keep: int, mask=None,
     b = resolve_backend(backend)
     return _REGISTRY[b].rank_merge(dists, ids, keep=keep, mask=mask,
                                    interpret=interpret)
+
+
+def scan_distances(Q, Xd, *, metric: str = "l2", mask=None,
+                   backend: str | None = None, interpret=None):
+    """Brute-force distance block of a whole (delta) shard against a query
+    batch: Q [B, d], Xd [cap, d] -> [B, cap] float32, smaller = closer.
+
+    The streaming delta shard's scoring primitive (DESIGN.md §7): freshly
+    added vectors live in a small append-only array searched exhaustively —
+    one [B, cap] GEMM per call, no graph — and merged with the base graph's
+    candidates by ``distributed.merge_topk``.  ``mask`` (optional [cap]
+    bool) demotes unfilled / tombstoned delta slots to INF in-kernel, the
+    same keep-mask semantics as :func:`neighbor_distances`.  Both backends
+    share the :func:`_dist_block` arithmetic, so they agree bitwise (the
+    parity contract of ``tests/test_hotpath.py``)."""
+    b = resolve_backend(backend)
+    impl = _REGISTRY[b]
+    fn = getattr(impl, "scan_distances", None)
+    if fn is None:  # third-party backend: synthesize from the gather form
+        idx = jnp.broadcast_to(
+            jnp.arange(Xd.shape[0], dtype=jnp.int32),
+            (Q.shape[0], Xd.shape[0]))
+        m = None if mask is None else jnp.broadcast_to(mask, idx.shape)
+        return impl.neighbor_distances(Q, Xd, idx, metric=metric, mask=m,
+                                       interpret=interpret)
+    return fn(Q, Xd, metric=metric, mask=mask, interpret=interpret)
 
 
 def seed_select(Q, X, seeds, *, metric: str = "l2", k: int = 1, mask=None,

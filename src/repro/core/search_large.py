@@ -60,9 +60,15 @@ def _large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
                        seed_offset=0,
                        push_all_seeds: bool = True, unroll: bool = False,
                        gather_limit: int = 0, exact_visited: bool = False,
+                       alive=None,
                        backend: str = "auto",
                        gather_fused: str | None = None):
     """Returns (ids [B, k], dists [B, k]).
+
+    `alive` (optional traced [N] bool) is the streaming tombstone mask
+    (DESIGN.md §7): dead rows are dropped from the seed pool and from every
+    expansion's neighbor admission, so they can never enter R or C.  ``None``
+    (the default) traces exactly the frozen-index computation.
 
     `gather_limit` > 0 fetches only that many λ-sorted columns per row (the
     rows are λ-ascending, so this is the paper's dynamic-degree prefix
@@ -113,8 +119,9 @@ def _large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
     ss_ids = jnp.take_along_axis(seeds, so, axis=1)
     dupm = jnp.concatenate([jnp.zeros((B, 1), bool),
                             ss_ids[:, 1:] == ss_ids[:, :-1]], axis=1)
+    seed_keep = ~dupm if alive is None else ~dupm & alive[ss_ids]
     init_d, sids = HP.seed_select(Q, X, ss_ids, metric=metric, k=n_seeds,
-                                  mask=~dupm, backend=backend,
+                                  mask=seed_keep, backend=backend,
                                   gather_fused=gather_fused)
     if not push_all_seeds:
         # keep only the best seed (paper: R = C = {u}); sorted, so column 0
@@ -177,6 +184,8 @@ def _large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
         lam = lams_all[u_safe]
         ok = (lam < lambda_limit) & (e < N) & ~now_done[:, None]
         e_safe = jnp.clip(e, 0, N - 1)
+        if alive is not None:  # tombstoned neighbors never enter R or C
+            ok = ok & alive[e_safe]
         # drop repeats within this neighbor list (bridge splicing can
         # duplicate an existing edge) — keep the first occurrence
         dup_here = jnp.any(

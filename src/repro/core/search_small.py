@@ -53,10 +53,19 @@ def _small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
                        width: int = 32, seed: int = 0,
                        unroll: bool = False, seed_offset=0,
                        t0_offset=0, t0_total: int | None = None,
+                       alive=None,
                        backend: str = "auto",
                        gather_fused: str | None = None):
     """Returns (ids [B, k], dists [B, k]).  `seed_offset` may be traced
     (it perturbs the base key — a cheap way to decorrelate restarts).
+
+    `alive` (optional traced [N] bool) is the streaming tombstone mask
+    (DESIGN.md §7): dead rows are excluded from seed selection, from every
+    hop's neighbor evaluation, and from the final merge, so a tombstoned
+    vector can never surface in the results.  Tombstoned nodes are fully
+    invisible (not routed *through* either) — adequate at serving-window
+    deletion rates; heavier churn is folded back by compaction.  ``None``
+    (the default) traces exactly the frozen-index computation.
 
     Random seeds are derived per search row (`fold_in` by global row index),
     so row i's draws depend only on (seed, seed_offset, i) — never on the
@@ -102,8 +111,9 @@ def _small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
             lambda rk: jax.random.randint(jax.random.fold_in(rk, 1),
                                           (n_seeds // 2,), 0, nh))(row_keys)
         seeds = seeds.at[:, : n_seeds // 2].set(graph.hubs[hub_pick])
+    seed_mask = alive[seeds] if alive is not None else None
     sd1, si1 = HP.seed_select(Qs, X, seeds, metric=metric, k=1,
-                              backend=backend,
+                              mask=seed_mask, backend=backend,
                               gather_fused=gather_fused)      # [S, 1] each
     u, u_d = si1[:, 0], sd1[:, 0]
 
@@ -124,6 +134,8 @@ def _small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
         nbrs = nbrs_all[u]                                    # [S, M]
         lams = lams_all[u]
         visit = lams < lambda_limit  # idx >= N masked by the primitive
+        if alive is not None:  # tombstoned neighbors never enter a ranking
+            visit = visit & alive[jnp.clip(nbrs, 0, N - 1)]
         dists = HP.neighbor_distances(Qs, X, nbrs, metric=metric,
                                       mask=visit, backend=backend,
                                       gather_fused=gather_fused)
@@ -210,8 +222,11 @@ def _small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
     sd2 = jnp.take_along_axis(cand_d, o, axis=1)
     dup = jnp.concatenate(
         [jnp.zeros((B, 1), bool), sid[:, 1:] == sid[:, :-1]], axis=1)
+    keep_lane = ~dup & (sid < N)
+    if alive is not None:  # a dead best-seed id can linger in slot 0
+        keep_lane = keep_lane & alive[jnp.clip(sid, 0, N - 1)]
     out_d, out_ids = HP.rank_merge(sd2, sid, keep=k,
-                                   mask=~dup & (sid < N), backend=backend)
+                                   mask=keep_lane, backend=backend)
     return out_ids.astype(jnp.int32), out_d
 
 

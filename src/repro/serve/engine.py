@@ -32,6 +32,17 @@ Serving additions on top of the paper:
 * **Stats v2** — per-regime latency records (percentiles/histograms),
   compile and bucket-hit counters, and warmup (compile-triggering) batches
   excluded from steady-state QPS.
+* **Streaming mutability (DESIGN.md §7)** — :meth:`add` appends vectors to
+  a brute-force delta shard searched alongside the graph, :meth:`delete`
+  tombstones ids via a persistent alive-mask threaded into the in-kernel
+  keep-masks, and ``Index.compact()`` (:mod:`repro.ann.compaction`) folds
+  both back into a fresh generation that hot-swaps under live traffic.
+  The engine owns the host-side :class:`~repro.ann.delta.StreamState` and
+  pushes device views to the plane; executables bind to operand *snapshots*
+  so a same-shape generation swap re-uses every cached compile
+  (``stats.compiles == 0`` across the swap), while a shape-changing swap
+  surfaces as :class:`~repro.serve.plane.StaleGeneration` and ``query()``
+  transparently re-dispatches.
 
 This engine is the internal serving layer behind the :class:`repro.ann.Index`
 facade (DESIGN.md §5): ``Index.search`` dispatches through ``query()``,
@@ -56,7 +67,8 @@ import numpy as np
 
 from repro.ann.dispatch import regime_for
 from repro.configs.base import ANNConfig
-from repro.serve.plane import (MeshPlane, SingleDevicePlane, SMALL_WIDTH)
+from repro.serve.plane import (MeshPlane, SingleDevicePlane, SMALL_WIDTH,
+                               StaleGeneration)
 
 # back-compat alias (pre-plane revisions defined the ranking width here)
 _SMALL_WIDTH = SMALL_WIDTH
@@ -112,6 +124,12 @@ class ServeStats:
     bucket_hits: int = 0            # calls served by a cached executable
     bucket_misses: int = 0          # calls that had to compile
     padded_queries: int = 0         # wasted rows added by bucketing
+    # streaming mutability (DESIGN.md §7)
+    generation: int = 0             # completed compactions since build/load
+    n_added: int = 0                # vectors appended via add()
+    n_deleted: int = 0              # ids tombstoned via delete()
+    compactions: int = 0
+    stream_batches: int = 0         # batches answered by a streaming exe
     per_regime: dict = dataclasses.field(
         default_factory=lambda: {"small": RegimeStats(),
                                  "large": RegimeStats()})
@@ -135,6 +153,9 @@ class ServeStats:
             "aot_primed": self.aot_primed,
             "bucket_hit_rate": self.bucket_hit_rate,
             "padded_queries": self.padded_queries,
+            "generation": self.generation, "n_added": self.n_added,
+            "n_deleted": self.n_deleted, "compactions": self.compactions,
+            "stream_batches": self.stream_batches,
         }
         for name, reg in self.per_regime.items():
             for key, val in reg.percentiles().items():
@@ -167,7 +188,12 @@ class ANNEngine:
         self.k = k
         self.stats = ServeStats()
         self._lock = threading.Lock()
-        # (regime, bucket, k, backend, gather_fused) -> executable
+        # host-side mutation log (tombstones + delta shard); None while the
+        # index is frozen — created lazily by the first add()/delete()
+        self.stream = None
+        self._mutlock = threading.Lock()   # serializes add/delete/compact
+        # (regime, bucket, k, backend, gather_fused,
+        #  plane shape token, stream token) -> executable
         self._compiled: dict = {}
         self.buckets = tuple(sorted(self.cfg.serve_buckets))
         if plane is not None:
@@ -221,8 +247,16 @@ class ANNEngine:
         """Paper §4's division threshold — owned by the facade
         (:func:`repro.ann.dispatch.regime_for`) so engine, ``Index``, and
         benchmarks can never disagree on the split.  A calibrated/override
-        threshold (see class docstring) replaces the static config value."""
-        return regime_for(self.cfg, batch, threshold=self.threshold)
+        threshold (see class docstring) replaces the static config value.
+        A live delta shard adds its brute-force population to the estimate
+        (every query scores every delta row), nudging borderline batches
+        into the large regime."""
+        return regime_for(self.cfg, batch, threshold=self.threshold,
+                          n_delta=self._n_delta())
+
+    def _n_delta(self) -> int:
+        stream = self.stream
+        return 0 if stream is None else stream.delta.n_alive()
 
     def bucket_for(self, batch: int) -> int:
         """Smallest ladder bucket >= batch; beyond the ladder, the next
@@ -260,17 +294,30 @@ class ANNEngine:
 
     # -- compile cache ------------------------------------------------------
 
-    def _get_executable(self, kind: str, bucket: int, k: int):
-        """Cached executable for (regime, bucket, k, backend, gather_fused);
-        the plane compiles on miss.
+    def _get_executable(self, kind: str, bucket: int, k: int,
+                        streaming: bool = False):
+        """Cached executable for (regime, bucket, k, backend, gather_fused,
+        shape token, stream token); the plane compiles on miss.
+
+        The plane's shape token keys the operand generation: a compaction
+        that preserves operand shapes leaves the token — and therefore
+        every cache entry — valid (zero recompiles across the swap), while
+        a shape-changing one naturally misses.  Streaming executables key
+        additionally on the delta shard's capacity, which grows
+        geometrically, so recompiles are logarithmic in adds.
 
         Returns (callable taking the padded query batch, compiled_now)."""
-        cache_key = (kind, bucket, k, self.backend, self.gather_fused)
+        stream_tok = self.plane.stream_token() if streaming else None
+        cache_key = (kind, bucket, k, self.backend, self.gather_fused,
+                     self.plane.shape_token(), stream_tok)
         with self._lock:
             hit = self._compiled.get(cache_key)
         if hit is not None:
             return hit, False
-        exe = self.plane.compile(kind, bucket, k)
+        if streaming:
+            exe = self.plane.compile_stream(kind, bucket, k)
+        else:
+            exe = self.plane.compile(kind, bucket, k)
         with self._lock:
             # a racing thread may have compiled the same key; keep the first
             prior = self._compiled.get(cache_key)
@@ -282,30 +329,61 @@ class ANNEngine:
 
     # -- serving ------------------------------------------------------------
 
+    @staticmethod
+    def _check_numeric(A, what: str):
+        """Reject non-numeric inputs BEFORE jnp.asarray turns them into an
+        opaque shape/dtype error deep inside the kernel call."""
+        dt = getattr(A, "dtype", None)
+        if dt is None:
+            A = np.asarray(A)
+            dt = A.dtype
+        if np.dtype(dt).kind not in "fiu":
+            raise ValueError(
+                f"{what} must be numeric (float/int), got dtype {dt!r}")
+        return A
+
     def query(self, Q, *, k: int | None = None):
         """Answer a batch: (ids [B, k], dists [B, k]) numpy arrays."""
         Q_in = Q
-        Q = jnp.asarray(Q)
+        Q = self._check_numeric(Q, "Q")
+        Q = jnp.asarray(Q, jnp.float32) if Q is not Q_in else jnp.asarray(Q)
         if Q.ndim != 2 or Q.shape[1] != self.X.shape[1]:
             raise ValueError(
                 f"Q must be [B, {self.X.shape[1]}], got {tuple(Q.shape)}")
+        if Q.dtype != jnp.float32:
+            Q = Q.astype(jnp.float32)
         B = Q.shape[0]
         if B == 0:
             raise ValueError("empty query batch")
         kind = self.regime(B)
         k = self._validate_k(k, kind)
         bucket = self.bucket_for(B)
-        if bucket > B:
-            Qpad = jnp.pad(Q, ((0, bucket - B), (0, 0)), mode="edge")
-        elif self._donate and Q is Q_in:
-            # the executable donates its input buffer; never hand it a
-            # device array the caller still owns
-            Qpad = jnp.copy(Q)
+        # dispatch loop: a concurrent compaction/add can swap the plane's
+        # generation between executable lookup and call — the stale binding
+        # raises StaleGeneration and we re-dispatch against the new token
+        # (bounded: generations move monotonically under _mutlock)
+        for _ in range(3):
+            streaming = self.plane.stream_active
+            if bucket > B:
+                Qpad = jnp.pad(Q, ((0, bucket - B), (0, 0)), mode="edge")
+            elif self._donate:
+                # the executable donates its input buffer; never hand it a
+                # device array the caller still owns (or our retry reuses)
+                Qpad = jnp.copy(Q)
+            else:
+                Qpad = Q
+            exe, compiled_now = self._get_executable(kind, bucket, k,
+                                                     streaming)
+            t0 = time.perf_counter()
+            try:
+                ids, dists = exe(Qpad)
+            except StaleGeneration:
+                continue
+            break
         else:
-            Qpad = Q
-        exe, compiled_now = self._get_executable(kind, bucket, k)
-        t0 = time.perf_counter()
-        ids, dists = exe(Qpad)
+            raise RuntimeError(
+                "query kept racing generation swaps; mutation rate "
+                "outpaces dispatch")
         ids.block_until_ready()
         dt = time.perf_counter() - t0
         with self._lock:
@@ -317,6 +395,8 @@ class ANNEngine:
                 st.small_batches += 1
             else:
                 st.large_batches += 1
+            if streaming:
+                st.stream_batches += 1
             if compiled_now:
                 st.bucket_misses += 1
             else:
@@ -326,6 +406,94 @@ class ANNEngine:
             st.per_regime[kind].record(B, dt, warmup=compiled_now)
         # padded rows are discarded before any caller-visible merge
         return np.asarray(ids[:B]), np.asarray(dists[:B])
+
+    # -- streaming mutability (DESIGN.md §7) --------------------------------
+
+    def add(self, V) -> np.ndarray:
+        """Append vectors to the delta shard; returns their global ids
+        (``n_base + slot`` — disjoint from every base id and stable until
+        the next :func:`repro.ann.compaction.compact`).  Accepts [m, d] or
+        a single [d] vector; numeric dtypes are cast to float32."""
+        V = self._check_numeric(V, "vectors")
+        V = np.asarray(V, np.float32)
+        if V.ndim == 1:
+            V = V[None]
+        d = int(self.X.shape[1])
+        if V.ndim != 2 or V.shape[1] != d:
+            raise ValueError(
+                f"vectors must be [m, {d}] (or a single [{d}] vector), "
+                f"got {tuple(V.shape)}")
+        if V.shape[0] == 0:
+            raise ValueError("empty add batch")
+        with self._mutlock:
+            stream = self._ensure_stream()
+            ids = stream.add(V)
+            self._push_stream()
+            with self._lock:
+                self.stats.n_added += len(ids)
+        return ids
+
+    def delete(self, ids) -> int:
+        """Tombstone ids (base or delta).  All-or-nothing: unknown,
+        out-of-range, duplicate, or already-deleted ids raise KeyError and
+        nothing is tombstoned.  Returns the number of ids removed."""
+        with self._mutlock:
+            stream = self._ensure_stream()
+            n = stream.delete(ids)
+            self._push_stream()
+            with self._lock:
+                self.stats.n_deleted += n
+        return n
+
+    def n_active(self) -> int:
+        """Rows a search can currently return (base + delta − tombstones)."""
+        stream = self.stream
+        base = int(self.X.shape[0])
+        return base if stream is None else stream.n_active()
+
+    def _ensure_stream(self):
+        """Lazily create the host-side mutation log (caller holds
+        ``_mutlock``)."""
+        if self.stream is None:
+            from repro.ann.delta import StreamState
+            self.stream = StreamState(
+                int(self.X.shape[0]), int(self.X.shape[1]),
+                min_cap=getattr(self.cfg, "delta_min_cap", 256))
+        return self.stream
+
+    def _push_stream(self) -> None:
+        """Publish the host-side stream state as device operands (caller
+        holds ``_mutlock``)."""
+        self.plane.set_stream(*self.stream.device_view())
+
+    def compact(self, *, tile: int = 2048) -> np.ndarray:
+        """Fold streamed mutations into a fresh generation
+        (:func:`repro.ann.compaction.compact`); returns the old->new id
+        map."""
+        from repro.ann.compaction import compact
+        return compact(self, tile=tile)
+
+    def _prune_stale_entries(self) -> None:
+        """Drop cache entries bound to a superseded generation: their
+        shape token can never match again (tokens move monotonically), so
+        they would only raise StaleGeneration and hold dead arrays alive."""
+        tok = self.plane.shape_token()
+        with self._lock:
+            stale = [key for key in self._compiled if key[5] != tok]
+            for key in stale:
+                del self._compiled[key]
+
+    def restore_stream(self, base_alive, delta_X, delta_alive) -> None:
+        """Re-attach persisted mutation state (artifact format v3 load)."""
+        from repro.ann.delta import StreamState
+        with self._mutlock:
+            self.stream = StreamState.restore(
+                base_alive, delta_X, delta_alive,
+                min_cap=getattr(self.cfg, "delta_min_cap", 256))
+            if self.stream.dirty:
+                self._push_stream()
+            else:
+                self.stream = None
 
     def warmup_probes(self) -> list:
         """``[(regime, bucket, probe_batch)]`` covering every (regime,
@@ -384,9 +552,13 @@ class ANNEngine:
         ``call`` must accept the bucket-padded query batch and return
         (ids, dists) — the same convention :meth:`_get_executable` caches.
         Primed entries count as bucket *hits* (no compile is recorded):
-        a loaded index serves its first request steady-state.
+        a loaded index serves its first request steady-state.  AOT blobs
+        persist only the frozen (non-streaming) form, so the stream slot of
+        the key is always None here; the shape-token slot binds the entry
+        to the generation that was saved.
         """
-        key = (kind, bucket, k, self.backend, self.gather_fused)
+        key = (kind, bucket, k, self.backend, self.gather_fused,
+               self.plane.shape_token(), None)
         with self._lock:
             if key not in self._compiled:
                 self._compiled[key] = call

@@ -9,9 +9,7 @@ behind the :class:`ExecutionPlane` protocol defined here, with two
 registered implementations:
 
 * :class:`SingleDevicePlane` — the default: database + packed graph resident
-  on one device, searches lowered from the raw procedures.  Extracted
-  verbatim from the pre-plane ``ANNEngine`` internals; behavior-identical
-  (same cache keys, same donation rule, same AOT export scheme).
+  on one device, searches lowered from the raw procedures.
 * :class:`MeshPlane` — the sharded peer: database + per-shard sub-indexes
   laid out over a device mesh (DESIGN.md §6), searches lowered from the
   shard-mapped procedures of :mod:`repro.core.distributed`.  The mesh, the
@@ -23,6 +21,7 @@ registered implementations:
 Both planes expose the same surface::
 
     compile(regime, bucket, k) -> executable     # padded Q -> (ids, dists)
+    compile_stream(regime, bucket, k) -> executable  # + tombstones & delta
     operands() -> tuple                          # flat AOT runtime args
     fingerprint() -> dict                        # what executables bind to
     shardings() -> dict                          # operand placements
@@ -35,6 +34,30 @@ plus ``X``, ``graph``, ``cfg``, ``backend``, ``gather_fused``, ``donate``,
 accepts third-party planes by name, mirroring the kernel-backend registry
 (DESIGN.md §3): a future `jax.distributed` pod plane slots in without
 touching the engine.
+
+**Generations & streaming (DESIGN.md §7).**  Every serving computation is
+lowered with the database and graph as *runtime arguments* (never closed
+over as compile-time constants) and the compiled module is wrapped in a
+thin binding that reads the plane's current operand snapshot at call time.
+The snapshot — ``(shape token, operand tuple, stream operands or None)`` —
+is replaced atomically by :meth:`rebind` (compaction's generation hot-swap)
+and :meth:`set_stream` (mutation pushes), so:
+
+* a generation swap that preserves operand shapes re-binds every cached
+  executable to the new arrays with ZERO recompiles (the acceptance bar
+  ``ServeStats.compiles == 0`` across a swap);
+* in-flight calls that already grabbed the old snapshot finish on the old
+  immutable arrays — nothing is dropped;
+* a swap that *changes* shapes makes stale executables raise
+  :class:`StaleGeneration`, which the engine turns into a re-dispatch
+  against the new shape token (lazy recompile, never a wrong answer).
+
+``compile_stream`` lowers the mutable-index form: the frozen computation
+plus the tombstone ``alive`` mask threaded into the in-kernel keep-masks
+and the brute-force delta shard fused by ``distributed.merge_topk``.
+Frozen and streaming executables coexist in the engine cache; AOT artifacts
+persist only the frozen form (the streaming operands are serving state, not
+index payload).
 """
 from __future__ import annotations
 
@@ -46,6 +69,12 @@ import jax.numpy as jnp
 from repro.configs.base import ANNConfig
 from repro.core import hotpath
 from repro.core.diversify import PackedGraph
+
+
+class StaleGeneration(RuntimeError):
+    """A bound executable's operand shapes no longer match the plane's
+    current generation (compaction swapped in a different-shaped corpus, or
+    the delta shard grew); the engine re-dispatches against the new token."""
 
 
 @runtime_checkable
@@ -114,6 +143,83 @@ def _runtime_fingerprint(plane) -> dict:
     }
 
 
+def _token_of(ops) -> tuple:
+    """Shape/dtype token of an operand tuple: equality means a compiled
+    module lowered against one tuple can run against the other."""
+    return tuple((tuple(a.shape), str(a.dtype)) for a in ops)
+
+
+class _SnapshotPlane:
+    """Shared generation-snapshot machinery for both planes.
+
+    ``self._snap = (token, operands, stream_or_None)`` is the plane's whole
+    mutable state, replaced wholesale (one attribute store — atomic under
+    the GIL) so concurrent queries always read a coherent generation.
+    """
+
+    _snap: tuple
+
+    # -- snapshot accessors -------------------------------------------------
+
+    def operands(self) -> tuple:
+        return self._snap[1]
+
+    def shape_token(self) -> tuple:
+        return self._snap[0]
+
+    def stream_token(self):
+        """Delta-shard capacity of the attached stream state (None when the
+        index is frozen) — part of the engine's streaming cache key."""
+        stream = self._snap[2]
+        return None if stream is None else (int(stream[1].shape[0]),)
+
+    @property
+    def stream_active(self) -> bool:
+        return self._snap[2] is not None
+
+    def clear_stream(self) -> None:
+        token, ops, _ = self._snap
+        self._snap = (token, ops, None)
+
+    # -- executable binding -------------------------------------------------
+
+    def _bind(self, raw, token, *, stream_cap=None):
+        """Wrap a compiled module (over flat operand args + Q) into the
+        engine-facing single-argument form.  The wrapper reads the CURRENT
+        snapshot per call, so a same-shape generation swap re-binds every
+        cached executable for free; shape drift raises StaleGeneration."""
+        def call(Qb):
+            tok, ops, stream = self._snap
+            if tok != token:
+                raise StaleGeneration(
+                    "executable lowered for a previous generation's operand "
+                    "shapes; re-dispatch against the new shape token")
+            if stream_cap is None:
+                return raw(*ops, Qb)
+            if stream is None or int(stream[1].shape[0]) != stream_cap:
+                raise StaleGeneration(
+                    "stream operands detached or delta capacity changed; "
+                    "re-dispatch")
+            return raw(*ops, *stream, Qb)
+        return call
+
+    def _op_specs(self) -> tuple:
+        return tuple(jax.ShapeDtypeStruct(a.shape, a.dtype)
+                     for a in self.operands())
+
+    def _stream_specs(self) -> tuple:
+        stream = self._snap[2]
+        return tuple(jax.ShapeDtypeStruct(a.shape, a.dtype) for a in stream)
+
+    def _require_stream(self):
+        stream = self._snap[2]
+        if stream is None:
+            raise RuntimeError(
+                "no stream state attached (set_stream() installs the "
+                "tombstone mask + delta shard before compile_stream)")
+        return stream
+
+
 # ==========================================================================
 # single-device plane
 # ==========================================================================
@@ -123,9 +229,10 @@ def _runtime_fingerprint(plane) -> dict:
 SMALL_WIDTH = 32
 
 
-class SingleDevicePlane:
+class SingleDevicePlane(_SnapshotPlane):
     """Database + graph on one device; searches lowered from the raw
-    procedures (extracted, behavior-identical, from the pre-plane engine)."""
+    procedures.  Mutation state (tombstones + delta shard) and generation
+    swaps ride on the snapshot machinery of :class:`_SnapshotPlane`."""
 
     name = "single"
 
@@ -141,11 +248,37 @@ class SingleDevicePlane:
         # state reuses its HBM instead of re-allocating per call; skipped on
         # CPU where XLA cannot alias the input (it would warn every call)
         self.donate = jax.default_backend() != "cpu"
-        self.X = jnp.asarray(X)
+        X = jnp.asarray(X)
         if graph is None:
             from repro.ann.pipeline import build_graph
-            graph = build_graph(self.X, cfg)
+            graph = build_graph(X, cfg)
+        self._install(X, graph, stream=None)
+
+    def _install(self, X, graph, *, stream) -> None:
+        self.X = X
         self.graph = graph
+        ops = (X, graph.neighbors, graph.lambdas, graph.degrees)
+        if graph.hubs is not None:
+            ops = ops + (graph.hubs,)
+        self._snap = (_token_of(ops), ops, stream)
+
+    # -- generations & streaming -------------------------------------------
+
+    def rebind(self, X, graph) -> None:
+        """Hot-swap to a new generation's corpus + graph (compaction).
+        Clears stream state; cached executables whose shapes still match
+        keep serving against the new arrays with zero recompiles, and
+        in-flight calls finish on the old (immutable) arrays."""
+        self._install(jnp.asarray(X), graph, stream=None)
+
+    def set_stream(self, alive, delta_X, delta_alive) -> None:
+        """Attach/refresh the streaming operands: ``alive`` [N] bool
+        (base-corpus tombstone mask), ``delta_X`` [cap, d] float32,
+        ``delta_alive`` [cap] bool (unfilled/tombstoned delta slots)."""
+        token, ops, _ = self._snap
+        stream = (jnp.asarray(alive), jnp.asarray(delta_X),
+                  jnp.asarray(delta_alive))
+        self._snap = (token, ops, stream)
 
     # -- engine-facing geometry --------------------------------------------
 
@@ -188,24 +321,82 @@ class SingleDevicePlane:
     def _qspec(self, bucket: int):
         return jax.ShapeDtypeStruct((bucket, self.X.shape[1]), jnp.float32)
 
-    def compile(self, kind: str, bucket: int, k: int):
-        """The database, graph, and every search parameter are closed over
-        so the padded query batch is the executable's ONLY argument — which
-        is what lets its bucket-sized buffer be donated (ROADMAP "Donated
-        buffers"): steady-state serving reuses the input's device memory
-        instead of re-allocating per call."""
+    def _flat_search(self, kind: str, k: int):
+        """The operand-parameterized serving computation: flat array args
+        ``(X, neighbors, lambdas, degrees[, hubs], Qb)`` -> (ids, dists).
+        The same trace :meth:`export` serializes, so primed and locally
+        compiled executables answer identically (bitwise contract)."""
         fn, kwargs = self._search_args(kind, k)
-        X, graph = self.X, self.graph
-        wrapped = jax.jit(lambda Qb: fn(X, graph, Qb, **kwargs),
-                          donate_argnums=(0,) if self.donate else ())
-        return wrapped.lower(self._qspec(bucket)).compile()
+        has_hubs = self.graph.hubs is not None
+
+        def call(*args):
+            Xa, nbrs, lams, degs = args[:4]
+            g = PackedGraph(neighbors=nbrs, lambdas=lams, degrees=degs,
+                            hubs=args[4] if has_hubs else None)
+            return fn(Xa, g, args[-1], **kwargs)
+        return call
+
+    def compile(self, kind: str, bucket: int, k: int):
+        """The database and graph are runtime ARGUMENTS of the compiled
+        module (see module docstring: generation swaps re-bind, not
+        recompile); only the bucket-padded query buffer is donated
+        (ROADMAP "Donated buffers") so steady-state serving reuses its
+        device memory instead of re-allocating per call."""
+        specs = self._op_specs()
+        wrapped = jax.jit(
+            self._flat_search(kind, k),
+            donate_argnums=(len(specs),) if self.donate else ())
+        raw = wrapped.lower(*specs, self._qspec(bucket)).compile()
+        return self._bind(raw, self.shape_token())
+
+    def compile_stream(self, kind: str, bucket: int, k: int):
+        """The mutable-index serving computation (DESIGN.md §7): the base
+        graph search with the tombstone mask threaded into its in-kernel
+        keep-masks, a brute-force scan of the delta shard, and one
+        ``merge_topk`` fuse.  Delta rows answer at global ids
+        ``N + slot``; rows with fewer than k live candidates pad with
+        (PAD_ID, INF).  Keyed by delta capacity in the engine cache — the
+        shard grows geometrically, so recompiles are logarithmic in the
+        number of added vectors."""
+        from repro.core.distributed import PAD_ID, merge_topk
+
+        stream = self._require_stream()
+        cap = int(stream[1].shape[0])
+        fn, kwargs = self._search_args(kind, k)
+        has_hubs = self.graph.hubs is not None
+        n_ops = len(self.operands())
+        N = int(self.X.shape[0])
+        metric = self.cfg.metric
+        backend = self.backend
+        INF = hotpath.INF
+
+        def call(*args):
+            Xa, nbrs, lams, degs = args[:4]
+            g = PackedGraph(neighbors=nbrs, lambdas=lams, degrees=degs,
+                            hubs=args[4] if has_hubs else None)
+            al, dX, dal = args[n_ops:n_ops + 3]
+            Qb = args[-1]
+            bids, bd = fn(Xa, g, Qb, alive=al, **kwargs)
+            valid = (bids < N) & (bd < INF)
+            pool_i = jnp.where(valid, bids, PAD_ID)
+            pool_d = jnp.where(valid, bd, INF)
+            dd = hotpath.scan_distances(Qb, dX, metric=metric, mask=dal,
+                                        backend=backend)
+            d_ids = jnp.where(dal, N + jnp.arange(cap, dtype=jnp.int32),
+                              PAD_ID)
+            all_i = jnp.concatenate(
+                [pool_i, jnp.broadcast_to(d_ids[None], dd.shape)], axis=1)
+            all_d = jnp.concatenate(
+                [pool_d, jnp.where(dal[None], dd, INF)], axis=1)
+            return merge_topk(all_i, all_d, k)
+
+        specs = self._op_specs() + self._stream_specs()
+        wrapped = jax.jit(
+            call, donate_argnums=(len(specs),) if self.donate else ())
+        raw = wrapped.lower(*specs, self._qspec(bucket)).compile()
+        return self._bind(raw, self.shape_token(), stream_cap=cap)
 
     # -- AOT persistence ----------------------------------------------------
-
-    def operands(self) -> tuple:
-        g = self.graph
-        parts = (self.X, g.neighbors, g.lambdas, g.degrees)
-        return parts + ((g.hubs,) if g.hubs is not None else ())
 
     def export(self, kind: str, bucket: int, k: int) -> bytes:
         """Serialize one (regime, bucket, k) serving computation with
@@ -216,49 +407,40 @@ class SingleDevicePlane:
         small and one artifact can hold many entries.  Bitwise contract:
         the exported module is lowered from the same trace :meth:`compile`
         compiles, so a primed executable answers identically to a
-        locally-compiled one.
-        """
+        locally-compiled one.  Only the frozen form is exported — stream
+        state is serving state, persisted separately by the artifact's
+        ``streaming`` payload (format v3)."""
         from jax import export as jax_export
-        fn, kwargs = self._search_args(kind, k)
-        # flat array args (jax.export cannot serialize the PackedGraph
-        # pytree type); operands() is the shared flattening so the loader
-        # feeds arguments in exactly this order
-        parts = self.operands()
-        has_hubs = self.graph.hubs is not None
-
-        def _call(*args):
-            Xa, nbrs, lams, degs = args[:4]
-            g = PackedGraph(neighbors=nbrs, lambdas=lams, degrees=degs,
-                            hubs=args[4] if has_hubs else None)
-            return fn(Xa, g, args[-1], **kwargs)
-
-        specs = tuple(jax.ShapeDtypeStruct(a.shape, a.dtype) for a in parts)
-        exported = jax_export.export(jax.jit(_call))(
+        specs = self._op_specs()
+        exported = jax_export.export(jax.jit(self._flat_search(kind, k)))(
             *specs, self._qspec(bucket))
         return bytes(exported.serialize())
 
     def prime(self, exported, kind: str, bucket: int, k: int):
-        """Close a deserialized module over the plane's device arrays and
-        compile it back into the single-donated-argument executable form
-        the engine's compile cache expects."""
-        parts = self.operands()
-        fn = jax.jit(lambda Qb: exported.call(*parts, Qb),
-                     donate_argnums=(0,) if self.donate else ())
-        return fn.lower(self._qspec(bucket)).compile()
+        """Compile a deserialized module back into the snapshot-bound
+        single-argument executable form the engine's cache expects."""
+        specs = self._op_specs()
+        fn = jax.jit(lambda *args: exported.call(*args),
+                     donate_argnums=(len(specs),) if self.donate else ())
+        raw = fn.lower(*specs, self._qspec(bucket)).compile()
+        return self._bind(raw, self.shape_token())
 
 
 # ==========================================================================
 # mesh plane
 # ==========================================================================
 
-class MeshPlane:
+class MeshPlane(_SnapshotPlane):
     """Database + per-shard sub-indexes over a device mesh; searches lowered
     from the shard-mapped procedures (:mod:`repro.core.distributed`).
 
     Owns the mesh, the DB/query PartitionSpecs, and (via the distributed
     search bodies) the global-id offset logic.  ``parts=`` accepts prebuilt
     device-resident ``(X, neighbors, lambdas, degrees, hubs)`` — how the
-    artifact loader restores a sharded index without rebuilding.
+    artifact loader restores a sharded index without rebuilding.  Streaming
+    operands place the tombstone mask row-sharded with the database and the
+    delta shard replicated (every shard scores it; ``merge_topk``'s id
+    dedup collapses the copies).
     """
 
     name = "mesh"
@@ -287,19 +469,48 @@ class MeshPlane:
         self._db2 = NamedSharding(mesh, P(d_ax, None))   # [N, *] row-sharded
         self._db1 = NamedSharding(mesh, P(d_ax))         # [N] row-sharded
         self._repl = NamedSharding(mesh, P(None, None))
+        self._repl1 = NamedSharding(mesh, P(None))
         self._qsharded = NamedSharding(mesh, P(D.query_axes(mesh) or None,
                                                None))
         if parts is None:
             Xs = jax.device_put(jnp.asarray(X), self._db2)
             nbrs, lams, degs, hubs = D.make_build_fn(mesh, cfg)(Xs)
             jax.block_until_ready(nbrs)
-        else:
-            Xs, nbrs, lams, degs, hubs = parts
+            parts = (Xs, nbrs, lams, degs, hubs)
+        self._install(parts[0], parts[1:], stream=None)
+
+    def _install(self, Xs, parts, *, stream) -> None:
+        nbrs, lams, degs, hubs = parts
         self.X = Xs
-        self._parts = (nbrs, lams, degs, hubs)
+        self._parts = parts
         self.graph = PackedGraph(
             neighbors=nbrs, lambdas=lams, degrees=degs,
             hubs=hubs if hubs.shape[0] else None)
+        ops = (Xs, *parts)
+        self._snap = (_token_of(ops), ops, stream)
+
+    # -- generations & streaming -------------------------------------------
+
+    def rebind(self, X) -> None:
+        """Hot-swap to a new generation: re-lay the corpus over the mesh
+        and rebuild the shard-local sub-indexes — the same device_put +
+        shard-mapped build a fresh mesh plane runs, so the swapped-in state
+        is bitwise a fresh build's (compaction's parity bar)."""
+        Xs = jax.device_put(jnp.asarray(X), self._db2)
+        nbrs, lams, degs, hubs = self._D.make_build_fn(self.mesh,
+                                                       self.cfg)(Xs)
+        jax.block_until_ready(nbrs)
+        self._install(Xs, (nbrs, lams, degs, hubs), stream=None)
+
+    def set_stream(self, alive, delta_X, delta_alive) -> None:
+        """Tombstone mask row-sharded like ``degrees``; delta shard
+        replicated across every DB shard."""
+        token, ops, _ = self._snap
+        stream = (
+            jax.device_put(jnp.asarray(alive), self._db1),
+            jax.device_put(jnp.asarray(delta_X), self._repl),
+            jax.device_put(jnp.asarray(delta_alive), self._repl1))
+        self._snap = (token, ops, stream)
 
     # -- engine-facing geometry --------------------------------------------
 
@@ -322,6 +533,8 @@ class MeshPlane:
     def shardings(self) -> dict:
         return {"X": self._db2, "neighbors": self._db2, "lambdas": self._db2,
                 "degrees": self._db1, "hubs": self._db1,
+                "alive": self._db1, "delta_X": self._repl,
+                "delta_alive": self._repl1,
                 "query_small": self._repl, "query_large": self._qsharded}
 
     def fingerprint(self) -> dict:
@@ -340,20 +553,34 @@ class MeshPlane:
         return jax.ShapeDtypeStruct((bucket, self.X.shape[1]), jnp.float32,
                                     sharding=self.query_sharding(kind))
 
+    def _sharded_specs(self, arrays, shardings) -> tuple:
+        return tuple(jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s)
+                     for a, s in zip(arrays, shardings))
+
     def compile(self, kind: str, bucket: int, k: int):
         fn = self._D.make_search_fn(self.mesh, self.cfg, kind=kind, k=k)
-        ops = (self.X, *self._parts)
-        wrapped = jax.jit(lambda Qb: fn(*ops, Qb),
-                          in_shardings=(self.query_sharding(kind),),
-                          donate_argnums=(0,) if self.donate else ())
-        return wrapped.lower(self._qspec(kind, bucket)).compile()
+        specs = self._sharded_specs(self.operands(),
+                                    self._operand_shardings())
+        wrapped = jax.jit(
+            fn, donate_argnums=(len(specs),) if self.donate else ())
+        raw = wrapped.lower(*specs, self._qspec(kind, bucket)).compile()
+        return self._bind(raw, self.shape_token())
+
+    def compile_stream(self, kind: str, bucket: int, k: int):
+        stream = self._require_stream()
+        cap = int(stream[1].shape[0])
+        fn = self._D.make_search_fn(self.mesh, self.cfg, kind=kind, k=k,
+                                    stream=True)
+        specs = self._sharded_specs(
+            self.operands() + stream,
+            self._operand_shardings() + (self._db1, self._repl,
+                                         self._repl1))
+        wrapped = jax.jit(
+            fn, donate_argnums=(len(specs),) if self.donate else ())
+        raw = wrapped.lower(*specs, self._qspec(kind, bucket)).compile()
+        return self._bind(raw, self.shape_token(), stream_cap=cap)
 
     # -- AOT persistence ----------------------------------------------------
-
-    def operands(self) -> tuple:
-        # hubs is always a dense array on the mesh plane (possibly empty) —
-        # the shard-mapped search takes the flat 5-tuple unconditionally
-        return (self.X, *self._parts)
 
     def export(self, kind: str, bucket: int, k: int) -> bytes:
         """jax.export of the shard-mapped computation.  The exported module
@@ -362,19 +589,19 @@ class MeshPlane:
         + topology check at load)."""
         from jax import export as jax_export
         fn = self._D.make_search_fn(self.mesh, self.cfg, kind=kind, k=k)
-        specs = tuple(
-            jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s)
-            for a, s in zip(self.operands(), self._operand_shardings()))
+        specs = self._sharded_specs(self.operands(),
+                                    self._operand_shardings())
         exported = jax_export.export(jax.jit(fn))(
             *specs, self._qspec(kind, bucket))
         return bytes(exported.serialize())
 
     def prime(self, exported, kind: str, bucket: int, k: int):
-        ops = self.operands()
-        fn = jax.jit(lambda Qb: exported.call(*ops, Qb),
-                     in_shardings=(self.query_sharding(kind),),
-                     donate_argnums=(0,) if self.donate else ())
-        return fn.lower(self._qspec(kind, bucket)).compile()
+        specs = self._sharded_specs(self.operands(),
+                                    self._operand_shardings())
+        fn = jax.jit(lambda *args: exported.call(*args),
+                     donate_argnums=(len(specs),) if self.donate else ())
+        raw = fn.lower(*specs, self._qspec(kind, bucket)).compile()
+        return self._bind(raw, self.shape_token())
 
     def _operand_shardings(self) -> tuple:
         return (self._db2, self._db2, self._db2, self._db1, self._db1)
