@@ -517,6 +517,55 @@ def mesh_aot_reload():
 
 
 # ==========================================================================
+# compressed residency: int8 scoring vs fp32, recall gate (DESIGN.md §8)
+# ==========================================================================
+
+def quantization_recall():
+    """fp32 vs int8-resident scoring through the serving engine, both
+    regimes, with (rerank_mult=4) and without (rerank_mult=1) the exact
+    fp32 re-rank.  Rows report steady per-query latency + recall@10; the
+    analytic row restates the residency win (bytes DMA'd per candidate
+    tile at the paper's d=960 shape, itemsize 4 vs 1).
+
+    This bench is also the regression gate the CI quick tier runs: if the
+    re-ranked int8 recall@10 drops more than 0.01 below fp32 in either
+    regime, the process exits non-zero (SystemExit deliberately bypasses
+    the harness's per-bench try/except)."""
+    from repro.ann import Index
+    from repro.data.synthetic import recall_at_k
+    from repro.kernels.l2dist import _gather_tile_bytes
+
+    ds = _dataset(n=4000 if QUICK else 12000, nq=256)
+    cfg = _cfg(serve_buckets=(8, 64, 256), large_hops=32 if QUICK else 64)
+    B_small, B_large = 8, 256
+    recalls: dict = {}
+    variants = [("fp32", dict(quantization="none")),
+                ("int8_rerank", dict(quantization="int8", rerank_mult=4)),
+                ("int8_raw", dict(quantization="int8", rerank_mult=1))]
+    for name, kw in variants:
+        index = Index.build(ds.X, dataclasses.replace(cfg, **kw), k=10)
+        for regime, B in (("small", B_small), ("large", B_large)):
+            us = _steady_us(index, ds.Q, B)
+            r = recall_at_k(index.search(ds.Q[:B])[0], ds.gt[:B], 10)
+            recalls[(name, regime)] = r
+            emit(f"quantization/{name}_{regime}_B{B}", us,
+                 f"recall@10={r:.3f}")
+    d960 = _gather_tile_bytes(1, 1024, 960, self_q=False, itemsize=4) / \
+        _gather_tile_bytes(1, 1024, 960, self_q=False, itemsize=1)
+    emit("quantization/dma_bytes_ratio_d960", 0.0,
+         f"fp32_over_int8={d960:.2f}x")
+    for regime in ("small", "large"):
+        fp, q = recalls[("fp32", regime)], recalls[("int8_rerank", regime)]
+        ok = q >= fp - 0.01
+        emit(f"quantization/recall_gate_{regime}", 0.0,
+             f"fp32={fp:.3f};int8_rerank={q:.3f};pass={ok}")
+        if not ok:
+            raise SystemExit(
+                f"quantization recall gate failed ({regime}): "
+                f"int8_rerank={q:.3f} < fp32={fp:.3f} - 0.01")
+
+
+# ==========================================================================
 # kernel microbenches — Pallas timed alongside the XLA refs
 # ==========================================================================
 
@@ -680,6 +729,7 @@ BENCHES = [table2_diversification_time, fig4_cpu_search, fig5_degree_sweep,
            serve_engine_mixed, serve_bucketed_vs_raw, serve_aot_reload,
            streaming_ingest,
            mesh_serve, mesh_aot_reload,
+           quantization_recall,
            kernel_micro,
            hotpath_micro, search_backend_compare, roofline_table]
 

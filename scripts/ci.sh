@@ -3,7 +3,9 @@
 #
 # quick — kernel-backend parity (including the gather-fused scalar-prefetch
 #   DMA path, exercised in interpret mode), the facade save/load round-trip
-#   tier, queue QoS (deadlines + bypass), the fast test suite, and smoke
+#   tier, queue QoS (deadlines + bypass), compressed residency (int8
+#   parity + re-rank + artifact v4 + the recall@10 regression gate and a
+#   --quantization int8 save/load smoke), the fast test suite, and smoke
 #   benchmarks (bucketed serving + AOT reload rows, an explicit
 #   kernel_backend=xla serve run, the fused-vs-gather hotpath rows, and the
 #   facade build->save->load->serve->query smoke through the launcher and
@@ -34,11 +36,14 @@ quick_tier() {
     echo "== streaming mutability: add/delete/compact lifecycle =="
     python -m pytest -q tests/test_streaming.py
 
+    echo "== compressed residency: int8 parity, re-rank, artifact v4 =="
+    python -m pytest -q tests/test_quantize.py
+
     echo "== quick test tier =="
     python -m pytest -q -m "not slow" --ignore=tests/test_distributed.py \
         --ignore=tests/test_hotpath.py --ignore=tests/test_search_dedup.py \
         --ignore=tests/test_ann_facade.py --ignore=tests/test_queue_qos.py \
-        --ignore=tests/test_streaming.py \
+        --ignore=tests/test_streaming.py --ignore=tests/test_quantize.py \
         --ignore=tests/test_mesh_plane.py
 
     echo "== serving smoke bench (incl. serve/aot_reload rows) =="
@@ -49,6 +54,22 @@ quick_tier() {
 
     echo "== hotpath micro bench (fused vs gather-then-block rows) =="
     REPRO_BENCH_QUICK=1 REPRO_BENCH_ONLY=hotpath python -m benchmarks.run
+
+    echo "== quantization bench + recall gate (int8 within 0.01 of fp32) =="
+    REPRO_BENCH_QUICK=1 REPRO_BENCH_ONLY=quantization python -m benchmarks.run \
+        | tee /tmp/quant_bench.log
+    grep -q "recall_gate_small.*pass=True" /tmp/quant_bench.log
+    grep -q "recall_gate_large.*pass=True" /tmp/quant_bench.log
+    rm -f /tmp/quant_bench.log
+
+    echo "== int8 smoke: build -> save -> load (v4 artifact, 0 compiles) =="
+    QXDIR="$(mktemp -d)/qx"
+    python -m repro.launch.serve --n 4000 --d 16 --batches 4 --backend xla \
+        --quantization int8 --save-index "$QXDIR"
+    python -m repro.launch.serve --n 4000 --d 16 --batches 6 --backend xla \
+        --load-index "$QXDIR" | tee /tmp/quant_reload.log
+    grep -q "compiles=0" /tmp/quant_reload.log
+    rm -rf "$(dirname "$QXDIR")" /tmp/quant_reload.log
 
     echo "== facade smoke: build -> save -> load -> serve -> query =="
     IXDIR="$(mktemp -d)/ix"

@@ -27,6 +27,13 @@ are simply frozen indexes at generation 0).  AOT blobs persist only the
 frozen serving form — streaming executables are cheap shape-variants
 recompiled on demand after a load restores the mutation state.
 
+Format v4 persists the compressed-residency payload (DESIGN.md §8): when
+the index was built with ``cfg.quantization="int8"``, the arrays carry the
+per-row int8 ``codes`` + fp32 ``scales`` alongside the fp32 database, so
+``load`` re-binds them directly instead of re-quantizing.  v1–v3 artifacts
+(or a v4 artifact saved with quantization off) simply lack the keys; a
+quantized config loading one derives the codes at plane install.
+
 The AOT blobs are exported with the database and graph as *runtime
 arguments* (never embedded constants), so each is a few tens of KB
 regardless of index size.  :func:`load_index` closes the deserialized
@@ -67,10 +74,11 @@ import numpy as np
 from repro.configs.base import ANNConfig
 from repro.core.diversify import PackedGraph
 
-FORMAT_VERSION = 3
+FORMAT_VERSION = 4
 # still-readable older revisions (1 = pre-plane single-device layout,
-# 2 = pre-streaming: no generation counter / streaming payload)
-READ_VERSIONS = (1, 2, 3)
+# 2 = pre-streaming: no generation counter / streaming payload,
+# 3 = pre-quantization: no persisted int8 codes/scales)
+READ_VERSIONS = (1, 2, 3, 4)
 MAGIC = "repro-ann-index"
 _MANIFEST = "manifest.json"
 _ARRAYS = "arrays.npz"
@@ -78,7 +86,7 @@ _STREAMING = "streaming.npz"
 _GRAPH_KEYS = ("neighbors", "lambdas", "degrees")
 # fields that must match for persisted executables to be trusted
 _FP_KEYS = ("jax", "platform", "device_kind", "kernel_backend",
-            "gather_fused", "plane")
+            "gather_fused", "plane", "quantization")
 
 
 class ArtifactError(RuntimeError):
@@ -141,6 +149,11 @@ def _shard_arrays(eng) -> list:
     full["degrees"] = np.asarray(g.degrees)
     full["hubs"] = (np.asarray(g.hubs) if g.hubs is not None
                     else np.zeros((0,), np.int32))
+    if getattr(plane, "quantized", False):
+        # operand order is (X, nbrs, lams, degs, hubs, codes, scales)
+        ops = plane.operands()
+        full["codes"] = np.asarray(ops[5])
+        full["scales"] = np.asarray(ops[6])
     shards = []
     for i in range(n_shards):
         shard = {}
@@ -216,6 +229,9 @@ def save_index(index, path, *, aot: bool = True, extra_ks=()) -> Path:
                   "degrees": np.asarray(g.degrees)}
         if g.hubs is not None:
             arrays["hubs"] = np.asarray(g.hubs)
+        if getattr(plane, "quantized", False):
+            arrays["codes"] = np.asarray(plane.codes)
+            arrays["scales"] = np.asarray(plane.scales)
         np.savez(path / _ARRAYS, **arrays)
         manifest["arrays"] = {"file": _ARRAYS,
                               "sha256": _sha256(path / _ARRAYS)}
@@ -272,6 +288,8 @@ def _prime_aot(index, path: Path, manifest: dict) -> None:
     now_fp = eng.plane.fingerprint()
     # version-1 artifacts predate the plane field; they were all single
     saved_fp.setdefault("plane", "single")
+    # pre-v4 artifacts predate compressed residency; all unquantized
+    saved_fp.setdefault("quantization", "none")
     stale = [f for f in _FP_KEYS if saved_fp.get(f) != now_fp.get(f)]
     if eng.plane.name == "mesh":
         # exported mesh modules are pinned to the device count and the
@@ -354,6 +372,10 @@ def load_index(index_cls, path, *, mesh=None):
             lambdas=jnp.asarray(arrs["lambdas"]),
             degrees=jnp.asarray(arrs["degrees"]),
             hubs=jnp.asarray(arrs["hubs"]) if "hubs" in arrs else None)
+        # v4 compressed-residency payload: re-bind the saved codes instead
+        # of re-quantizing (pre-v4 quantized configs derive them at install)
+        quant = ((arrs["codes"], arrs["scales"])
+                 if "codes" in arrs else None)
         if mesh is not None:
             warnings.warn(
                 "single-device artifact loaded with mesh=: resharding — "
@@ -363,15 +385,19 @@ def load_index(index_cls, path, *, mesh=None):
             return _finish_load(
                 index_cls(X, cfg, k=k, mesh=mesh, threshold=threshold),
                 path, manifest)
-        index = index_cls(X, cfg, k=k, graph=graph, threshold=threshold)
+        index = index_cls(X, cfg, k=k, graph=graph, threshold=threshold,
+                          quant=quant)
         _prime_aot(index, path, manifest)
         return _finish_load(index, path, manifest)
 
     # ---- sharded (mesh) artifact -----------------------------------------
     shard_entries = manifest["arrays"]
     shards = [_verified_npz(path, e) for e in shard_entries]
+    names = ("X", *_GRAPH_KEYS, "hubs")
+    if "codes" in shards[0]:  # v4 compressed-residency payload
+        names = names + ("codes", "scales")
     full = {name: np.concatenate([s[name] for s in shards], axis=0)
-            for name in ("X", *_GRAPH_KEYS, "hubs")}
+            for name in names}
     topo = manifest.get("topology", {})
 
     if mesh is None:
@@ -410,6 +436,11 @@ def load_index(index_cls, path, *, mesh=None):
         jax.device_put(jnp.asarray(full["degrees"]), sh["row1"]),
         jax.device_put(jnp.asarray(full["hubs"]), sh["row1"]),
     )
+    if "codes" in full:  # v4: re-bind saved codes, skip re-quantization
+        parts = parts + (
+            jax.device_put(jnp.asarray(full["codes"]), sh["row2"]),
+            jax.device_put(jnp.asarray(full["scales"]), sh["row1"]),
+        )
     plane = MeshPlane(None, cfg, mesh, parts=parts)
     index = index_cls(None, cfg, k=k, plane=plane, threshold=threshold)
     _prime_aot(index, path, manifest)

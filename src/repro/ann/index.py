@@ -55,7 +55,8 @@ class Index:
 
     def __init__(self, X, cfg: ANNConfig | None = None, *, k: int = 10,
                  graph=None, mesh=None, plane=None, stages=None,
-                 tile: int = 2048, threshold: float | None = None):
+                 tile: int = 2048, threshold: float | None = None,
+                 quant: tuple | None = None):
         from repro.serve.engine import ANNEngine
 
         cfg = cfg or ANNConfig()
@@ -69,7 +70,8 @@ class Index:
             raise ValueError("stages= only applies when the pipeline runs "
                              "(not with graph= or mesh=)")
         self.engine = ANNEngine(X, cfg, k=k, graph=graph, mesh=mesh,
-                                plane=plane, threshold=threshold)
+                                plane=plane, threshold=threshold,
+                                quant=quant)
 
     @classmethod
     def build(cls, X, cfg: ANNConfig | None = None, *, k: int = 10,

@@ -1,0 +1,55 @@
+"""Symmetric int8 row quantization for compressed residency (DESIGN.md §8).
+
+The database rows are quantized **per row**: each row gets its own fp32
+scale ``max|x| / 127`` and an int8 code vector, so a single outlier row
+cannot crush the resolution of every other row (the per-tensor scheme in
+:mod:`repro.optim.compression` is fine for gradients, where error feedback
+absorbs the residual, but not for distances, where the error is paid every
+query).  Zero rows get scale 1.0 so they round-trip to exact zeros.
+
+Scoring dequantizes **in-kernel** — the HBM->VMEM DMA moves int8 bytes
+(~4x less traffic per row than fp32), then the block kernel widens to
+fp32 and applies the scale before the MXU dot, so both kernel backends
+share one arithmetic formulation and stay bitwise-identical.
+
+The per-tensor helpers (``quantize`` / ``dequantize``) used by the
+gradient-compression path live here too; ``repro.optim.compression``
+re-exports them through a warn-once shim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x: jax.Array):
+    """Symmetric per-tensor int8 quantization -> (q, scale)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x32)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array):
+    return q.astype(jnp.float32) * scale
+
+
+def quantize_rows(X: jax.Array):
+    """Per-row symmetric int8 quantization of a [N, d] database.
+
+    Returns ``(codes [N, d] int8, scales [N] float32)`` with
+    ``codes[i] * scales[i] ~= X[i]`` to within ``scales[i] / 2`` per
+    component.  All-zero rows get scale 1.0 (not an epsilon) so they
+    dequantize to exact zeros.
+    """
+    x32 = jnp.asarray(X).astype(jnp.float32)
+    raw = jnp.max(jnp.abs(x32), axis=1) / 127.0
+    scales = jnp.where(raw > 0.0, raw, 1.0)
+    codes = jnp.clip(jnp.round(x32 / scales[:, None]),
+                     -127, 127).astype(jnp.int8)
+    return codes, scales
+
+
+def dequantize_rows(codes: jax.Array, scales: jax.Array):
+    """Inverse of :func:`quantize_rows` -> [N, d] float32."""
+    return codes.astype(jnp.float32) * scales[:, None]

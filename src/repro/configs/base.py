@@ -261,6 +261,12 @@ class ANNConfig:
     # the shard grows by doubling from here, so streaming executables
     # recompile O(log adds) times
     delta_min_cap: int = 256
+    # compressed residency (DESIGN.md §8): "int8" scores candidates against
+    # per-row symmetric int8 codes in-kernel (~4x less HBM->VMEM DMA per
+    # row) and exact-re-ranks the top rerank_mult*k survivors from the fp32
+    # rows; "none" keeps today's bitwise-exact fp32 trace
+    quantization: str = "none"
+    rerank_mult: int = 4
     family: str = "ann"
 
     def __post_init__(self):
@@ -281,6 +287,13 @@ class ANNConfig:
         if self.delta_min_cap < 1:
             raise ValueError(
                 f"delta_min_cap={self.delta_min_cap} must be >= 1")
+        if self.quantization not in ("none", "int8"):
+            raise ValueError(
+                f"quantization={self.quantization!r} must be 'none' or "
+                "'int8'")
+        if self.rerank_mult < 1:
+            raise ValueError(
+                f"rerank_mult={self.rerank_mult} must be >= 1")
         if self.kernel_backend not in ("auto", "pallas", "xla"):
             # third-party backends are legal if registered; consult the
             # registry lazily so importing configs stays jax-free

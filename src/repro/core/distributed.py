@@ -175,14 +175,28 @@ def make_search_fn(mesh: Mesh, cfg: ANNConfig, *, kind: str = "large",
     unroll = getattr(cfg, "unroll_scans", False)
     backend = getattr(cfg, "kernel_backend", "auto")
     gather_fused = getattr(cfg, "gather_fused", None)
+    quantized = getattr(cfg, "quantization", "none") == "int8"
+    rerank_mult = getattr(cfg, "rerank_mult", 4)
 
     def local_search(X_s, nbrs_s, lams_s, degs_s, hubs_s, *rest):
+        rest = list(rest)
+        codes_s = scales_s = None
+        if quantized:  # row-sharded codes ride right after the fp32 parts
+            codes_s, scales_s = rest[0], rest[1]
+            rest = rest[2:]
+        d_codes = d_scales = None
         if stream:
-            alive_s, delta_X, delta_alive, Q_s = rest
+            alive_s, delta_X, delta_alive = rest[0], rest[1], rest[2]
+            rest = rest[3:]
+            if quantized:
+                d_codes, d_scales = rest[0], rest[1]
+                rest = rest[2:]
         else:
             alive_s, delta_X, delta_alive = None, None, None
-            (Q_s,) = rest
+        (Q_s,) = rest
         n_local = X_s.shape[0]
+        quant_kw = dict(codes=codes_s, scales=scales_s,
+                        rerank_mult=rerank_mult) if quantized else {}
         if getattr(cfg, "db_bf16", False):  # beyond-paper: bf16 database
             X_s = X_s.astype(jnp.bfloat16)
         graph = PackedGraph(neighbors=nbrs_s, lambdas=lams_s,
@@ -208,7 +222,7 @@ def make_search_fn(mesh: Mesh, cfg: ANNConfig, *, kind: str = "large",
                 lambda_limit=10, metric=cfg.metric, unroll=unroll,
                 t0_offset=q_idx * t0_local, t0_total=t0_local * n_q,
                 alive=alive_s,
-                backend=backend, gather_fused=gather_fused)
+                backend=backend, gather_fused=gather_fused, **quant_kw)
         else:
             ids, dist = _large_batch_search(
                 X_s, graph, Q_s, k=k, ef=cfg.large_ef, hops=cfg.large_hops,
@@ -221,7 +235,7 @@ def make_search_fn(mesh: Mesh, cfg: ANNConfig, *, kind: str = "large",
                 gather_limit=getattr(cfg, "gather_limit", 0),
                 exact_visited=getattr(cfg, "exact_visited", False),
                 alive=alive_s,
-                backend=backend, gather_fused=gather_fused)
+                backend=backend, gather_fused=gather_fused, **quant_kw)
         gids = jnp.where(ids < n_local, ids + offset, PAD_ID)
         dist = jnp.where(ids < n_local, dist, INF)
         # merge across DB shards (and search shards in the small regime)
@@ -239,23 +253,47 @@ def make_search_fn(mesh: Mesh, cfg: ANNConfig, *, kind: str = "large",
             from repro.core import hotpath as HP
             cap = delta_X.shape[0]
             n_total = n_local * n_db
-            dd = HP.scan_distances(Q_s, delta_X, metric=cfg.metric,
-                                   mask=delta_alive, backend=backend)
-            d_gids = jnp.where(
-                delta_alive,
-                n_total + jnp.arange(cap, dtype=jnp.int32), PAD_ID)
-            all_ids = jnp.concatenate(
-                [all_ids, jnp.broadcast_to(d_gids[None], dd.shape)], axis=1)
-            all_d = jnp.concatenate(
-                [all_d, jnp.where(delta_alive[None], dd, INF)], axis=1)
+            if quantized:
+                # approx scan over int8 delta codes, then exact fp32
+                # re-rank of the surviving slots — bitwise the single
+                # plane's quantized delta pipeline (replicated operands,
+                # so every shard computes identical candidates)
+                dd = HP.scan_distances(Q_s, d_codes, metric=cfg.metric,
+                                       mask=delta_alive, backend=backend,
+                                       scales=d_scales)
+                r = min(max(rerank_mult, 1) * k, cap)
+                slots = jnp.broadcast_to(
+                    jnp.arange(cap, dtype=jnp.int32)[None], dd.shape)
+                sd, ss = HP.rank_merge(dd, slots, keep=r, backend=backend)
+                ed = HP.neighbor_distances(
+                    Q_s, delta_X, ss, metric=cfg.metric, mask=sd < INF,
+                    backend=backend, gather_fused=gather_fused)
+                d_gids = jnp.where(ed < INF, n_total + ss, PAD_ID)
+                all_ids = jnp.concatenate([all_ids, d_gids], axis=1)
+                all_d = jnp.concatenate([all_d, ed], axis=1)
+            else:
+                dd = HP.scan_distances(Q_s, delta_X, metric=cfg.metric,
+                                       mask=delta_alive, backend=backend)
+                d_gids = jnp.where(
+                    delta_alive,
+                    n_total + jnp.arange(cap, dtype=jnp.int32), PAD_ID)
+                all_ids = jnp.concatenate(
+                    [all_ids, jnp.broadcast_to(d_gids[None], dd.shape)],
+                    axis=1)
+                all_d = jnp.concatenate(
+                    [all_d, jnp.where(delta_alive[None], dd, INF)], axis=1)
         return merge_topk(all_ids, all_d, k)
 
     q_spec = P(None, None) if kind == "small" else P(q_ax, None)
     out_spec = P(None, None) if kind == "small" else P(q_ax, None)
     in_specs = (P(d_ax, None), P(d_ax, None), P(d_ax, None), P(d_ax),
                 P(d_ax))
+    if quantized:  # row-sharded int8 codes + per-row scales
+        in_specs = in_specs + (P(d_ax, None), P(d_ax))
     if stream:
         in_specs = in_specs + (P(d_ax), P(None, None), P(None))
+        if quantized:  # replicated delta codes + scales
+            in_specs = in_specs + (P(None, None), P(None))
     fn = shard_map(
         local_search, mesh=mesh,
         in_specs=in_specs + (q_spec,),

@@ -44,19 +44,38 @@ from repro.kernels import topk as _topk
 INF = jnp.float32(3.4e38)
 
 
-def _dist_block(Q3, V3, mask, metric: str):
+def _dist_block(Q3, V3, mask, metric: str, v_scale=None):
     """The shared arithmetic formulation (XLA reference). Mirrors
-    ``l2dist._block_kernel`` op-for-op so both backends agree bitwise."""
+    ``l2dist._block_kernel`` op-for-op so both backends agree bitwise.
+    ``v_scale`` [S, C] dequantizes int8 candidate rows exactly as the
+    Pallas kernels do: widen to fp32, then scale, then contract.  On the
+    quantized path the dequantized rows sit behind an optimization
+    barrier (XLA would otherwise hoist the per-row scale out of the dot)
+    and the norm terms are batched self-``dot_general`` contractions
+    rather than multiply-then-``sum`` — a plain reduce's accumulation
+    order varies with the surrounding program (1-ulp drift between the
+    two backends' traces), a ``dot_general`` contraction does not.  The
+    kernels mirror both choices under their ``pin`` flag."""
     Q3 = Q3.astype(jnp.float32)
     V3 = V3.astype(jnp.float32)
+    pin = v_scale is not None
+    if pin:
+        V3 = jax.lax.optimization_barrier(V3 * v_scale[:, :, None])
     dots = jax.lax.dot_general(Q3, V3, (((2,), (2,)), ((0,), (0,))),
                                preferred_element_type=jnp.float32)
     if metric in ("ip", "cos"):
         dist = -dots
     else:
-        qn = jnp.sum(Q3 * Q3, axis=2)[:, :, None]
-        vn = jnp.sum(V3 * V3, axis=2)[:, None, :]
-        dist = qn + vn - 2.0 * dots
+        if pin:
+            nd = (((2,), (2,)), ((0, 1), (0, 1)))
+            qn = jax.lax.dot_general(Q3, Q3, nd,
+                                     preferred_element_type=jnp.float32)
+            vn = jax.lax.dot_general(V3, V3, nd,
+                                     preferred_element_type=jnp.float32)
+        else:
+            qn = jnp.sum(Q3 * Q3, axis=2)
+            vn = jnp.sum(V3 * V3, axis=2)
+        dist = qn[:, :, None] + vn[:, None, :] - 2.0 * dots
     return jnp.where(mask[:, None, :], dist, INF)
 
 
@@ -92,10 +111,12 @@ class _XlaBackend:
 
     @staticmethod
     def neighbor_distances(Q, X, idx, *, metric, mask=None, interpret=None,
-                           gather_fused=None, q_idx=None):
+                           gather_fused=None, q_idx=None, scales=None):
         V, m = _gather_and_mask(X, idx, mask)
         Q3, squeeze = _q3_of(Q, X, q_idx)
-        out = _dist_block(Q3, V, m, metric)
+        sc = None if scales is None \
+            else scales[jnp.clip(idx, 0, X.shape[0] - 1)]
+        out = _dist_block(Q3, V, m, metric, v_scale=sc)
         return out[:, 0] if squeeze else out
 
     @staticmethod
@@ -111,9 +132,12 @@ class _XlaBackend:
                 jnp.take_along_axis(ids, order, axis=1)[:, :keep])
 
     @staticmethod
-    def scan_distances(Q, Xd, *, metric, mask=None, interpret=None):
+    def scan_distances(Q, Xd, *, metric, mask=None, interpret=None,
+                       scales=None):
         m = jnp.ones((Xd.shape[0],), bool) if mask is None else mask
-        return _dist_block(Q[None], Xd[None], m[None], metric)[0]
+        sc = None if scales is None else scales[None]
+        return _dist_block(Q[None], Xd[None], m[None], metric,
+                           v_scale=sc)[0]
 
 
 class _PallasBackend:
@@ -123,7 +147,7 @@ class _PallasBackend:
 
     @staticmethod
     def neighbor_distances(Q, X, idx, *, metric, mask=None, interpret=None,
-                           gather_fused=None, q_idx=None):
+                           gather_fused=None, q_idx=None, scales=None):
         interp = _interp(interpret)
         mode = gather_fused or "auto"
         if mode not in ("auto", "on", "off"):
@@ -134,21 +158,27 @@ class _PallasBackend:
         # the in-kernel query gather only pays off when the query rows are
         # the candidate rows (the diversify tiles pass the same id array)
         self_q = q_idx is idx and q_idx is not None
+        if self_q and scales is not None:
+            raise ValueError("self_q tiles (build-time diversify) score "
+                             "fp32 rows; scales= is a search-time knob")
         Kq = C if self_q else (
             1 if (q_idx is None and Q.ndim == 2) else
             (q_idx.shape[-1] if q_idx is not None else Q.shape[1]))
-        fits = _l2.gather_fused_fits(Kq, C, d, self_q=self_q)
+        # int8 codes DMA 1 byte/element — the fused window widens ~4x
+        fits = _l2.gather_fused_fits(Kq, C, d, self_q=self_q,
+                                     itemsize=X.dtype.itemsize)
         # auto: fused only where it wins — on real TPU (interpret-mode DMA
         # emulation is far slower than one XLA gather) and inside budget
         use_fused = mode == "on" or (mode == "auto" and not interp and fits)
+        idx_c = jnp.clip(idx, 0, X.shape[0] - 1)
+        sc = None if scales is None else scales[idx_c]
         if not use_fused:
             V, m = _gather_and_mask(X, idx, mask)
             Q3, squeeze = _q3_of(Q, X, q_idx)
-            out = _l2.block_distances_pallas(Q3, V, m, metric=metric,
+            out = _l2.block_distances_pallas(Q3, V, m, sc, metric=metric,
                                              interpret=interp)
             return out[:, 0] if squeeze else out
         m = _valid_mask(X, idx, mask)
-        idx_c = jnp.clip(idx, 0, X.shape[0] - 1)
         if self_q:
             out = _l2.gather_block_distances_pallas(
                 None, X, idx_c, m, metric=metric, interpret=interp,
@@ -156,7 +186,7 @@ class _PallasBackend:
             return out
         Q3, squeeze = _q3_of(Q, X, q_idx)
         out = _l2.gather_block_distances_pallas(
-            Q3, X, idx_c, m, metric=metric, interpret=interp)
+            Q3, X, idx_c, m, sc, metric=metric, interpret=interp)
         return out[:, 0] if squeeze else out
 
     @staticmethod
@@ -165,13 +195,15 @@ class _PallasBackend:
                                        interpret=_interp(interpret))
 
     @staticmethod
-    def scan_distances(Q, Xd, *, metric, mask=None, interpret=None):
+    def scan_distances(Q, Xd, *, metric, mask=None, interpret=None,
+                       scales=None):
         # bs=1: the whole scan is ONE [1, B, cap] block — the same operand
         # shapes as the XLA reference's single contraction, so the backends
         # keep their bitwise-parity contract (row tiling would change the
         # gemm's accumulation grouping)
         m = jnp.ones((Xd.shape[0],), bool) if mask is None else mask
-        out = _l2.block_distances_pallas(Q[None], Xd[None], m[None],
+        sc = None if scales is None else scales[None]
+        out = _l2.block_distances_pallas(Q[None], Xd[None], m[None], sc,
                                          metric=metric, bs=1,
                                          interpret=_interp(interpret))
         return out[0]
@@ -209,7 +241,8 @@ def resolve_backend(name: str | None = None) -> str:
 
 def neighbor_distances(Q, X, idx, *, metric: str = "l2", mask=None,
                        backend: str | None = None, interpret=None,
-                       gather_fused: str | None = None, q_idx=None):
+                       gather_fused: str | None = None, q_idx=None,
+                       scales=None):
     """Fused gather + distance block, smaller = closer.
 
     Q [S, d] (or [S, Kq, d]), X [N, d], idx [S, C] -> [S, C] (or
@@ -229,11 +262,16 @@ def neighbor_distances(Q, X, idx, *, metric: str = "l2", mask=None,
     the VMEM budget), ``"on"`` (force the DMA path — the parity tests),
     ``"off"`` (always gather at the XLA level).  The XLA backend ignores
     it: that path stays the bitwise oracle.
+
+    ``scales`` [N] float32 switches on compressed residency (DESIGN.md
+    §8): X is then the per-row int8 code matrix and every candidate row
+    is dequantized in-kernel as ``code * scale`` before the contraction —
+    approximate distances whose survivors the search re-ranks exactly.
     """
     b = resolve_backend(backend)
     return _REGISTRY[b].neighbor_distances(
         Q, X, idx, metric=metric, mask=mask, interpret=interpret,
-        gather_fused=gather_fused, q_idx=q_idx)
+        gather_fused=gather_fused, q_idx=q_idx, scales=scales)
 
 
 def rank_merge(dists, ids, *, keep: int, mask=None,
@@ -247,7 +285,8 @@ def rank_merge(dists, ids, *, keep: int, mask=None,
 
 
 def scan_distances(Q, Xd, *, metric: str = "l2", mask=None,
-                   backend: str | None = None, interpret=None):
+                   backend: str | None = None, interpret=None,
+                   scales=None):
     """Brute-force distance block of a whole (delta) shard against a query
     batch: Q [B, d], Xd [cap, d] -> [B, cap] float32, smaller = closer.
 
@@ -258,7 +297,9 @@ def scan_distances(Q, Xd, *, metric: str = "l2", mask=None,
     bool) demotes unfilled / tombstoned delta slots to INF in-kernel, the
     same keep-mask semantics as :func:`neighbor_distances`.  Both backends
     share the :func:`_dist_block` arithmetic, so they agree bitwise (the
-    parity contract of ``tests/test_hotpath.py``)."""
+    parity contract of ``tests/test_hotpath.py``).  ``scales`` [cap]
+    float32 marks Xd as int8 codes (compressed delta shard) and
+    dequantizes in-kernel, same as :func:`neighbor_distances`."""
     b = resolve_backend(backend)
     impl = _REGISTRY[b]
     fn = getattr(impl, "scan_distances", None)
@@ -268,17 +309,20 @@ def scan_distances(Q, Xd, *, metric: str = "l2", mask=None,
             (Q.shape[0], Xd.shape[0]))
         m = None if mask is None else jnp.broadcast_to(mask, idx.shape)
         return impl.neighbor_distances(Q, Xd, idx, metric=metric, mask=m,
-                                       interpret=interpret)
-    return fn(Q, Xd, metric=metric, mask=mask, interpret=interpret)
+                                       interpret=interpret, scales=scales)
+    return fn(Q, Xd, metric=metric, mask=mask, interpret=interpret,
+              scales=scales)
 
 
 def seed_select(Q, X, seeds, *, metric: str = "l2", k: int = 1, mask=None,
                 backend: str | None = None, interpret=None,
-                gather_fused: str | None = None):
+                gather_fused: str | None = None, scales=None):
     """Distance + masked top-k over seed candidates: returns
-    (dists [S, k], ids [S, k]) of the k closest valid seeds per row."""
+    (dists [S, k], ids [S, k]) of the k closest valid seeds per row.
+    ``scales`` as in :func:`neighbor_distances` (int8 codes in X)."""
     b = resolve_backend(backend)
     d = _REGISTRY[b].neighbor_distances(Q, X, seeds, metric=metric,
                                         mask=mask, interpret=interpret,
-                                        gather_fused=gather_fused)
+                                        gather_fused=gather_fused,
+                                        scales=scales)
     return _REGISTRY[b].rank_merge(d, seeds, keep=k, interpret=interpret)

@@ -51,7 +51,8 @@ def _seg_merge(d3, i3, keep: int, backend: str):
     static_argnames=("k", "ef", "hops", "lambda_limit", "metric",
                      "n_seeds", "m_seg", "seg", "mv_seg", "segv",
                      "push_all_seeds", "unroll", "gather_limit",
-                     "exact_visited", "backend", "gather_fused"))
+                     "exact_visited", "backend", "gather_fused",
+                     "rerank_mult"))
 def _large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
                        ef: int = 64, hops: int = 128, lambda_limit: int = 5,
                        metric: str = "l2", n_seeds: int = 32,
@@ -62,7 +63,8 @@ def _large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
                        gather_limit: int = 0, exact_visited: bool = False,
                        alive=None,
                        backend: str = "auto",
-                       gather_fused: str | None = None):
+                       gather_fused: str | None = None,
+                       codes=None, scales=None, rerank_mult: int = 0):
     """Returns (ids [B, k], dists [B, k]).
 
     `alive` (optional traced [N] bool) is the streaming tombstone mask
@@ -80,6 +82,13 @@ def _large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
     collapse from three structure scans (V rows, C rows, R array) to one
     [M]-byte gather — the CUDA shared-memory capacity constraint that
     forced the lossy V does not exist on TPU.
+
+    ``codes`` [N, d] int8 + ``scales`` [N] f32 (compressed residency,
+    DESIGN.md §8): seed selection and every expansion score against the
+    quantized rows in-kernel; the top ``rerank_mult * k`` of the final R
+    are re-scored exactly against the fp32 ``X`` before the returned
+    top-k — returned distances are exact.  ``codes=None`` traces the
+    frozen fp32 computation bit-for-bit.
     """
     N, d = X.shape
     B = Q.shape[0]
@@ -120,9 +129,10 @@ def _large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
     dupm = jnp.concatenate([jnp.zeros((B, 1), bool),
                             ss_ids[:, 1:] == ss_ids[:, :-1]], axis=1)
     seed_keep = ~dupm if alive is None else ~dupm & alive[ss_ids]
-    init_d, sids = HP.seed_select(Q, X, ss_ids, metric=metric, k=n_seeds,
-                                  mask=seed_keep, backend=backend,
-                                  gather_fused=gather_fused)
+    X_score = X if codes is None else codes  # int8 codes when quantized
+    init_d, sids = HP.seed_select(Q, X_score, ss_ids, metric=metric,
+                                  k=n_seeds, mask=seed_keep, backend=backend,
+                                  gather_fused=gather_fused, scales=scales)
     if not push_all_seeds:
         # keep only the best seed (paper: R = C = {u}); sorted, so column 0
         first = jnp.arange(n_seeds)[None, :] == 0
@@ -224,9 +234,9 @@ def _large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
 
         # ---- distances for new candidates: ONE fused gather+GEMM+mask
         # block for the whole batch (the per-hop hot spot) --------------
-        ed = HP.neighbor_distances(Q, X, e_safe, metric=metric, mask=new,
-                                   backend=backend,
-                                   gather_fused=gather_fused)
+        ed = HP.neighbor_distances(Q, X_score, e_safe, metric=metric,
+                                   mask=new, backend=backend,
+                                   gather_fused=gather_fused, scales=scales)
         admit = (ed < worst[:, None]) | ~r_full[:, None]   # paper line 17
         ed = jnp.where(admit, ed, INF)
 
@@ -254,7 +264,20 @@ def _large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
     state = (R_ids, R_d, C_ids, C_d, V, V_ptr, jnp.zeros((B,), bool))
     (R_ids, R_d, *_), _ = jax.lax.scan(step, state, None, length=hops,
                                        unroll=unroll)
-    return R_ids[:, :k].astype(jnp.int32), R_d[:, :k]
+    if codes is None:
+        return R_ids[:, :k].astype(jnp.int32), R_d[:, :k]
+    # exact fp32 re-rank of the best rerank_mult*k survivors (R is already
+    # (dist, id)-sorted and id-deduped, so a prefix slice is the top pool).
+    # INF lanes (unfilled R slots carrying sentinel id N) stay masked
+    # through the re-score, so they cannot displace real survivors.
+    rerank = min(max(rerank_mult, 1) * k, ef)
+    rr_ids = R_ids[:, :rerank]
+    rr_d = R_d[:, :rerank]
+    ed = HP.neighbor_distances(Q, X, rr_ids, metric=metric,
+                               mask=rr_d < INF, backend=backend,
+                               gather_fused=gather_fused)
+    out_d, out_ids = HP.rank_merge(ed, rr_ids, keep=k, backend=backend)
+    return out_ids.astype(jnp.int32), out_d
 
 
 def large_batch_search(*args, **kwargs):

@@ -45,7 +45,8 @@ INF = jnp.float32(3.4e38)
     jax.jit,
     static_argnames=("k", "t0", "hops", "hop_width", "n_seeds",
                      "lambda_limit", "metric", "exact_merge", "width",
-                     "unroll", "backend", "gather_fused", "t0_total"))
+                     "unroll", "backend", "gather_fused", "t0_total",
+                     "rerank_mult"))
 def _small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
                        t0: int = 32, hops: int = 6, hop_width: int = 32,
                        n_seeds: int = 32, lambda_limit: int = 10,
@@ -55,7 +56,8 @@ def _small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
                        t0_offset=0, t0_total: int | None = None,
                        alive=None,
                        backend: str = "auto",
-                       gather_fused: str | None = None):
+                       gather_fused: str | None = None,
+                       codes=None, scales=None, rerank_mult: int = 0):
     """Returns (ids [B, k], dists [B, k]).  `seed_offset` may be traced
     (it perturbs the base key — a cheap way to decorrelate restarts).
 
@@ -83,6 +85,14 @@ def _small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
     the sharded small regime is bitwise-identical to the single-device one
     (DESIGN.md §6).  `t0_offset` may be traced (it is an `axis_index`
     product inside shard_map).
+
+    ``codes`` [N, d] int8 + ``scales`` [N] f32 (compressed residency,
+    DESIGN.md §8): seed selection and every hop score against the
+    quantized rows in-kernel; the final merge keeps the best
+    ``rerank_mult * k`` distinct survivors, re-scores them exactly
+    against the fp32 ``X``, and only then takes top-k — returned
+    distances are exact.  ``codes=None`` traces the frozen fp32
+    computation bit-for-bit.
     """
     N, d = X.shape
     B = Q.shape[0]
@@ -112,9 +122,11 @@ def _small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
                                           (n_seeds // 2,), 0, nh))(row_keys)
         seeds = seeds.at[:, : n_seeds // 2].set(graph.hubs[hub_pick])
     seed_mask = alive[seeds] if alive is not None else None
-    sd1, si1 = HP.seed_select(Qs, X, seeds, metric=metric, k=1,
+    X_score = X if codes is None else codes  # int8 codes when quantized
+    sd1, si1 = HP.seed_select(Qs, X_score, seeds, metric=metric, k=1,
                               mask=seed_mask, backend=backend,
-                              gather_fused=gather_fused)      # [S, 1] each
+                              gather_fused=gather_fused,
+                              scales=scales)                  # [S, 1] each
     u, u_d = si1[:, 0], sd1[:, 0]
 
     rij_ids = jnp.full((S, width), N, jnp.int32)
@@ -136,9 +148,10 @@ def _small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
         visit = lams < lambda_limit  # idx >= N masked by the primitive
         if alive is not None:  # tombstoned neighbors never enter a ranking
             visit = visit & alive[jnp.clip(nbrs, 0, N - 1)]
-        dists = HP.neighbor_distances(Qs, X, nbrs, metric=metric,
+        dists = HP.neighbor_distances(Qs, X_score, nbrs, metric=metric,
                                       mask=visit, backend=backend,
-                                      gather_fused=gather_fused)
+                                      gather_fused=gather_fused,
+                                      scales=scales)
         if pad_m:
             dists = jnp.concatenate(
                 [dists, jnp.full((S, pad_m), INF)], axis=1)
@@ -225,8 +238,22 @@ def _small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
     keep_lane = ~dup & (sid < N)
     if alive is not None:  # a dead best-seed id can linger in slot 0
         keep_lane = keep_lane & alive[jnp.clip(sid, 0, N - 1)]
-    out_d, out_ids = HP.rank_merge(sd2, sid, keep=k,
-                                   mask=keep_lane, backend=backend)
+    if codes is None:
+        out_d, out_ids = HP.rank_merge(sd2, sid, keep=k,
+                                       mask=keep_lane, backend=backend)
+        return out_ids.astype(jnp.int32), out_d
+    # exact fp32 re-rank: keep the best rerank_mult*k distinct survivors
+    # of the approximate search, re-score them against the fp32 rows
+    # (one narrow gather — the only fp32 row traffic of the whole query),
+    # then take the true top-k.  Keep-masked lanes come back INF from the
+    # merge, so they stay masked through the re-score and can't resurface.
+    rerank = min(max(rerank_mult, 1) * k, sd2.shape[1])
+    rr_d, rr_ids = HP.rank_merge(sd2, sid, keep=rerank,
+                                 mask=keep_lane, backend=backend)
+    ed = HP.neighbor_distances(Q, X, rr_ids, metric=metric,
+                               mask=rr_d < INF, backend=backend,
+                               gather_fused=gather_fused)
+    out_d, out_ids = HP.rank_merge(ed, rr_ids, keep=k, backend=backend)
     return out_ids.astype(jnp.int32), out_d
 
 

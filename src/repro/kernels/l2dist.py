@@ -66,50 +66,101 @@ def distance_matrix_pallas(Q, X, *, metric: str = "l2", bq: int = 128,
 # batched-rowwise block distances — the search hot path's [S, W, d] shape
 # --------------------------------------------------------------------------
 
-def _block_kernel(q_ref, v_ref, m_ref, o_ref, *, metric: str):
-    """Per-row distance block: q [bs, Kq, d] x v [bs, C, d] -> [bs, Kq, C],
-    with the candidate keep-mask fused (masked lanes -> INF)."""
-    q = q_ref[...].astype(jnp.float32)
-    v = v_ref[...].astype(jnp.float32)
-    m = m_ref[...]                                 # [bs, C] int8
+def _score_block(q, v, m, *, metric: str, pin: bool = False):
+    """Shared scoring formulation: fp32 q [bs, Kq, d] x fp32 v [bs, C, d]
+    x int8 mask [bs, C] -> [bs, Kq, C] (masked lanes -> INF).  Every
+    distance the system computes — both kernel backends, quantized or not —
+    funnels through this exact op sequence, which is what makes the
+    bitwise-parity contract hold.
+
+    ``pin`` (quantized path, interpret mode only) computes the norm terms
+    as batched self-``dot_general`` contractions instead of
+    multiply-then-``sum``.  A plain reduce's rounding depends on how the
+    *surrounding* program gets scheduled — XLA picks linear vs vectorized
+    accumulation per compiled program — so the full-array reference and
+    the per-block kernel trace can round the same norm differently by
+    1 ulp.  ``dot_general`` lowers to the same per-row contraction
+    everywhere (the ``dots`` term below matches bitwise across backends
+    for exactly this reason), so both sides route norms through it.  The
+    combine is fma-safe as-is: ``2.0 * dots`` is exact (power-of-two
+    scale), so fusing it into the subtract cannot change the rounding."""
     dots = jax.lax.dot_general(q, v, (((2,), (2,)), ((0,), (0,))),
                                preferred_element_type=jnp.float32)
     if metric in ("ip", "cos"):
         dist = -dots
     else:
-        qn = jnp.sum(q * q, axis=2)[:, :, None]
-        vn = jnp.sum(v * v, axis=2)[:, None, :]
-        dist = qn + vn - 2.0 * dots
-    o_ref[...] = jnp.where((m != 0)[:, None, :], dist,
-                           jnp.asarray(3.4e38, dist.dtype))
+        if pin:
+            nd = (((2,), (2,)), ((0, 1), (0, 1)))
+            qn = jax.lax.dot_general(q, q, nd,
+                                     preferred_element_type=jnp.float32)
+            vn = jax.lax.dot_general(v, v, nd,
+                                     preferred_element_type=jnp.float32)
+        else:
+            qn = jnp.sum(q * q, axis=2)
+            vn = jnp.sum(v * v, axis=2)
+        dist = qn[:, :, None] + vn[:, None, :] - 2.0 * dots
+    return jnp.where((m != 0)[:, None, :], dist,
+                     jnp.asarray(3.4e38, dist.dtype))
 
 
-def _block_bytes(bs: int, Kq: int, bc: int, d: int) -> int:
-    """Bytes of one (Q-tile, V-tile, mask-tile, out-tile) block set."""
-    return (bs * Kq * d + bs * bc * d + bs * bc + bs * Kq * bc) * 4
+def _block_kernel(q_ref, v_ref, m_ref, o_ref, *, metric: str):
+    """Per-row distance block: q [bs, Kq, d] x v [bs, C, d] -> [bs, Kq, C],
+    with the candidate keep-mask fused (masked lanes -> INF)."""
+    q = q_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    o_ref[...] = _score_block(q, v, m_ref[...], metric=metric)
 
 
-def _pick_bs(Kq: int, C: int, d: int,
-             budget: int = VMEM_BUDGET) -> tuple[int, int]:
+def _block_kernel_quant(q_ref, v_ref, s_ref, m_ref, o_ref, *, metric: str,
+                        pin: bool = False):
+    """Quantized variant: v is int8 codes, s [bs, C] the per-row fp32
+    scales; dequantize in-register after the (4x cheaper) VMEM load.
+
+    ``pin`` (set in interpret mode, where the kernel body is ordinary XLA)
+    pins the dequantized rows behind an optimization barrier so XLA cannot
+    fuse the scale multiply into the norm reduction — the 1-ulp fma drift
+    that would break the cross-backend bitwise contract.  Mosaic (real
+    TPU) has no such cross-op refusion, and no barrier lowering, so the
+    flag stays off there."""
+    q = q_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32) * s_ref[...][:, :, None]
+    if pin:
+        v = jax.lax.optimization_barrier(v)
+    o_ref[...] = _score_block(q, v, m_ref[...], metric=metric, pin=pin)
+
+
+def _block_bytes(bs: int, Kq: int, bc: int, d: int,
+                 itemsize: int = 4) -> int:
+    """Bytes of one (Q-tile, V-tile, [scale-tile,] mask-tile, out-tile)
+    block set.  `itemsize` is the V operand's dtype width — int8 codes
+    bill 1 byte/element (plus their fp32 scale row) instead of 4, which
+    is exactly the residency win."""
+    scales = 0 if itemsize == 4 else bs * bc * 4
+    return (bs * Kq * d * 4 + bs * bc * d * itemsize + scales
+            + bs * bc + bs * Kq * bc * 4)
+
+
+def _pick_bs(Kq: int, C: int, d: int, budget: int = VMEM_BUDGET,
+             itemsize: int = 4) -> tuple[int, int]:
     """(row tile, candidate tile) whose operand+output blocks fit the VMEM
     budget.  Halves the row tile all the way to 1; if a single row still
     doesn't fit (e.g. GIST d=960 with a wide candidate set), the candidate
     axis is split into a second grid dimension instead of silently
     overflowing VMEM."""
     bs = 128
-    while bs > 1 and _block_bytes(bs, Kq, C, d) > budget:
+    while bs > 1 and _block_bytes(bs, Kq, C, d, itemsize) > budget:
         bs //= 2
-    if _block_bytes(bs, Kq, C, d) <= budget:
+    if _block_bytes(bs, Kq, C, d, itemsize) <= budget:
         return bs, C
     bc = C
-    while bc > 1 and _block_bytes(1, Kq, bc, d) > budget:
+    while bc > 1 and _block_bytes(1, Kq, bc, d, itemsize) > budget:
         bc = -(-bc // 2)
     return 1, bc
 
 
 @functools.partial(jax.jit,
                    static_argnames=("metric", "bs", "bc", "interpret"))
-def block_distances_pallas(Q, V, mask, *, metric: str = "l2",
+def block_distances_pallas(Q, V, mask, v_scales=None, *, metric: str = "l2",
                            bs: int | None = None, bc: int | None = None,
                            interpret: bool = False):
     """Q [S, Kq, d] x V [S, C, d] x mask [S, C] -> [S, Kq, C] float32.
@@ -120,11 +171,15 @@ def block_distances_pallas(Q, V, mask, *, metric: str = "l2",
     When even a one-row block exceeds the VMEM budget the candidate axis
     is tiled too (grid dim 2, `bc` columns per block) — padded candidate
     lanes carry mask 0 and come back INF, so the result is unchanged.
+
+    With ``v_scales`` [S, C] float32, V is int8 codes (compressed
+    residency, DESIGN.md §8): the tile is loaded at 1 byte/element and
+    dequantized in-register as ``v * scale`` before the same contraction.
     """
     S, Kq, d = Q.shape
     C = V.shape[1]
     if bs is None or bc is None:
-        pbs, pbc = _pick_bs(Kq, C, d)
+        pbs, pbc = _pick_bs(Kq, C, d, itemsize=V.dtype.itemsize)
         bs = pbs if bs is None else bs
         bc = pbc if bc is None else bc
     Sp = -(-S // bs) * bs
@@ -132,18 +187,34 @@ def block_distances_pallas(Q, V, mask, *, metric: str = "l2",
     Qp = jnp.pad(Q, ((0, Sp - S), (0, 0), (0, 0)))
     Vp = jnp.pad(V, ((0, Sp - S), (0, Cp - C), (0, 0)))
     mp = jnp.pad(mask.astype(jnp.int8), ((0, Sp - S), (0, Cp - C)))
-    out = pl.pallas_call(
-        functools.partial(_block_kernel, metric=metric),
-        grid=(Sp // bs, Cp // bc),
-        in_specs=[
+    if v_scales is None:
+        kernel = functools.partial(_block_kernel, metric=metric)
+        in_specs = [
             pl.BlockSpec((bs, Kq, d), lambda i, j: (i, 0, 0)),
             pl.BlockSpec((bs, bc, d), lambda i, j: (i, j, 0)),
             pl.BlockSpec((bs, bc), lambda i, j: (i, j)),
-        ],
+        ]
+        args = (Qp, Vp, mp)
+    else:
+        sp = jnp.pad(v_scales.astype(jnp.float32),
+                     ((0, Sp - S), (0, Cp - C)))
+        kernel = functools.partial(_block_kernel_quant, metric=metric,
+                                   pin=interpret)
+        in_specs = [
+            pl.BlockSpec((bs, Kq, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((bs, bc, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bs, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((bs, bc), lambda i, j: (i, j)),
+        ]
+        args = (Qp, Vp, sp, mp)
+    out = pl.pallas_call(
+        kernel,
+        grid=(Sp // bs, Cp // bc),
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bs, Kq, bc), lambda i, j: (i, 0, j)),
         out_shape=jax.ShapeDtypeStruct((Sp, Kq, Cp), jnp.float32),
         interpret=interpret,
-    )(Qp, Vp, mp)
+    )(*args)
     return out[:S, :, :C]
 
 
@@ -162,24 +233,29 @@ def block_distances_pallas(Q, V, mask, *, metric: str = "l2",
 # gathered-neighbor buffer of the gather-then-block path never exists.
 
 
-def _gather_tile_bytes(Kq: int, C: int, d: int, *, self_q: bool) -> int:
+def _gather_tile_bytes(Kq: int, C: int, d: int, *, self_q: bool,
+                       itemsize: int = 4) -> int:
     """Bytes of one gather-fused block set per row of tile: Q tile (unless
     the query side is gathered from the same ids), the double-buffered
-    neighbor scratch, mask, and output."""
-    q = 0 if self_q else Kq * d
-    return (q + 2 * C * d + C + Kq * C) * 4
+    neighbor scratch (at the database dtype's actual width — int8 codes
+    DMA 1 byte/element and bill their fp32 scale row), mask, and output."""
+    q = 0 if self_q else Kq * d * 4
+    scales = 0 if itemsize == 4 else C * 4
+    return q + 2 * C * d * itemsize + scales + C + Kq * C * 4
 
 
 def gather_fused_fits(Kq: int, C: int, d: int, *, self_q: bool = False,
-                      budget: int = VMEM_BUDGET) -> bool:
+                      budget: int = VMEM_BUDGET, itemsize: int = 4) -> bool:
     """True when at least a one-row tile of the fused gather kernel fits
     the VMEM budget (the dispatch fallback check in hotpath)."""
-    return _gather_tile_bytes(Kq, C, d, self_q=self_q) <= budget
+    return _gather_tile_bytes(Kq, C, d, self_q=self_q,
+                              itemsize=itemsize) <= budget
 
 
 def _pick_bs_fused(S: int, Kq: int, C: int, d: int, *,
-                   self_q: bool, budget: int = VMEM_BUDGET) -> int:
-    per_row = _gather_tile_bytes(Kq, C, d, self_q=self_q)
+                   self_q: bool, budget: int = VMEM_BUDGET,
+                   itemsize: int = 4) -> int:
+    per_row = _gather_tile_bytes(Kq, C, d, self_q=self_q, itemsize=itemsize)
     bs = 128
     while bs > 1 and bs * per_row > budget:
         bs //= 2
@@ -188,11 +264,14 @@ def _pick_bs_fused(S: int, Kq: int, C: int, d: int, *,
     return bs
 
 
-def _gather_block_kernel(idx_ref, q_ref, m_ref, x_hbm, o_ref, vbuf, sem, *,
-                         metric: str, bs: int, C: int):
+def _gather_body(idx_ref, q_ref, s_ref, m_ref, x_hbm, o_ref, vbuf, sem, *,
+                 metric: str, bs: int, C: int, pin: bool = False):
     """One grid step = one row tile.  idx_ref [Sp, C] is scalar-prefetched
     (SMEM), so the DMA targets are known before the body runs; x_hbm is the
     whole database in HBM/ANY; vbuf [2, bs, C, d] revolves across the grid.
+    ``s_ref`` (quantized path only) carries the gathered per-row fp32
+    scales; the int8 tile dequantizes in-register after the DMA.  ``pin``
+    — see :func:`_block_kernel_quant` (interpret-mode fma-fusion guard).
     """
     i = pl.program_id(0)
     n = pl.num_programs(0)
@@ -229,31 +308,39 @@ def _gather_block_kernel(idx_ref, q_ref, m_ref, x_hbm, o_ref, vbuf, sem, *,
     _wait(slot, i)
 
     v = vbuf[slot].astype(jnp.float32)             # [bs, C, d]
+    if s_ref is not None:
+        v = v * s_ref[...][:, :, None]
+        if pin:
+            v = jax.lax.optimization_barrier(v)
     q = v if q_ref is None else q_ref[...].astype(jnp.float32)
-    m = m_ref[...]                                 # [bs, C] int8
-    dots = jax.lax.dot_general(q, v, (((2,), (2,)), ((0,), (0,))),
-                               preferred_element_type=jnp.float32)
-    if metric in ("ip", "cos"):
-        dist = -dots
-    else:
-        qn = jnp.sum(q * q, axis=2)[:, :, None]
-        vn = jnp.sum(v * v, axis=2)[:, None, :]
-        dist = qn + vn - 2.0 * dots
-    o_ref[...] = jnp.where((m != 0)[:, None, :], dist,
-                           jnp.asarray(3.4e38, dist.dtype))
+    o_ref[...] = _score_block(q, v, m_ref[...], metric=metric, pin=pin)
+
+
+def _gather_block_kernel(idx_ref, q_ref, m_ref, x_hbm, o_ref, vbuf, sem, *,
+                         metric: str, bs: int, C: int):
+    _gather_body(idx_ref, q_ref, None, m_ref, x_hbm, o_ref, vbuf, sem,
+                 metric=metric, bs=bs, C=C)
+
+
+def _gather_block_kernel_quant(idx_ref, q_ref, s_ref, m_ref, x_hbm, o_ref,
+                               vbuf, sem, *, metric: str, bs: int, C: int,
+                               pin: bool = False):
+    _gather_body(idx_ref, q_ref, s_ref, m_ref, x_hbm, o_ref, vbuf, sem,
+                 metric=metric, bs=bs, C=C, pin=pin)
 
 
 def _self_q_gather_kernel(idx_ref, m_ref, x_hbm, o_ref, vbuf, sem, *,
                           metric: str, bs: int, C: int):
     """self_q variant: the query rows ARE the gathered neighbor rows (the
     diversify tiles' [T, K, K] pairwise blocks), so no Q input at all."""
-    _gather_block_kernel(idx_ref, None, m_ref, x_hbm, o_ref, vbuf, sem,
-                         metric=metric, bs=bs, C=C)
+    _gather_body(idx_ref, None, None, m_ref, x_hbm, o_ref, vbuf, sem,
+                 metric=metric, bs=bs, C=C)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("metric", "bs", "interpret", "self_q"))
-def gather_block_distances_pallas(Q, X, idx, mask, *, metric: str = "l2",
+def gather_block_distances_pallas(Q, X, idx, mask, scales=None, *,
+                                  metric: str = "l2",
                                   bs: int | None = None,
                                   interpret: bool = False,
                                   self_q: bool = False):
@@ -265,12 +352,18 @@ def gather_block_distances_pallas(Q, X, idx, mask, *, metric: str = "l2",
     ``block_distances_pallas(Q, X[idx], mask)`` — same contraction, same
     rank-1 norm corrections, same mask — without ever materializing the
     [S, C, d] neighbor buffer.
+
+    With ``scales`` [S, C] float32 (the per-row scales pre-gathered by the
+    same idx), X is the int8 code matrix: the DMA streams 1-byte rows
+    (~4x less HBM->VMEM traffic) and the tile dequantizes in-register
+    before the contraction.
     """
     S, C = idx.shape
     d = X.shape[1]
     Kq = C if self_q else Q.shape[1]
     if bs is None:
-        bs = _pick_bs_fused(S, Kq, C, d, self_q=self_q)
+        bs = _pick_bs_fused(S, Kq, C, d, self_q=self_q,
+                            itemsize=X.dtype.itemsize)
     Sp = -(-S // bs) * bs
     ip = jnp.pad(idx, ((0, Sp - S), (0, 0)))
     mp = jnp.pad(mask.astype(jnp.int8), ((0, Sp - S), (0, 0)))
@@ -290,6 +383,24 @@ def gather_block_distances_pallas(Q, X, idx, mask, *, metric: str = "l2",
             scratch_shapes=scratch,
         )
         args = (ip, mp, X)
+    elif scales is not None:
+        kernel = functools.partial(_gather_block_kernel_quant, metric=metric,
+                                   bs=bs, C=C, pin=interpret)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(Sp // bs,),
+            in_specs=[
+                pl.BlockSpec((bs, Kq, d), lambda i, idx_ref: (i, 0, 0)),
+                pl.BlockSpec((bs, C), lambda i, idx_ref: (i, 0)),
+                pl.BlockSpec((bs, C), lambda i, idx_ref: (i, 0)),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+            ],
+            out_specs=pl.BlockSpec((bs, Kq, C), lambda i, idx_ref: (i, 0, 0)),
+            scratch_shapes=scratch,
+        )
+        Qp = jnp.pad(Q, ((0, Sp - S), (0, 0), (0, 0)))
+        sp = jnp.pad(scales.astype(jnp.float32), ((0, Sp - S), (0, 0)))
+        args = (ip, Qp, sp, mp, X)
     else:
         kernel = functools.partial(_gather_block_kernel, metric=metric,
                                    bs=bs, C=C)

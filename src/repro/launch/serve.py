@@ -39,6 +39,12 @@ def main() -> None:
                     choices=("auto", "on", "off"),
                     help="Pallas in-kernel neighbor gather (auto = DMA "
                          "path on real TPU, gather-then-block elsewhere)")
+    ap.add_argument("--quantization", default="none",
+                    choices=("none", "int8"),
+                    help="int8 = compressed residency: score per-row "
+                         "symmetric int8 codes in-kernel (~4x less DMA), "
+                         "then re-rank the top rerank_mult*k survivors "
+                         "against the exact fp32 rows")
     ap.add_argument("--mesh", metavar="DxM",
                     help="serve through the mesh execution plane: 'D' or "
                          "'DxM' device counts for the data (DB shards) and "
@@ -111,8 +117,8 @@ def main() -> None:
         # caller tried to override instead of silently dropping them
         ignored = [f"--{n.replace('_', '-')}" for n, default in
                    (("metric", "l2"), ("backend", "auto"),
-                    ("gather_fused", "auto"), ("paper_faithful", False),
-                    ("calibrate", False))
+                    ("gather_fused", "auto"), ("quantization", "none"),
+                    ("paper_faithful", False), ("calibrate", False))
                    if getattr(args, n) != default]
         if ignored:
             print(f"[serve] note: {' '.join(ignored)} ignored with "
@@ -128,6 +134,7 @@ def main() -> None:
                                   metric=args.metric,
                                   kernel_backend=args.backend,
                                   gather_fused=args.gather_fused,
+                                  quantization=args.quantization,
                                   regime_calibration=("probe" if
                                                       args.calibrate
                                                       else "static"))
@@ -140,7 +147,9 @@ def main() -> None:
                 f"avg_degree={index.graph.avg_degree():.1f} "
                 f"built in {time.perf_counter() - t0:.1f}s "
                 f"(kernel backend: {index.backend}, "
-                f"plane: {index.plane.name})")
+                f"plane: {index.plane.name}"
+                + (f", quantization: {args.quantization}"
+                   if args.quantization != "none" else "") + ")")
         if index.calibration is not None:
             cal = index.calibration
             line += (f"\n[serve] calibrated regime threshold: "

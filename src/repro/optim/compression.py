@@ -7,31 +7,40 @@ unbiased over time), and all-reduce the int8 payload — a 2x/4x reduction of
 DCN/ICI bytes on the `pod`/`data` axes.
 
 Applied inside shard_map (see trainer) or standalone for tests.
+
+The per-tensor quantize/dequantize helpers moved to
+:mod:`repro.ann.quantize` when the serving side grew compressed residency
+(DESIGN.md §8); they are re-exported here with a warn-once shim so
+training-side callers keep working.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.ann import quantize as _q
+from repro.utils.deprecation import warn_once
+
 
 def quantize(x: jax.Array):
     """Symmetric per-tensor int8 quantization -> (q, scale)."""
-    x32 = x.astype(jnp.float32)
-    scale = jnp.max(jnp.abs(x32)) / 127.0 + 1e-12
-    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
-    return q, scale
+    warn_once("repro.optim.compression.quantize",
+              "repro.ann.quantize.quantize")
+    return _q.quantize(x)
 
 
 def dequantize(q: jax.Array, scale: jax.Array):
-    return q.astype(jnp.float32) * scale
+    warn_once("repro.optim.compression.dequantize",
+              "repro.ann.quantize.dequantize")
+    return _q.dequantize(q, scale)
 
 
 def compress_with_feedback(grad: jax.Array, error: jax.Array):
     """Return (q, scale, new_error).  grad + error is quantized; the residual
     is carried forward so the long-run update is exact."""
     corrected = grad.astype(jnp.float32) + error
-    q, scale = quantize(corrected)
-    new_error = corrected - dequantize(q, scale)
+    q, scale = _q.quantize(corrected)
+    new_error = corrected - _q.dequantize(q, scale)
     return q, scale, new_error
 
 

@@ -183,7 +183,8 @@ class ANNEngine:
 
     def __init__(self, X, cfg: ANNConfig | None = None, *, k: int = 10,
                  graph=None, mesh=None, plane=None,
-                 threshold: float | None = None):
+                 threshold: float | None = None,
+                 quant: tuple | None = None):
         self.cfg = cfg or ANNConfig()
         self.k = k
         self.stats = ServeStats()
@@ -192,22 +193,24 @@ class ANNEngine:
         # index is frozen — created lazily by the first add()/delete()
         self.stream = None
         self._mutlock = threading.Lock()   # serializes add/delete/compact
-        # (regime, bucket, k, backend, gather_fused,
+        # (regime, bucket, k, backend, gather_fused, quantization,
         #  plane shape token, stream token) -> executable
         self._compiled: dict = {}
         self.buckets = tuple(sorted(self.cfg.serve_buckets))
         if plane is not None:
-            if mesh is not None or graph is not None:
+            if mesh is not None or graph is not None or quant is not None:
                 raise ValueError("plane= already fixes the device layout; "
-                                 "mesh=/graph= only apply when the engine "
-                                 "builds its own plane")
+                                 "mesh=/graph=/quant= only apply when the "
+                                 "engine builds its own plane")
             self.plane = plane
         elif mesh is None:
-            self.plane = SingleDevicePlane(X, self.cfg, graph=graph)
+            self.plane = SingleDevicePlane(X, self.cfg, graph=graph,
+                                           quant=quant)
         else:
-            if graph is not None:
-                raise ValueError("mesh mode builds its own sharded graph; "
-                                 "graph= is only for single-device engines")
+            if graph is not None or quant is not None:
+                raise ValueError("mesh mode builds its own sharded graph "
+                                 "(and codes); graph=/quant= are only for "
+                                 "single-device engines")
             self.plane = MeshPlane(X, self.cfg, mesh)
         self.mesh = getattr(self.plane, "mesh", None)
         self.calibration = None
@@ -297,7 +300,8 @@ class ANNEngine:
     def _get_executable(self, kind: str, bucket: int, k: int,
                         streaming: bool = False):
         """Cached executable for (regime, bucket, k, backend, gather_fused,
-        shape token, stream token); the plane compiles on miss.
+        quantization, shape token, stream token); the plane compiles on
+        miss.
 
         The plane's shape token keys the operand generation: a compaction
         that preserves operand shapes leaves the token — and therefore
@@ -309,6 +313,7 @@ class ANNEngine:
         Returns (callable taking the padded query batch, compiled_now)."""
         stream_tok = self.plane.stream_token() if streaming else None
         cache_key = (kind, bucket, k, self.backend, self.gather_fused,
+                     getattr(self.cfg, "quantization", "none"),
                      self.plane.shape_token(), stream_tok)
         with self._lock:
             hit = self._compiled.get(cache_key)
@@ -479,7 +484,7 @@ class ANNEngine:
         they would only raise StaleGeneration and hold dead arrays alive."""
         tok = self.plane.shape_token()
         with self._lock:
-            stale = [key for key in self._compiled if key[5] != tok]
+            stale = [key for key in self._compiled if key[6] != tok]
             for key in stale:
                 del self._compiled[key]
 
@@ -541,8 +546,8 @@ class ANNEngine:
 
     def aot_operands(self) -> tuple:
         """The exported modules' leading runtime arguments, in order:
-        (X, neighbors, lambdas, degrees[, hubs]) — the padded query batch
-        is appended last by the caller."""
+        (X, neighbors, lambdas, degrees[, hubs][, codes, scales]) — the
+        padded query batch is appended last by the caller."""
         return self.plane.operands()
 
     def prime_executable(self, kind: str, bucket: int, k: int,
@@ -558,6 +563,7 @@ class ANNEngine:
         to the generation that was saved.
         """
         key = (kind, bucket, k, self.backend, self.gather_fused,
+               getattr(self.cfg, "quantization", "none"),
                self.plane.shape_token(), None)
         with self._lock:
             if key not in self._compiled:

@@ -140,6 +140,7 @@ def _runtime_fingerprint(plane) -> dict:
         "kernel_backend": plane.backend,
         "gather_fused": plane.gather_fused,
         "plane": plane.name,
+        "quantization": getattr(plane.cfg, "quantization", "none"),
     }
 
 
@@ -160,6 +161,13 @@ class _SnapshotPlane:
     _snap: tuple
 
     # -- snapshot accessors -------------------------------------------------
+
+    @property
+    def quantized(self) -> bool:
+        """Compressed residency on (DESIGN.md §8): the operand tuple and
+        the stream tuple carry int8 codes + fp32 scales after the fp32
+        arrays, and searches score/re-rank through them."""
+        return getattr(self.cfg, "quantization", "none") == "int8"
 
     def operands(self) -> tuple:
         return self._snap[1]
@@ -236,7 +244,8 @@ class SingleDevicePlane(_SnapshotPlane):
 
     name = "single"
 
-    def __init__(self, X, cfg: ANNConfig, *, graph: PackedGraph | None = None):
+    def __init__(self, X, cfg: ANNConfig, *, graph: PackedGraph | None = None,
+                 quant: tuple | None = None):
         self.cfg = cfg
         # kernel backend resolved once per plane; part of the engine's AOT
         # cache key so an engine rebuilt with a different backend never
@@ -252,14 +261,24 @@ class SingleDevicePlane(_SnapshotPlane):
         if graph is None:
             from repro.ann.pipeline import build_graph
             graph = build_graph(X, cfg)
-        self._install(X, graph, stream=None)
+        self._install(X, graph, stream=None, quant=quant)
 
-    def _install(self, X, graph, *, stream) -> None:
+    def _install(self, X, graph, *, stream, quant=None) -> None:
         self.X = X
         self.graph = graph
+        if self.quantized:
+            if quant is None:  # build / compaction; artifact load passes it
+                from repro.ann.quantize import quantize_rows
+                quant = quantize_rows(X)
+            self.codes, self.scales = (jnp.asarray(quant[0]),
+                                       jnp.asarray(quant[1]))
+        else:
+            self.codes = self.scales = None
         ops = (X, graph.neighbors, graph.lambdas, graph.degrees)
         if graph.hubs is not None:
             ops = ops + (graph.hubs,)
+        if self.quantized:
+            ops = ops + (self.codes, self.scales)
         self._snap = (_token_of(ops), ops, stream)
 
     # -- generations & streaming -------------------------------------------
@@ -268,16 +287,22 @@ class SingleDevicePlane(_SnapshotPlane):
         """Hot-swap to a new generation's corpus + graph (compaction).
         Clears stream state; cached executables whose shapes still match
         keep serving against the new arrays with zero recompiles, and
-        in-flight calls finish on the old (immutable) arrays."""
+        in-flight calls finish on the old (immutable) arrays.  A quantized
+        plane re-quantizes the new generation's rows here."""
         self._install(jnp.asarray(X), graph, stream=None)
 
     def set_stream(self, alive, delta_X, delta_alive) -> None:
         """Attach/refresh the streaming operands: ``alive`` [N] bool
         (base-corpus tombstone mask), ``delta_X`` [cap, d] float32,
-        ``delta_alive`` [cap] bool (unfilled/tombstoned delta slots)."""
+        ``delta_alive`` [cap] bool (unfilled/tombstoned delta slots).
+        A quantized plane appends per-row int8 codes + scales of the delta
+        shard (delta_X stays fp32 for the exact re-rank)."""
         token, ops, _ = self._snap
         stream = (jnp.asarray(alive), jnp.asarray(delta_X),
                   jnp.asarray(delta_alive))
+        if self.quantized:
+            from repro.ann.quantize import quantize_rows
+            stream = stream + quantize_rows(stream[1])
         self._snap = (token, ops, stream)
 
     # -- engine-facing geometry --------------------------------------------
@@ -323,17 +348,23 @@ class SingleDevicePlane(_SnapshotPlane):
 
     def _flat_search(self, kind: str, k: int):
         """The operand-parameterized serving computation: flat array args
-        ``(X, neighbors, lambdas, degrees[, hubs], Qb)`` -> (ids, dists).
-        The same trace :meth:`export` serializes, so primed and locally
-        compiled executables answer identically (bitwise contract)."""
+        ``(X, neighbors, lambdas, degrees[, hubs][, codes, scales], Qb)``
+        -> (ids, dists).  The same trace :meth:`export` serializes, so
+        primed and locally compiled executables answer identically
+        (bitwise contract)."""
         fn, kwargs = self._search_args(kind, k)
         has_hubs = self.graph.hubs is not None
+        n_base = 5 if has_hubs else 4
+        quantized = self.quantized
+        rerank_mult = getattr(self.cfg, "rerank_mult", 4)
 
         def call(*args):
             Xa, nbrs, lams, degs = args[:4]
             g = PackedGraph(neighbors=nbrs, lambdas=lams, degrees=degs,
                             hubs=args[4] if has_hubs else None)
-            return fn(Xa, g, args[-1], **kwargs)
+            extra = dict(codes=args[n_base], scales=args[n_base + 1],
+                         rerank_mult=rerank_mult) if quantized else {}
+            return fn(Xa, g, args[-1], **kwargs, **extra)
         return call
 
     def compile(self, kind: str, bucket: int, k: int):
@@ -364,22 +395,49 @@ class SingleDevicePlane(_SnapshotPlane):
         cap = int(stream[1].shape[0])
         fn, kwargs = self._search_args(kind, k)
         has_hubs = self.graph.hubs is not None
+        n_base = 5 if has_hubs else 4
         n_ops = len(self.operands())
         N = int(self.X.shape[0])
         metric = self.cfg.metric
         backend = self.backend
+        gather_fused = self.gather_fused
+        quantized = self.quantized
+        rerank_mult = getattr(self.cfg, "rerank_mult", 4)
         INF = hotpath.INF
 
         def call(*args):
             Xa, nbrs, lams, degs = args[:4]
             g = PackedGraph(neighbors=nbrs, lambdas=lams, degrees=degs,
                             hubs=args[4] if has_hubs else None)
-            al, dX, dal = args[n_ops:n_ops + 3]
             Qb = args[-1]
-            bids, bd = fn(Xa, g, Qb, alive=al, **kwargs)
+            extra = dict(codes=args[n_base], scales=args[n_base + 1],
+                         rerank_mult=rerank_mult) if quantized else {}
+            al, dX, dal = args[n_ops:n_ops + 3]
+            bids, bd = fn(Xa, g, Qb, alive=al, **kwargs, **extra)
             valid = (bids < N) & (bd < INF)
             pool_i = jnp.where(valid, bids, PAD_ID)
             pool_d = jnp.where(valid, bd, INF)
+            if quantized:
+                # approximate scan of the int8 delta codes, then exact
+                # fp32 re-score of the best rerank_mult*k slots — the
+                # same approx->exact pipeline the base search runs
+                dcodes, dscales = args[n_ops + 3:n_ops + 5]
+                dd = hotpath.scan_distances(Qb, dcodes, metric=metric,
+                                            mask=dal, backend=backend,
+                                            scales=dscales)
+                r = min(rerank_mult * k, cap)
+                slots = jnp.broadcast_to(
+                    jnp.arange(cap, dtype=jnp.int32)[None], dd.shape)
+                # dead/unfilled lanes are already INF from the masked scan
+                sd, ss = hotpath.rank_merge(dd, slots, keep=r,
+                                            backend=backend)
+                ed = hotpath.neighbor_distances(
+                    Qb, dX, ss, metric=metric, mask=sd < INF,
+                    backend=backend, gather_fused=gather_fused)
+                d_ids = jnp.where(ed < INF, N + ss, PAD_ID)
+                all_i = jnp.concatenate([pool_i, d_ids], axis=1)
+                all_d = jnp.concatenate([pool_d, ed], axis=1)
+                return merge_topk(all_i, all_d, k)
             dd = hotpath.scan_distances(Qb, dX, metric=metric, mask=dal,
                                         backend=backend)
             d_ids = jnp.where(dal, N + jnp.arange(cap, dtype=jnp.int32),
@@ -479,8 +537,19 @@ class MeshPlane(_SnapshotPlane):
             parts = (Xs, nbrs, lams, degs, hubs)
         self._install(parts[0], parts[1:], stream=None)
 
+    def _quantize_sharded(self, Xs):
+        """Per-row codes + scales, row-sharded alongside the database (the
+        quantization is row-local, so no cross-shard traffic)."""
+        from repro.ann.quantize import quantize_rows
+        return jax.jit(quantize_rows,
+                       out_shardings=(self._db2, self._db1))(Xs)
+
     def _install(self, Xs, parts, *, stream) -> None:
-        nbrs, lams, degs, hubs = parts
+        if self.quantized and len(parts) == 4:
+            # built fresh / restored from a pre-v4 artifact: derive the
+            # codes here (a v4 artifact restores them via parts directly)
+            parts = parts + self._quantize_sharded(Xs)
+        nbrs, lams, degs, hubs = parts[:4]
         self.X = Xs
         self._parts = parts
         self.graph = PackedGraph(
@@ -504,12 +573,20 @@ class MeshPlane(_SnapshotPlane):
 
     def set_stream(self, alive, delta_X, delta_alive) -> None:
         """Tombstone mask row-sharded like ``degrees``; delta shard
-        replicated across every DB shard."""
+        replicated across every DB shard (codes + scales too when
+        quantized — every shard runs the identical delta selection, and
+        ``merge_topk``'s id dedup collapses the copies)."""
         token, ops, _ = self._snap
         stream = (
             jax.device_put(jnp.asarray(alive), self._db1),
             jax.device_put(jnp.asarray(delta_X), self._repl),
             jax.device_put(jnp.asarray(delta_alive), self._repl1))
+        if self.quantized:
+            from repro.ann.quantize import quantize_rows
+            dcodes, dscales = quantize_rows(stream[1])
+            stream = stream + (
+                jax.device_put(dcodes, self._repl),
+                jax.device_put(dscales, self._repl1))
         self._snap = (token, ops, stream)
 
     # -- engine-facing geometry --------------------------------------------
@@ -533,8 +610,10 @@ class MeshPlane(_SnapshotPlane):
     def shardings(self) -> dict:
         return {"X": self._db2, "neighbors": self._db2, "lambdas": self._db2,
                 "degrees": self._db1, "hubs": self._db1,
+                "codes": self._db2, "scales": self._db1,
                 "alive": self._db1, "delta_X": self._repl,
-                "delta_alive": self._repl1,
+                "delta_alive": self._repl1, "delta_codes": self._repl,
+                "delta_scales": self._repl1,
                 "query_small": self._repl, "query_large": self._qsharded}
 
     def fingerprint(self) -> dict:
@@ -571,10 +650,12 @@ class MeshPlane(_SnapshotPlane):
         cap = int(stream[1].shape[0])
         fn = self._D.make_search_fn(self.mesh, self.cfg, kind=kind, k=k,
                                     stream=True)
+        stream_sh = (self._db1, self._repl, self._repl1)
+        if self.quantized:
+            stream_sh = stream_sh + (self._repl, self._repl1)
         specs = self._sharded_specs(
             self.operands() + stream,
-            self._operand_shardings() + (self._db1, self._repl,
-                                         self._repl1))
+            self._operand_shardings() + stream_sh)
         wrapped = jax.jit(
             fn, donate_argnums=(len(specs),) if self.donate else ())
         raw = wrapped.lower(*specs, self._qspec(kind, bucket)).compile()
@@ -604,7 +685,8 @@ class MeshPlane(_SnapshotPlane):
         return self._bind(raw, self.shape_token())
 
     def _operand_shardings(self) -> tuple:
-        return (self._db2, self._db2, self._db2, self._db1, self._db1)
+        base = (self._db2, self._db2, self._db2, self._db1, self._db1)
+        return base + (self._db2, self._db1) if self.quantized else base
 
 
 register_plane("single", lambda X, cfg, **kw: SingleDevicePlane(X, cfg, **kw))

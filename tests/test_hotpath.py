@@ -453,3 +453,36 @@ def test_gather_fused_fits_budget_check():
     # query side is gathered in-kernel from the same ids
     assert L2.gather_fused_fits(512, 256, 960, self_q=True)
     assert not L2.gather_fused_fits(512, 256, 960)
+
+
+def test_gather_fused_fits_int8_headroom():
+    """d=960 headroom regression (DESIGN.md §8): the fp32 bill for a wide
+    GIST-shaped gather blows the VMEM budget, but the same tile over int8
+    rows is ~4x smaller (1-byte candidate rows + a 4-byte scale per
+    candidate) and fits — compressed residency widens the fused-gather
+    regime, it never narrows it."""
+    assert not L2.gather_fused_fits(64, 1024, 960)               # fp32
+    assert L2.gather_fused_fits(64, 1024, 960, itemsize=1)       # int8
+    # the byte bill itself must reflect the operand itemsize
+    fp32 = L2._gather_tile_bytes(64, 1024, 960, self_q=False)
+    int8 = L2._gather_tile_bytes(64, 1024, 960, self_q=False, itemsize=1)
+    assert int8 < fp32
+    # candidate-row DMA bytes (the 2*C*d double buffer) shrink exactly 4x
+    assert 2 * 1024 * 960 * 4 - 2 * 1024 * 960 == fp32 - int8 + 1024 * 4
+
+
+def test_pick_bs_itemsize_aware(rng):
+    """The block picker bills actual operand bytes: int8 candidate tiles
+    admit equal-or-larger blocks than fp32 at every shape with d >= 2
+    (below that the 4-byte scale column outweighs the 3-byte/element row
+    saving), and the chosen blocks always fit the budget under their own
+    itemsize."""
+    for _ in range(100):
+        Kq = int(rng.integers(1, 65))
+        C = int(rng.integers(1, 513))
+        d = int(rng.integers(2, 1025))
+        bs32, bc32 = L2._pick_bs(Kq, C, d)
+        bs8, bc8 = L2._pick_bs(Kq, C, d, itemsize=1)
+        assert bs8 * bc8 >= bs32 * bc32, (Kq, C, d)
+        assert L2._block_bytes(bs8, Kq, bc8, d, itemsize=1) \
+            <= L2.VMEM_BUDGET, (Kq, C, d, bs8, bc8)

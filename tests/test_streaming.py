@@ -478,7 +478,8 @@ def test_artifact_v3_roundtrip_streaming_state(ds, cfg, base, tmp_path):
     p = tmp_path / "art"
     index.save(p)
     manifest = json.loads((p / "manifest.json").read_text())
-    assert manifest["format_version"] == 3
+    from repro.ann.artifact import FORMAT_VERSION
+    assert manifest["format_version"] == FORMAT_VERSION
     assert manifest["generation"] == 0
     assert "streaming" in manifest
 
