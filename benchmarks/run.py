@@ -476,6 +476,55 @@ def mesh_serve():
                  f"compiles={mi.stats.compiles}")
 
 
+def router_serve():
+    """Concurrent serving throughput through the request router (DESIGN.md
+    §9): a replicated router (N queues, shared plane + compile cache) vs
+    one micro-batcher, and the sharded router's fan-out + host merge vs
+    the in-collective mesh merge it mirrors."""
+    from concurrent.futures import wait
+
+    from repro.ann import Index
+    from repro.serve.router import RouterConfig
+
+    ds = _dataset(n=4096 if QUICK else 16384, d=32, nq=256)
+    cfg = _cfg(serve_buckets=(8, 64), large_hops=32 if QUICK else 64)
+    idx = Index.build(ds.X, cfg, k=10)
+    idx.warmup()
+    n_req = 64 if QUICK else 256
+
+    def pump(front):
+        futs = [front.submit(ds.Q[i % ds.Q.shape[0]]) for i in range(n_req)]
+        wait(futs, timeout=600)
+        return [f.result() for f in futs]
+
+    with idx.serve(max_wait_ms=1.0) as mb:
+        pump(mb)  # warm
+        t0 = time.perf_counter()
+        pump(mb)
+        us = (time.perf_counter() - t0) / n_req * 1e6
+    emit("router_serve/queue_1x", us, "front=microbatcher")
+
+    for n in (2, 4):
+        rc = RouterConfig(mode="replicated", replicas=n,
+                          health_interval_s=0.0)
+        with idx.serve(router=rc, max_wait_ms=1.0) as r:
+            pump(r)  # warm
+            t0 = time.perf_counter()
+            pump(r)
+            us = (time.perf_counter() - t0) / n_req * 1e6
+            agg = r.snapshot()["aggregate"]
+        emit(f"router_serve/replicated_{n}x", us,
+             f"compiles={agg['compiles']};qps={agg['qps']:.0f}")
+
+    rc = RouterConfig(mode="sharded", replicas=2, health_interval_s=0.0)
+    with idx.serve(router=rc, max_wait_ms=1.0) as r:
+        pump(r)  # warm
+        t0 = time.perf_counter()
+        pump(r)
+        us = (time.perf_counter() - t0) / n_req * 1e6
+    emit("router_serve/sharded_2x", us, "merge=host;shards=2")
+
+
 def mesh_aot_reload():
     """Sharded cold start vs sharded artifact restart: the mesh plane's
     warmup compile sweep from scratch against Index.load(mesh=) priming
@@ -728,10 +777,35 @@ BENCHES = [table2_diversification_time, fig4_cpu_search, fig5_degree_sweep,
            fig6_small_batch, fig10_large_batch, ablation_alpha_lambda,
            serve_engine_mixed, serve_bucketed_vs_raw, serve_aot_reload,
            streaming_ingest,
-           mesh_serve, mesh_aot_reload,
+           mesh_serve, router_serve, mesh_aot_reload,
            quantization_recall,
            kernel_micro,
            hotpath_micro, search_backend_compare, roofline_table]
+
+
+def _persist_rows(tier: str) -> str:
+    """Append this run's rows to ``BENCH_<tier>.json`` at the repo root —
+    a timestamped history so regressions are diffable across commits
+    (bounded to the last 50 runs per tier).  Returns the file path."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, f"BENCH_{tier}.json")
+    history = {"tier": tier, "runs": []}
+    if os.path.isfile(path):
+        try:
+            with open(path) as f:
+                history = json.load(f)
+        except ValueError:
+            pass  # corrupt history: start fresh rather than fail the run
+    history.setdefault("runs", []).append({
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "quick": QUICK,
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in ROWS],
+    })
+    history["runs"] = history["runs"][-50:]
+    with open(path, "w") as f:
+        json.dump(history, f, indent=1)
+    return path
 
 
 def main() -> None:
@@ -747,6 +821,8 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             emit(f"{bench.__name__}/ERROR", -1.0, repr(e)[:120])
     print(f"# {len(ROWS)} rows", flush=True)
+    path = _persist_rows(only or "all")
+    print(f"# rows persisted to {path}", flush=True)
 
 
 if __name__ == "__main__":

@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# CI tiers.  Usage: scripts/ci.sh [quick|sharded|all]   (default: all)
+# CI tiers.  Usage: scripts/ci.sh [quick|sharded|router|all]   (default: all)
 #
 # quick — kernel-backend parity (including the gather-fused scalar-prefetch
 #   DMA path, exercised in interpret mode), the facade save/load round-trip
@@ -17,6 +17,13 @@
 #   artifact round-trip tests, the mesh_serve/mesh_aot_reload benchmark
 #   rows, and a sharded build->save->load->serve launcher smoke asserting
 #   zero compiles after a topology-matched load.
+#
+# router — pod-scale serving (DESIGN.md §9): the request router suite
+#   (replicated/sharded parity, failover, health eject/readmit) and the
+#   2-process jax.distributed CPU pod tests, the router_serve benchmark
+#   rows, a 3-replica launcher smoke that reloads an AOT artifact and
+#   kills one replica mid-stream (greps aggregated compiles=0,
+#   lost_futures=0, ejects=1), and the pod_serving example.
 #
 # Excludes @slow tests and the multi-minute distributed subprocess tests
 # (those run in the full tier: `PYTHONPATH=src python -m pytest -q`).
@@ -44,7 +51,8 @@ quick_tier() {
         --ignore=tests/test_hotpath.py --ignore=tests/test_search_dedup.py \
         --ignore=tests/test_ann_facade.py --ignore=tests/test_queue_qos.py \
         --ignore=tests/test_streaming.py --ignore=tests/test_quantize.py \
-        --ignore=tests/test_mesh_plane.py
+        --ignore=tests/test_mesh_plane.py --ignore=tests/test_router.py \
+        --ignore=tests/test_pod_plane.py
 
     echo "== serving smoke bench (incl. serve/aot_reload rows) =="
     REPRO_BENCH_QUICK=1 REPRO_BENCH_ONLY=serve python -m benchmarks.run
@@ -109,9 +117,39 @@ sharded_tier() {
     python examples/distributed_search.py
 }
 
+router_tier() {
+    echo "== request router: parity, failover, health, stats =="
+    python -m pytest -q tests/test_router.py
+
+    echo "== pod plane: 2-process jax.distributed CPU serving =="
+    python -m pytest -q tests/test_pod_plane.py
+
+    echo "== router serving bench (queue vs replicated vs sharded rows) =="
+    REPRO_BENCH_QUICK=1 REPRO_BENCH_ONLY=router python -m benchmarks.run
+
+    echo "== router smoke: AOT reload -> 3 replicas -> kill one mid-stream =="
+    RXDIR="$(mktemp -d)/rx"
+    python -m repro.launch.serve --n 4000 --d 16 --batches 4 --backend xla \
+        --save-index "$RXDIR"
+    # replicas share the donor's compile cache: aggregated compiles must be
+    # ZERO after a topology-matched AOT reload, and the chaos kill must
+    # lose no futures (retry on a healthy peer) with exactly one eject
+    python -m repro.launch.serve --n 4000 --d 16 --batches 8 --backend xla \
+        --load-index "$RXDIR" --router replicated:3 --health-interval 0.2 \
+        --kill-replica 2 | tee /tmp/router_smoke.log
+    grep -q "compiles=0" /tmp/router_smoke.log
+    grep -q "lost_futures=0" /tmp/router_smoke.log
+    grep -q "ejects=1" /tmp/router_smoke.log
+    rm -rf "$(dirname "$RXDIR")" /tmp/router_smoke.log
+
+    echo "== examples smoke: pod_serving (router + failover demo) =="
+    REPRO_POD_N=3000 python examples/pod_serving.py
+}
+
 case "$TIER" in
     quick)   quick_tier ;;
     sharded) sharded_tier ;;
-    all)     quick_tier; sharded_tier ;;
-    *) echo "unknown tier '$TIER' (quick|sharded|all)" >&2; exit 2 ;;
+    router)  router_tier ;;
+    all)     quick_tier; sharded_tier; router_tier ;;
+    *) echo "unknown tier '$TIER' (quick|sharded|router|all)" >&2; exit 2 ;;
 esac

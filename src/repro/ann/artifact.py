@@ -134,26 +134,36 @@ def _config_from_dict(d: dict) -> ANNConfig:
 # save
 # --------------------------------------------------------------------------
 
+def _to_host(a) -> np.ndarray:
+    """Host copy of an operand.  A pod plane's row-sharded operands span
+    devices other processes own; gather them with an all-gather collective
+    (every process ends up with the full array — save runs SPMD)."""
+    if isinstance(a, jax.Array) and not a.is_fully_addressable:
+        from jax.experimental import multihost_utils
+        return np.asarray(multihost_utils.process_allgather(a, tiled=True))
+    return np.asarray(a)
+
+
 def _shard_arrays(eng) -> list:
-    """Gather the mesh plane's operands to host and cut them shard-major:
-    one dict per DB shard holding its X slice and its own sub-index.  The
-    build laid every row-sharded operand out as the concatenation of the
-    shard-local results (shard_map out_specs), so equal row slices ARE the
-    per-shard arrays."""
+    """Gather the mesh/pod plane's operands to host and cut them
+    shard-major: one dict per DB shard holding its X slice and its own
+    sub-index.  The build laid every row-sharded operand out as the
+    concatenation of the shard-local results (shard_map out_specs), so
+    equal row slices ARE the per-shard arrays."""
     plane = eng.plane
     n_shards = plane.n_db_shards
-    full = {"X": np.asarray(plane.X)}
+    full = {"X": _to_host(plane.X)}
     g = plane.graph
-    full["neighbors"] = np.asarray(g.neighbors)
-    full["lambdas"] = np.asarray(g.lambdas)
-    full["degrees"] = np.asarray(g.degrees)
-    full["hubs"] = (np.asarray(g.hubs) if g.hubs is not None
+    full["neighbors"] = _to_host(g.neighbors)
+    full["lambdas"] = _to_host(g.lambdas)
+    full["degrees"] = _to_host(g.degrees)
+    full["hubs"] = (_to_host(g.hubs) if g.hubs is not None
                     else np.zeros((0,), np.int32))
     if getattr(plane, "quantized", False):
         # operand order is (X, nbrs, lams, degs, hubs, codes, scales)
         ops = plane.operands()
-        full["codes"] = np.asarray(ops[5])
-        full["scales"] = np.asarray(ops[6])
+        full["codes"] = _to_host(ops[5])
+        full["scales"] = _to_host(ops[6])
     shards = []
     for i in range(n_shards):
         shard = {}
@@ -201,8 +211,13 @@ def save_index(index, path, *, aot: bool = True, extra_ks=()) -> Path:
     # un-compacted mutations (DESIGN.md §7): tombstone bitmap + the delta
     # shard's assigned rows.  Saved OUTSIDE arrays.npz so the base payload
     # stays byte-stable across pure-streaming saves of one generation.
+    # On a multi-process pod every process runs save_index SPMD (the shard
+    # gather below is a collective), but only process 0 touches the disk —
+    # the others rendezvous at the barrier before returning.
+    pid = jax.process_index()
+
     stream = getattr(eng, "stream", None)
-    if stream is not None and stream.dirty:
+    if stream is not None and stream.dirty and pid == 0:
         count = stream.delta.count
         np.savez(path / _STREAMING,
                  alive_bits=np.packbits(stream.base_alive),
@@ -212,16 +227,19 @@ def save_index(index, path, *, aot: bool = True, extra_ks=()) -> Path:
         manifest["streaming"] = {"file": _STREAMING,
                                  "sha256": _sha256(path / _STREAMING)}
 
-    if plane.name == "mesh":
+    if plane.name in ("mesh", "pod"):
         manifest["topology"] = plane.topology()
-        (path / "arrays").mkdir(exist_ok=True)
-        entries = []
-        for i, shard in enumerate(_shard_arrays(eng)):
-            fname = f"arrays/{i}.npz"
-            np.savez(path / fname, **shard)
-            entries.append({"file": fname, "sha256": _sha256(path / fname)})
-        manifest["arrays"] = entries
-    else:
+        shards = _shard_arrays(eng)  # collective on pod: run on ALL processes
+        if pid == 0:
+            (path / "arrays").mkdir(exist_ok=True)
+            entries = []
+            for i, shard in enumerate(shards):
+                fname = f"arrays/{i}.npz"
+                np.savez(path / fname, **shard)
+                entries.append({"file": fname,
+                                "sha256": _sha256(path / fname)})
+            manifest["arrays"] = entries
+    elif pid == 0:
         g = eng.graph
         arrays = {"X": np.asarray(eng.X),
                   "neighbors": np.asarray(g.neighbors),
@@ -237,7 +255,7 @@ def save_index(index, path, *, aot: bool = True, extra_ks=()) -> Path:
                               "sha256": _sha256(path / _ARRAYS)}
 
     aot_entries = []
-    if aot:
+    if aot and pid == 0:
         (path / "aot").mkdir(exist_ok=True)
         # warmup_probes() already dedups (regime, bucket) after the plane's
         # batch-multiple rounding, so entry names cannot collide
@@ -256,8 +274,12 @@ def save_index(index, path, *, aot: bool = True, extra_ks=()) -> Path:
                 aot_entries.append({
                     "kind": kind, "bucket": bucket, "k": k,
                     "file": fname, "sha256": _sha256(path / fname)})
-    manifest["aot"] = aot_entries
-    (path / _MANIFEST).write_text(json.dumps(manifest, indent=2))
+    if pid == 0:
+        manifest["aot"] = aot_entries
+        (path / _MANIFEST).write_text(json.dumps(manifest, indent=2))
+    if jax.process_count() > 1:
+        from jax.experimental import multihost_utils
+        multihost_utils.sync_global_devices("repro-save-index")
     return path
 
 
@@ -291,13 +313,16 @@ def _prime_aot(index, path: Path, manifest: dict) -> None:
     # pre-v4 artifacts predate compressed residency; all unquantized
     saved_fp.setdefault("quantization", "none")
     stale = [f for f in _FP_KEYS if saved_fp.get(f) != now_fp.get(f)]
-    if eng.plane.name == "mesh":
-        # exported mesh modules are pinned to the device count and the
-        # operand shardings — the full axis map must match exactly
+    if eng.plane.name in ("mesh", "pod"):
+        # exported mesh/pod modules are pinned to the device count and the
+        # operand shardings — the full axis map must match exactly (and for
+        # a pod, the process count: collectives bake in the runtime layout)
         if saved_fp.get("n_devices") != now_fp.get("n_devices"):
             stale.append("n_devices")
         if saved_fp.get("mesh_axes") != now_fp.get("mesh_axes"):
             stale.append("mesh_axes")
+        if saved_fp.get("n_processes") != now_fp.get("n_processes"):
+            stale.append("n_processes")
     if stale:
         warnings.warn(
             "AOT serving cache skipped — fingerprint mismatch on "
@@ -427,21 +452,38 @@ def load_index(index_cls, path, *, mesh=None):
 
     # compatible shard cut: re-bind the saved sub-indexes, no rebuild.
     # concatenated row slices are exactly the shard_map build layout, so a
-    # sharded device_put reproduces the original placement bit-for-bit
+    # sharded placement reproduces the original layout bit-for-bit.  When
+    # this process is part of a jax.distributed pod, restore onto a pod
+    # plane — its assembly path can place rows on other processes' devices,
+    # which a plain device_put cannot.
+    if jax.process_count() > 1:
+        from repro.serve.pod import PodPlane
+        plane_cls = PodPlane
+
+        def _put(a, sharding):
+            a = np.asarray(a)
+            return jax.make_array_from_callback(a.shape, sharding,
+                                                lambda idx: a[idx])
+    else:
+        plane_cls = MeshPlane
+
+        def _put(a, sharding):
+            return jax.device_put(jnp.asarray(a), sharding)
+
     sh = _mesh_shardings(mesh)
     parts = (
-        jax.device_put(jnp.asarray(full["X"]), sh["row2"]),
-        jax.device_put(jnp.asarray(full["neighbors"]), sh["row2"]),
-        jax.device_put(jnp.asarray(full["lambdas"]), sh["row2"]),
-        jax.device_put(jnp.asarray(full["degrees"]), sh["row1"]),
-        jax.device_put(jnp.asarray(full["hubs"]), sh["row1"]),
+        _put(full["X"], sh["row2"]),
+        _put(full["neighbors"], sh["row2"]),
+        _put(full["lambdas"], sh["row2"]),
+        _put(full["degrees"], sh["row1"]),
+        _put(full["hubs"], sh["row1"]),
     )
     if "codes" in full:  # v4: re-bind saved codes, skip re-quantization
         parts = parts + (
-            jax.device_put(jnp.asarray(full["codes"]), sh["row2"]),
-            jax.device_put(jnp.asarray(full["scales"]), sh["row1"]),
+            _put(full["codes"], sh["row2"]),
+            _put(full["scales"], sh["row1"]),
         )
-    plane = MeshPlane(None, cfg, mesh, parts=parts)
+    plane = plane_cls(None, cfg, mesh, parts=parts)
     index = index_cls(None, cfg, k=k, plane=plane, threshold=threshold)
     _prime_aot(index, path, manifest)
     return _finish_load(index, path, manifest)

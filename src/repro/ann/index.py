@@ -149,15 +149,29 @@ class Index:
         :meth:`load`)."""
         return self.engine.warmup(k=k)
 
-    def serve(self, **qos):
-        """A running :class:`~repro.serve.queue.MicroBatcher` over this
-        index — the concurrent-caller serving front.
+    def serve(self, *, router=None, **qos):
+        """The concurrent-caller serving front over this index.
 
+        By default: a running :class:`~repro.serve.queue.MicroBatcher`.
         QoS knobs pass through: ``max_wait_ms`` (coalescing window),
         ``max_batch`` (dispatch cap; submits at or above it take the
         bypass lane instead of queueing behind latency traffic).  Per
         request, ``submit(..., deadline_ms=)`` bounds the queue wait.
+
+        With ``router=`` (a :class:`~repro.serve.router.RouterConfig` or a
+        spec string like ``"replicated:3"`` / ``"sharded:2"``): a running
+        :class:`~repro.serve.router.Router` instead — N replica endpoints
+        (each its own micro-batching queue) with health-checked dispatch.
+        Replicated endpoints share this index's plane and compile cache;
+        sharded endpoints re-cut the corpus into equal slices.  The QoS
+        knobs then apply to every endpoint's queue.
         """
+        if router is not None:
+            from repro.serve.router import Router, parse_router_spec
+
+            if isinstance(router, str):
+                router = parse_router_spec(router)
+            return Router.for_index(self, router, **qos)
         from repro.serve.queue import MicroBatcher
 
         return MicroBatcher(self.engine, **qos)

@@ -140,6 +140,50 @@ def merge_topk(all_ids, all_d, k: int):
     return jnp.where(-neg < INF, out_ids, PAD_ID), -neg
 
 
+def _pool_merge(ids, dists, offsets, n_rows, k: int):
+    """jit body of :func:`merge_shard_results`: stacked per-shard pools
+    [P, B, k] -> merged global (ids, dists) [B, k]."""
+    valid = (ids >= 0) & (ids < n_rows[:, None, None]) & (dists < INF)
+    gids = jnp.where(valid, ids + offsets[:, None, None], PAD_ID)
+    gd = jnp.where(valid, dists, INF)
+    # shard-major column order, exactly the mesh plane's all_gather layout
+    all_ids = jnp.moveaxis(gids, 0, 1).reshape(gids.shape[1], -1)
+    all_d = jnp.moveaxis(gd, 0, 1).reshape(gd.shape[1], -1)
+    return merge_topk(all_ids, all_d, k)
+
+
+def merge_shard_results(results, offsets, n_rows, *, k: int,
+                        batch: int | None = None):
+    """Host-side counterpart of the mesh plane's cross-shard merge, used by
+    the request router's sharded mode (:mod:`repro.serve.router`).
+
+    ``results`` is one (ids [B, k'], dists [B, k']) pair per surviving
+    shard — shard-LOCAL ids from independent single-device engines.  Each
+    shard's ids are offset by its global row start (``offsets``) after
+    masking invalid lanes (negative / ``>= n_rows[i]`` sentinel ids, INF
+    distances — the same validity rule the streaming fuse applies), then
+    the pools are concatenated shard-major and reduced with
+    :func:`merge_topk` — so a router over P equal row slices answers
+    bitwise-identically to a P-DB-shard mesh plane.
+
+    ``batch`` sizes the all-PAD answer when ``results`` is empty (every
+    shard failed); otherwise it is inferred.  Returns numpy arrays.
+    """
+    import numpy as np
+    if not results:
+        if batch is None:
+            raise ValueError("batch= is required when no shard survived")
+        return (np.full((batch, k), int(PAD_ID), np.int32),
+                np.full((batch, k), float(INF), np.float32))
+    ids = jnp.stack([jnp.asarray(i) for i, _ in results])
+    dists = jnp.stack([jnp.asarray(d) for _, d in results])
+    gi, gd = jax.jit(_pool_merge, static_argnums=(4,))(
+        ids, dists,
+        jnp.asarray(list(offsets), jnp.int32),
+        jnp.asarray(list(n_rows), jnp.int32), k)
+    return np.asarray(gi), np.asarray(gd)
+
+
 def make_search_fn(mesh: Mesh, cfg: ANNConfig, *, kind: str = "large",
                    k: int = 10, batch: int | None = None,
                    stream: bool = False):

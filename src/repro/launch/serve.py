@@ -2,7 +2,9 @@
 
   PYTHONPATH=src python -m repro.launch.serve [--n 20000 --d 32] \
       [--data vectors.npy --queries queries.npy] [--batches 20] [--k 10] \
-      [--save-index DIR | --load-index DIR]
+      [--save-index DIR | --load-index DIR] \
+      [--router replicated:N|sharded:N [--replica-endpoints a,b,...] \
+       [--health-interval S] [--kill-replica IDX]]
 
 Drives the :class:`repro.ann.Index` facade: staged build (or artifact
 load), automatic regime dispatch, and the persistent AOT serving cache —
@@ -13,6 +15,14 @@ executables).
 
 With --data/--queries, serves real vectors; otherwise a synthetic clustered
 corpus with exact ground truth (recall is then reported per batch).
+
+``--router`` puts the DESIGN.md §9 request router in front: N replicated
+endpoints sharing the index's plane + compile cache (QPS scale-out), or N
+sharded sub-indexes fanned out and merged (capacity scale-out), with
+health-checked eject/readmit and a final aggregated stats line
+(``[router] compiles=... lost_futures=...`` — what the CI smoke greps).
+``--kill-replica IDX`` is the chaos drill: the endpoint dies mid-stream and
+replicated mode must finish with ``lost_futures=0``.
 """
 import argparse
 import time
@@ -54,6 +64,26 @@ def main() -> None:
                          "Combines with --save-index/--load-index: sharded "
                          "artifacts restore onto a compatible mesh with "
                          "zero rebuilds and zero compiles")
+    ap.add_argument("--router", metavar="MODE:N",
+                    help="serve through the request router (DESIGN.md §9): "
+                         "'replicated:N' dispatches each batch to one of N "
+                         "replicas of the index (shared plane + compile "
+                         "cache, least-loaded policy); 'sharded:N' splits "
+                         "the corpus into N contiguous sub-indexes and "
+                         "fans every batch out, merging per-shard top-k "
+                         "into global ids")
+    ap.add_argument("--replica-endpoints", metavar="NAME,NAME,...",
+                    help="comma-separated endpoint names for --router "
+                         "(default r0..rN-1 / s0..sN-1); count must match N")
+    ap.add_argument("--health-interval", type=float, default=1.0,
+                    metavar="SECONDS",
+                    help="router health-probe period; a replica whose probe "
+                         "fails is ejected within one interval and "
+                         "readmitted after recovering (0 disables probing)")
+    ap.add_argument("--kill-replica", type=int, default=None, metavar="IDX",
+                    help="chaos drill: kill endpoint IDX halfway through "
+                         "the batch stream (replicated mode retries on a "
+                         "healthy peer — zero lost futures)")
     ap.add_argument("--calibrate", action="store_true",
                     help="fit the regime-dispatch threshold from timed "
                          "probe batches at init (paper §4's per-device "
@@ -77,6 +107,32 @@ def main() -> None:
     from repro.ann import Index
     from repro.configs import get_arch
     from repro.data.synthetic import make_clustered, recall_at_k
+
+    # validate router flags before any expensive build (did-you-mean
+    # messages come from parse_router_spec, consistent with get_arch)
+    router_cfg = None
+    if args.router:
+        from repro.serve.router import parse_router_spec
+
+        names = ()
+        if args.replica_endpoints:
+            names = tuple(x.strip()
+                          for x in args.replica_endpoints.split(",")
+                          if x.strip())
+        try:
+            router_cfg = parse_router_spec(
+                args.router, health_interval_s=args.health_interval,
+                endpoint_names=names)
+        except ValueError as e:
+            raise SystemExit(f"--router: {e}")
+        if (args.kill_replica is not None
+                and not 0 <= args.kill_replica < router_cfg.replicas):
+            raise SystemExit(
+                f"--kill-replica {args.kill_replica} out of range for "
+                f"{router_cfg.replicas} replicas")
+    elif args.replica_endpoints or args.kill_replica is not None:
+        raise SystemExit(
+            "--replica-endpoints/--kill-replica only apply with --router")
 
     mesh = None
     if args.mesh:
@@ -166,30 +222,70 @@ def main() -> None:
         print(f"[serve] warmup: {n} compiles in "
               f"{time.perf_counter() - t0:.1f}s")
 
+    router = None
+    if router_cfg is not None:
+        router = index.serve(router=router_cfg)
+        print(f"[router] mode={router_cfg.mode} "
+              f"endpoints={[e.name for e in router.endpoints]} "
+              f"policy={router_cfg.policy} "
+              f"health_interval={router_cfg.health_interval_s}s")
+
     rng = np.random.default_rng(0)
     hits = total = 0
-    for i in range(args.batches):
-        B = int(rng.choice([1, 4, 16, 64, 256]))
-        sel = rng.integers(0, len(Q), B)
-        t1 = time.perf_counter()
-        ids, dists = index.search(Q[sel], k=k)
-        dt = (time.perf_counter() - t1) * 1e3
-        line = (f"[serve] batch {i:3d} B={B:4d} "
-                f"regime={index.regime(B):5s} {dt:7.1f} ms")
-        if gt is not None:
-            r = recall_at_k(ids, gt[sel], k)
-            hits += r * B
-            total += B
-            line += f"  recall@{k}={r:.3f}"
-        print(line, flush=True)
-    s = index.stats
-    print(f"[serve] {s.n_queries} queries / {s.n_batches} batches "
-          f"({s.small_batches} small, {s.large_batches} large), "
-          f"{s.qps:.0f} QPS steady-state"
-          + (f", weighted recall {hits / total:.3f}" if total else ""))
-    print(f"[serve] compiles={s.compiles} aot_primed={s.aot_primed} "
-          f"bucket_hit_rate={s.bucket_hit_rate:.2f} "
-          f"padded_queries={s.padded_queries}")
+    try:
+        for i in range(args.batches):
+            if (router is not None and args.kill_replica is not None
+                    and i == args.batches // 2):
+                victim = router.endpoints[args.kill_replica]
+                victim.kill()
+                print(f"[router] killed replica {victim.name!r} at batch "
+                      f"{i} (chaos drill — in-flight and later requests "
+                      "fail over)")
+            B = int(rng.choice([1, 4, 16, 64, 256]))
+            sel = rng.integers(0, len(Q), B)
+            t1 = time.perf_counter()
+            if router is not None:
+                ids, dists = router.query(Q[sel], k=k)
+            else:
+                ids, dists = index.search(Q[sel], k=k)
+            dt = (time.perf_counter() - t1) * 1e3
+            line = (f"[serve] batch {i:3d} B={B:4d} "
+                    f"regime={index.regime(B):5s} {dt:7.1f} ms")
+            if gt is not None:
+                r = recall_at_k(ids, gt[sel], k)
+                hits += r * B
+                total += B
+                line += f"  recall@{k}={r:.3f}"
+            print(line, flush=True)
+    finally:
+        if router is not None:
+            snap = router.snapshot()
+            router.close()
+    if router is not None:
+        agg, rt = snap["aggregate"], snap["router"]
+        print(f"[router] {rt['n_requests']} requests / "
+              f"{rt['n_dispatches']} dispatches over "
+              f"{agg['n_replicas']} endpoints "
+              f"({agg['healthy_replicas']} healthy), "
+              f"{agg['n_queries']} queries "
+              f"({agg['small_batches']} small, {agg['large_batches']} "
+              f"large batches), {agg['qps']:.0f} QPS aggregate"
+              + (f", weighted recall {hits / total:.3f}" if total else ""))
+        print(f"[router] compiles={agg['compiles']} "
+              f"aot_primed={agg['aot_primed']} "
+              f"lost_futures={rt['lost_futures']} "
+              f"retries={rt['retries']} ejects={rt['ejects']} "
+              f"readmits={rt['readmits']} probes={rt['probes']} "
+              f"expired={agg['expired']}")
+    else:
+        s = index.stats
+        print(f"[serve] {s.n_queries} queries / {s.n_batches} batches "
+              f"({s.small_batches} small, {s.large_batches} large), "
+              f"{s.qps:.0f} QPS steady-state"
+              + (f", weighted recall {hits / total:.3f}" if total else ""))
+        print(f"[serve] compiles={s.compiles} aot_primed={s.aot_primed} "
+              f"bucket_hit_rate={s.bucket_hit_rate:.2f} "
+              f"padded_queries={s.padded_queries}")
     if args.save_index:
         t0 = time.perf_counter()
         index.save(args.save_index)

@@ -184,7 +184,7 @@ class ANNEngine:
     def __init__(self, X, cfg: ANNConfig | None = None, *, k: int = 10,
                  graph=None, mesh=None, plane=None,
                  threshold: float | None = None,
-                 quant: tuple | None = None):
+                 quant: tuple | None = None, cache_from=None):
         self.cfg = cfg or ANNConfig()
         self.k = k
         self.stats = ServeStats()
@@ -213,6 +213,19 @@ class ANNEngine:
                                  "single-device engines")
             self.plane = MeshPlane(X, self.cfg, mesh)
         self.mesh = getattr(self.plane, "mesh", None)
+        if cache_from is not None:
+            # serving-replica mode (repro.serve.router): share the donor's
+            # compile cache (and its lock — entries are keyed purely on
+            # plane-derived state, identical across engines over one plane)
+            # so an AOT-primed donor makes every replica start steady-state;
+            # stats stay per-engine
+            if cache_from.plane is not self.plane:
+                raise ValueError(
+                    "cache_from shares compiled executables, which bind to "
+                    "the plane's operand snapshots; it requires plane= set "
+                    "to the donor's own plane")
+            self._compiled = cache_from._compiled
+            self._lock = cache_from._lock
         self.calibration = None
         self.threshold = threshold
         if (threshold is None

@@ -32,8 +32,9 @@ plus ``X``, ``graph``, ``cfg``, ``backend``, ``gather_fused``, ``donate``,
 ``batch_multiple()`` (bucket divisibility constraint) and ``topology()``
 (mesh shape; ``None`` on the single-device plane).  `register_plane()`
 accepts third-party planes by name, mirroring the kernel-backend registry
-(DESIGN.md §3): a future `jax.distributed` pod plane slots in without
-touching the engine.
+(DESIGN.md §3): the `jax.distributed` pod plane (:mod:`repro.serve.pod`,
+DESIGN.md §9) slots in through exactly this seam — registered lazily on
+first ``get_plane("pod")`` so single-process imports never touch it.
 
 **Generations & streaming (DESIGN.md §7).**  Every serving computation is
 lowered with the database and graph as *runtime arguments* (never closed
@@ -123,6 +124,12 @@ def planes() -> tuple:
 
 
 def get_plane(name: str):
+    if name == "pod" and name not in _PLANES:
+        # the multi-process plane lives in its own module (it must not be
+        # imported before jax.distributed is initialized); registering on
+        # first lookup keeps single-process imports free of it
+        import repro.serve.pod as _pod
+        _pod.PodPlane  # noqa: B018 — lazy class build registers "pod"
     try:
         return _PLANES[name]
     except KeyError:
@@ -191,6 +198,12 @@ class _SnapshotPlane:
 
     # -- executable binding -------------------------------------------------
 
+    def _place_query(self, Qb):
+        """Hook: place the engine's (process-local) padded query batch where
+        the compiled module expects it.  Identity for in-process planes; the
+        multi-process pod plane lifts it into a global replicated array."""
+        return Qb
+
     def _bind(self, raw, token, *, stream_cap=None):
         """Wrap a compiled module (over flat operand args + Q) into the
         engine-facing single-argument form.  The wrapper reads the CURRENT
@@ -202,6 +215,7 @@ class _SnapshotPlane:
                 raise StaleGeneration(
                     "executable lowered for a previous generation's operand "
                     "shapes; re-dispatch against the new shape token")
+            Qb = self._place_query(Qb)
             if stream_cap is None:
                 return raw(*ops, Qb)
             if stream is None or int(stream[1].shape[0]) != stream_cap:
@@ -531,11 +545,18 @@ class MeshPlane(_SnapshotPlane):
         self._qsharded = NamedSharding(mesh, P(D.query_axes(mesh) or None,
                                                None))
         if parts is None:
-            Xs = jax.device_put(jnp.asarray(X), self._db2)
+            Xs = self._put(X, self._db2)
             nbrs, lams, degs, hubs = D.make_build_fn(mesh, cfg)(Xs)
             jax.block_until_ready(nbrs)
             parts = (Xs, nbrs, lams, degs, hubs)
         self._install(parts[0], parts[1:], stream=None)
+
+    def _put(self, a, sharding):
+        """Hook: lay a host array out over the mesh.  ``device_put`` when
+        every device is process-local; the pod plane overrides this with a
+        per-process ``make_array_from_callback`` assembly (a device_put to
+        non-addressable devices is illegal in multi-process jax)."""
+        return jax.device_put(jnp.asarray(a), sharding)
 
     def _quantize_sharded(self, Xs):
         """Per-row codes + scales, row-sharded alongside the database (the
@@ -565,7 +586,7 @@ class MeshPlane(_SnapshotPlane):
         and rebuild the shard-local sub-indexes — the same device_put +
         shard-mapped build a fresh mesh plane runs, so the swapped-in state
         is bitwise a fresh build's (compaction's parity bar)."""
-        Xs = jax.device_put(jnp.asarray(X), self._db2)
+        Xs = self._put(X, self._db2)
         nbrs, lams, degs, hubs = self._D.make_build_fn(self.mesh,
                                                        self.cfg)(Xs)
         jax.block_until_ready(nbrs)
@@ -578,15 +599,17 @@ class MeshPlane(_SnapshotPlane):
         ``merge_topk``'s id dedup collapses the copies)."""
         token, ops, _ = self._snap
         stream = (
-            jax.device_put(jnp.asarray(alive), self._db1),
-            jax.device_put(jnp.asarray(delta_X), self._repl),
-            jax.device_put(jnp.asarray(delta_alive), self._repl1))
+            self._put(alive, self._db1),
+            self._put(delta_X, self._repl),
+            self._put(delta_alive, self._repl1))
         if self.quantized:
             from repro.ann.quantize import quantize_rows
-            dcodes, dscales = quantize_rows(stream[1])
+            # quantize on host inputs so the codes can be laid out via
+            # _put (works for both the single-process and pod planes)
+            dcodes, dscales = quantize_rows(jnp.asarray(delta_X))
             stream = stream + (
-                jax.device_put(dcodes, self._repl),
-                jax.device_put(dscales, self._repl1))
+                self._put(dcodes, self._repl),
+                self._put(dscales, self._repl1))
         self._snap = (token, ops, stream)
 
     # -- engine-facing geometry --------------------------------------------

@@ -145,6 +145,7 @@ class MicroBatcher:
         self._carry: _Request | None = None
         self._bypass_threads: list = []
         self._closed = False
+        self._close_done = threading.Event()  # set once a close() finishes
         # makes submit's closed-check + enqueue atomic against close()
         # setting the flag: every accepted request is enqueued BEFORE the
         # shutdown sentinel, so it is either served by the dispatcher or
@@ -190,7 +191,10 @@ class MicroBatcher:
                                  else time.monotonic() + deadline_ms / 1e3))
         with self._submit_lock:
             if self._closed:
-                raise RuntimeError("MicroBatcher is closed")
+                raise RuntimeError(
+                    "MicroBatcher is closed — close() was already called; "
+                    "submits after close are rejected rather than queued "
+                    "(they could never be dispatched)")
             self._bypass_threads = [x for x in self._bypass_threads
                                     if x.is_alive()]
             if (Q.shape[0] >= self.max_batch
@@ -213,11 +217,23 @@ class MicroBatcher:
         return fut
 
     def close(self, *, drain: bool = True) -> None:
-        """Stop the dispatcher; by default after draining pending work."""
+        """Stop the dispatcher; by default after draining pending work.
+
+        Idempotent: a second (or concurrent) ``close()`` does not re-drain —
+        it blocks until the first call has finished, so no caller ever
+        returns from ``close()`` while futures are still being resolved."""
         with self._submit_lock:
-            if self._closed:
-                return
+            already = self._closed
             self._closed = True
+        if already:
+            self._close_done.wait(timeout=600)
+            return
+        try:
+            self._close(drain)
+        finally:
+            self._close_done.set()
+
+    def _close(self, drain: bool) -> None:
         if not drain:
             # fail whatever is still queued
             try:

@@ -160,8 +160,10 @@ def test_merge_fuzz_roundtrip():
 def test_planes_registered():
     assert {"single", "mesh"} <= set(planes())
     assert get_plane("single") is not None
+    # "pod" is not pre-registered but resolves via the lazy import seam
+    assert get_plane("pod") is not None and "pod" in planes()
     with pytest.raises(KeyError, match="unknown execution plane"):
-        get_plane("pod")
+        get_plane("hexapod")
 
 
 def test_single_plane_protocol(ds, cfg):

@@ -1,0 +1,224 @@
+"""Pod execution plane: multi-process `jax.distributed` CPU serving.
+
+The 2-process acceptance test launches two coordinated subprocesses (gloo
+collectives, one emulated device each) that build and serve THE SAME pod
+index SPMD; the parent asserts that
+
+* every process materializes the identical replicated answer,
+* the pod answers are bitwise a single-process 2-device mesh plane's
+  (the pod plane is the mesh plane stretched over processes — collectives
+  don't change a bit of the math),
+* the artifact written from the pod (process 0 writes, all processes
+  rendezvous) carries pod topology metadata and loads on a plain
+  single-process setup through the documented gather-and-rebuild fallback.
+
+The in-process tests cover the degenerate single-process pod (1-device
+mesh) where no ``jax.distributed`` init is needed.
+"""
+import dataclasses
+import json
+import os
+import socket
+import subprocess
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.ann import Index
+from repro.configs import get_arch
+from repro.data.synthetic import make_clustered, recall_at_k
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+# keep every participant (pod processes, mesh reference, in-process tests)
+# on the same corpus + config, or the bitwise comparisons are meaningless
+_DATA = """
+import dataclasses, numpy as np
+from repro.configs import get_arch
+from repro.data.synthetic import make_clustered
+ds = make_clustered(n=1024, d=16, n_queries=64, n_clusters=16, noise=0.6,
+                    seed=0)
+cfg = dataclasses.replace(get_arch('tsdg-paper'), k_graph=8, max_degree=12,
+                          lambda0=4, bridge_hubs=16, bridge_k=4, large_ef=32,
+                          large_hops=16, serve_buckets=(8, 64))
+THR = 8.0 * cfg.small_t0
+"""
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_clustered(n=1024, d=16, n_queries=64, n_clusters=16,
+                          noise=0.6, seed=0)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return dataclasses.replace(get_arch("tsdg-paper"), k_graph=8,
+                               max_degree=12, lambda0=4, bridge_hubs=16,
+                               bridge_k=4, large_ef=32, large_hops=16,
+                               serve_buckets=(8, 64))
+
+
+def _free_port() -> int:
+    s = socket.socket()
+    s.bind(("localhost", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def _spawn(code: str, devices: int):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    return subprocess.Popen([sys.executable, "-c", code], env=env,
+                            stdout=subprocess.PIPE,
+                            stderr=subprocess.STDOUT, text=True)
+
+
+def _run_pod(body: str, out: str, num: int = 2, timeout: int = 600):
+    """Launch ``num`` coordinated jax.distributed processes all running
+    ``body`` (tokens @PID@/@OUT@ substituted), with one device each."""
+    port = _free_port()
+    prelude = (
+        "import repro.serve.pod as pod\n"
+        f"pod.init_pod('localhost:{port}', num_processes={num}, "
+        "process_id=@PID@)\n"
+        "pod.init_pod()  # idempotent: a second call is a no-op\n"
+        "import jax\n"
+        f"assert jax.process_count() == {num}, jax.process_count()\n")
+    procs = [_spawn((prelude + body).replace("@PID@", str(pid))
+                    .replace("@OUT@", out), devices=1)
+             for pid in range(num)]
+    outs = [p.communicate(timeout=timeout)[0] for p in procs]
+    for p, o in zip(procs, outs):
+        assert p.returncode == 0, o
+    return outs
+
+
+def _run_single(code: str, devices: int = 2, timeout: int = 600):
+    p = _spawn(code, devices=devices)
+    out = p.communicate(timeout=timeout)[0]
+    assert p.returncode == 0, out
+    return out
+
+
+_POD_BODY = _DATA + """
+from repro.ann import Index
+from repro.data.synthetic import recall_at_k
+
+# a pod mesh must not shard queries across processes
+try:
+    pod.PodPlane(ds.X, cfg, mesh=jax.make_mesh((1, 2), ('data', 'model')))
+    raise SystemExit('expected ValueError for a model axis on a pod')
+except ValueError as e:
+    assert 'model' in str(e), e
+
+plane = pod.PodPlane(ds.X, cfg)
+assert plane.topology()['n_processes'] == 2
+assert plane.fingerprint()['n_processes'] == 2
+assert plane.topology()['n_db_shards'] == 2
+
+idx = Index(None, cfg, k=10, plane=plane, threshold=THR)
+small = idx.search(ds.Q[:5])
+large = idx.search(ds.Q)
+compiles = idx.stats.compiles
+again = idx.search(ds.Q[:5])
+assert idx.stats.compiles == compiles      # bucket hit, no recompile
+assert np.array_equal(np.asarray(small[0]), np.asarray(again[0]))
+r = recall_at_k(np.asarray(large[0]), ds.gt, 10)
+assert r > 0.8, r
+
+np.save('@OUT@/ids_small_@PID@.npy', np.asarray(small[0]))
+np.save('@OUT@/d_small_@PID@.npy', np.asarray(small[1]))
+np.save('@OUT@/ids_large_@PID@.npy', np.asarray(large[0]))
+np.save('@OUT@/d_large_@PID@.npy', np.asarray(large[1]))
+idx.save('@OUT@/pod_ix')    # SPMD save: collective gather, pid 0 writes
+print('POD OK @PID@')
+"""
+
+_MESH_REF = _DATA + """
+import jax
+from repro.ann import Index
+mesh = jax.make_mesh((2,), ('data',))
+mi = Index.build(ds.X, cfg, k=10, mesh=mesh, threshold=THR)
+small = mi.search(ds.Q[:5]); large = mi.search(ds.Q)
+np.save('@OUT@/ref_ids_small.npy', np.asarray(small[0]))
+np.save('@OUT@/ref_d_small.npy', np.asarray(small[1]))
+np.save('@OUT@/ref_ids_large.npy', np.asarray(large[0]))
+np.save('@OUT@/ref_d_large.npy', np.asarray(large[1]))
+print('REF OK')
+"""
+
+
+def test_pod_two_process_serving(ds, cfg, tmp_path):
+    """THE pod acceptance: 2 coordinated jax.distributed CPU processes
+    serve replicated answers that are identical on every process AND
+    bitwise a single-process 2-device mesh plane's, both regimes; the
+    pod-written artifact carries the topology and falls back cleanly on a
+    plain single-process load."""
+    out = str(tmp_path)
+    logs = _run_pod(_POD_BODY, out)
+    assert all("POD OK" in log for log in logs), logs
+
+    # SPMD serving: every process holds the identical full answer
+    for nm in ("ids_small", "d_small", "ids_large", "d_large"):
+        a = np.load(tmp_path / f"{nm}_0.npy")
+        b = np.load(tmp_path / f"{nm}_1.npy")
+        assert np.array_equal(a, b), nm
+
+    # cross-process collectives are bit-invisible: pod == mesh
+    _run_single(_MESH_REF.replace("@OUT@", out), devices=2)
+    for nm in ("ids_small", "ids_large"):
+        assert np.array_equal(np.load(tmp_path / f"{nm}_0.npy"),
+                              np.load(tmp_path / f"ref_{nm}.npy")), nm
+    for nm in ("d_small", "d_large"):
+        assert np.array_equal(
+            np.load(tmp_path / f"{nm}_0.npy").view(np.uint32),
+            np.load(tmp_path / f"ref_{nm}.npy").view(np.uint32)), nm
+
+    # the artifact records the pod topology (and only process 0 wrote it)
+    man = json.loads((tmp_path / "pod_ix" / "manifest.json").read_text())
+    assert man["plane"] == "pod"
+    assert man["topology"]["n_processes"] == 2
+    assert man["topology"]["n_db_shards"] == 2
+
+    # single-process fallback load: gather the shards, rebuild, still good
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        loaded = Index.load(tmp_path / "pod_ix")
+    assert any("sharded artifact" in str(x.message) for x in w)
+    r = recall_at_k(np.asarray(loaded.search(ds.Q)[0]), ds.gt, 10)
+    assert r > 0.8, r
+
+
+# ----------------------------------------------------------------------
+# degenerate single-process pod (no jax.distributed init required)
+# ----------------------------------------------------------------------
+
+def test_pod_plane_single_process_matches_single_device(ds, cfg):
+    """A 1-process 1-device pod is a 1-DB-shard mesh, which is bitwise the
+    single-device plane (the PR 5 invariant) — the whole pod stack
+    collapses cleanly when there's nothing to distribute."""
+    from repro.serve.plane import get_plane
+
+    thr = 8.0 * cfg.small_t0
+    plane = get_plane("pod")(ds.X, cfg)
+    assert plane.name == "pod"
+    assert plane.topology()["n_processes"] == 1
+    pi = Index(None, cfg, k=10, plane=plane, threshold=thr)
+    si = Index.build(ds.X, cfg, k=10, threshold=thr)
+    for B in (5, 64):
+        got, ref = pi.search(ds.Q[:B]), si.search(ds.Q[:B])
+        assert np.array_equal(np.asarray(got[0]), np.asarray(ref[0]))
+        assert np.array_equal(np.asarray(got[1]).view(np.uint32),
+                              np.asarray(ref[1]).view(np.uint32))
+
+
+def test_pod_plane_lazy_registration():
+    from repro.serve.plane import get_plane, planes
+
+    assert get_plane("pod") is not None
+    assert "pod" in planes()

@@ -140,3 +140,47 @@ def test_deadline_on_real_engine_index_serve():
         ids, _ = f.result(timeout=120)
     assert ids.shape == (5,)
     assert mb.stats.expired == 0
+
+
+# ----------------------------------------------------------------------
+# close() lifecycle: idempotent, and submit-after-close fails loudly
+# ----------------------------------------------------------------------
+
+def test_close_is_idempotent():
+    """A second close() must be a no-op that still waits for the first
+    drain — not a re-drain, not an error."""
+    eng = _StubEngine()
+    mb = MicroBatcher(eng, max_wait_ms=1, max_batch=4)
+    f = mb.submit(np.zeros(4, np.float32))
+    mb.close()
+    mb.close()          # second call: returns cleanly
+    mb.close(drain=False)   # even with different args
+    assert f.result(timeout=5)[0].shape == (3,)
+
+
+def test_concurrent_close_waits_for_first_drain():
+    """close() racing close(): the loser must BLOCK until the winner has
+    resolved every pending future, so no caller observes a half-drained
+    queue."""
+    eng = _StubEngine(delay_s=0.3)
+    mb = MicroBatcher(eng, max_wait_ms=1, max_batch=1)
+    futs = [mb.submit(np.zeros(4, np.float32)) for _ in range(3)]
+    t = threading.Thread(target=mb.close)
+    t.start()
+    time.sleep(0.05)         # first close is mid-drain
+    mb.close()               # concurrent close: must wait, not return early
+    assert all(f.done() for f in futs), "close() returned before drain"
+    t.join(timeout=10)
+    for f in futs:
+        assert f.result(timeout=1)[0].shape == (3,)
+
+
+@pytest.mark.parametrize("drain", [True, False])
+def test_submit_after_close_raises(drain):
+    """submit() on a closed batcher raises a clear RuntimeError instead of
+    enqueueing a request nothing will ever dispatch (a hang)."""
+    eng = _StubEngine()
+    mb = MicroBatcher(eng, max_wait_ms=1, max_batch=4)
+    mb.close(drain=drain)
+    with pytest.raises(RuntimeError, match="MicroBatcher is closed"):
+        mb.submit(np.zeros(4, np.float32))
