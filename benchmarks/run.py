@@ -615,6 +615,100 @@ def quantization_recall():
 
 
 # ==========================================================================
+# locality-packed layout + visited filter (DESIGN.md §10)
+# ==========================================================================
+
+def layout_packing():
+    """The "layout" build stage + hash visited filter, measured end to end.
+
+    Rows: span coalescing of the adjacency before/after packing (host
+    mirror of the kernel's grouped-DMA rule, at the kernel group width
+    and the finer G=2/4 sub-widths the ROADMAP names), the DMA copy
+    counts those spans collapse, the per-hop merge work the visited
+    filter removes (static shapes), and steady per-query latency through
+    the serving engine for plain / packed / packed+hash in both regimes.
+
+    On CPU the latency rows are directional only: the hash filter's win
+    is structural (it deletes the O(width²) dedup scans + re-rank merge
+    the TPU bitonic path pays), but the XLA-CPU emulation pays the
+    probe scans without that saving, so expect hash rows slower here
+    and read the DMA/merge accounting rows for the TPU story.
+
+    This bench is also a CI quick-tier regression gate: the packed
+    graph's rows-per-copy must exceed 1.0 (the layout stage actually
+    coalesces) and packed results must stay bitwise-identical to
+    unpacked — either failure exits non-zero."""
+    from repro.ann import Index
+    from repro.ann import layout as LY
+    from repro.serve.plane import SMALL_WIDTH
+
+    ds = _dataset(n=2048 if QUICK else 8192, nq=256)
+    cfg = _cfg(max_degree=16, k_graph=24, serve_buckets=(8, 64),
+               large_hops=24 if QUICK else 48)
+    packed_pipe = ("knn", "diversify", "bridges", "layout")
+    variants = [
+        ("plain", dict()),
+        ("packed", dict(build_pipeline=packed_pipe)),
+        ("packed_hash", dict(build_pipeline=packed_pipe,
+                             visited_filter="hash")),
+    ]
+    built = {}
+    for name, kw in variants:
+        built[name] = Index.build(ds.X, dataclasses.replace(cfg, **kw),
+                                  k=10)
+
+    # -- span coalescing: host mirror of the kernel's grouped-DMA rule --
+    nb_plain = np.asarray(built["plain"].graph.neighbors)
+    nb_packed = np.asarray(built["packed"].graph.neighbors)
+    stats = {}
+    for tag, nb in (("before", nb_plain), ("after", nb_packed)):
+        st = LY.span_stats(nb)
+        stats[tag] = st
+        emit(f"layout/span_{tag}", 0.0,
+             f"group={st['group']};rows_per_copy={st['rows_per_copy']:.3f}"
+             f";frac_coalesced={st['frac_coalesced']:.3f}"
+             f";dma_copies={st['dma_copies']}")
+    # sub-group histogram: how much coalescing finer span widths would see
+    hist = ";".join(
+        f"G{g}={LY.span_stats(nb_packed, group=g)['frac_coalesced']:.3f}"
+        for g in (2, 4, 8))
+    emit("layout/span_histogram", 0.0, hist)
+
+    # -- merge work the visited filter removes (static shapes) --
+    W = SMALL_WIDTH  # the small regime's compiled ranking width
+    emit("layout/visited_merge_width", 0.0,
+         f"dedup_path=scan{W}x{W}+rerank_merge{2 * W}"
+         f";hash_path=merge{W};probes_per_lane=8")
+
+    # -- steady-state serving, packed vs plain, both regimes --
+    qps = {}
+    for name, _ in variants:
+        for regime, B in (("small", 8), ("large", 64)):
+            us = _steady_us(built[name], ds.Q, B)
+            qps[(name, regime)] = us
+            emit(f"layout/{name}_{regime}_B{B}", us,
+                 f"qps={1e6 / us:.0f}")
+
+    # -- gates --
+    rpc = stats["after"]["rows_per_copy"]
+    ok_rpc = rpc > 1.0
+    bitwise = all(
+        np.array_equal(built["plain"].search(ds.Q[:B])[i],
+                       built["packed"].search(ds.Q[:B])[i])
+        for B in (8, 64) for i in (0, 1))
+    emit("layout/gate", 0.0,
+         f"rows_per_copy={rpc:.3f};pass={ok_rpc}"
+         f";packed_bitwise={bitwise}")
+    if not ok_rpc:
+        raise SystemExit(
+            f"layout gate failed: packed rows-per-copy {rpc:.3f} <= 1.0 "
+            "(layout stage coalesced nothing)")
+    if not bitwise:
+        raise SystemExit(
+            "layout gate failed: packed results diverge from unpacked")
+
+
+# ==========================================================================
 # kernel microbenches — Pallas timed alongside the XLA refs
 # ==========================================================================
 
@@ -778,7 +872,7 @@ BENCHES = [table2_diversification_time, fig4_cpu_search, fig5_degree_sweep,
            serve_engine_mixed, serve_bucketed_vs_raw, serve_aot_reload,
            streaming_ingest,
            mesh_serve, router_serve, mesh_aot_reload,
-           quantization_recall,
+           quantization_recall, layout_packing,
            kernel_micro,
            hotpath_micro, search_backend_compare, roofline_table]
 

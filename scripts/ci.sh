@@ -5,7 +5,9 @@
 #   DMA path, exercised in interpret mode), the facade save/load round-trip
 #   tier, queue QoS (deadlines + bypass), compressed residency (int8
 #   parity + re-rank + artifact v4 + the recall@10 regression gate and a
-#   --quantization int8 save/load smoke), the fast test suite, and smoke
+#   --quantization int8 save/load smoke), the locality-packed layout +
+#   visited filter tier (packed/unpacked bitwise parity, span-coalescing
+#   rows-per-copy gate, artifact v5), the fast test suite, and smoke
 #   benchmarks (bucketed serving + AOT reload rows, an explicit
 #   kernel_backend=xla serve run, the fused-vs-gather hotpath rows, and the
 #   facade build->save->load->serve->query smoke through the launcher and
@@ -46,11 +48,15 @@ quick_tier() {
     echo "== compressed residency: int8 parity, re-rank, artifact v4 =="
     python -m pytest -q tests/test_quantize.py
 
+    echo "== layout + visited filter: packed bitwise parity, artifact v5 =="
+    python -m pytest -q tests/test_layout.py
+
     echo "== quick test tier =="
     python -m pytest -q -m "not slow" --ignore=tests/test_distributed.py \
         --ignore=tests/test_hotpath.py --ignore=tests/test_search_dedup.py \
         --ignore=tests/test_ann_facade.py --ignore=tests/test_queue_qos.py \
         --ignore=tests/test_streaming.py --ignore=tests/test_quantize.py \
+        --ignore=tests/test_layout.py \
         --ignore=tests/test_mesh_plane.py --ignore=tests/test_router.py \
         --ignore=tests/test_pod_plane.py
 
@@ -69,6 +75,13 @@ quick_tier() {
     grep -q "recall_gate_small.*pass=True" /tmp/quant_bench.log
     grep -q "recall_gate_large.*pass=True" /tmp/quant_bench.log
     rm -f /tmp/quant_bench.log
+
+    echo "== layout bench + span gate (packed rows-per-copy > 1, bitwise) =="
+    REPRO_BENCH_QUICK=1 REPRO_BENCH_ONLY=layout python -m benchmarks.run \
+        | tee /tmp/layout_bench.log
+    grep -q "layout/gate.*pass=True" /tmp/layout_bench.log
+    grep -q "layout/gate.*packed_bitwise=True" /tmp/layout_bench.log
+    rm -f /tmp/layout_bench.log
 
     echo "== int8 smoke: build -> save -> load (v4 artifact, 0 compiles) =="
     QXDIR="$(mktemp -d)/qx"

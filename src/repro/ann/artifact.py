@@ -34,6 +34,14 @@ per-row int8 ``codes`` + fp32 ``scales`` alongside the fp32 database, so
 (or a v4 artifact saved with quantization off) simply lack the keys; a
 quantized config loading one derives the codes at plane install.
 
+Format v5 persists the locality layout (DESIGN.md §10): when the index was
+built with the "layout" pipeline stage, the database rows (and any int8
+codes) are stored in PACKED order with the ``perm`` array (per shard-local
+on a mesh artifact) alongside, so ``load`` re-binds the packed operands
+directly.  The rebuild fallbacks (reshard, gather) un-permute back to
+external row order first so saved external ids — including streaming
+tombstones — stay valid.  v1–v4 artifacts simply lack the key.
+
 The AOT blobs are exported with the database and graph as *runtime
 arguments* (never embedded constants), so each is a few tens of KB
 regardless of index size.  :func:`load_index` closes the deserialized
@@ -74,11 +82,12 @@ import numpy as np
 from repro.configs.base import ANNConfig
 from repro.core.diversify import PackedGraph
 
-FORMAT_VERSION = 4
+FORMAT_VERSION = 5
 # still-readable older revisions (1 = pre-plane single-device layout,
 # 2 = pre-streaming: no generation counter / streaming payload,
-# 3 = pre-quantization: no persisted int8 codes/scales)
-READ_VERSIONS = (1, 2, 3, 4)
+# 3 = pre-quantization: no persisted int8 codes/scales,
+# 4 = pre-layout: no locality permutation — rows are in external order)
+READ_VERSIONS = (1, 2, 3, 4, 5)
 MAGIC = "repro-ann-index"
 _MANIFEST = "manifest.json"
 _ARRAYS = "arrays.npz"
@@ -86,7 +95,8 @@ _STREAMING = "streaming.npz"
 _GRAPH_KEYS = ("neighbors", "lambdas", "degrees")
 # fields that must match for persisted executables to be trusted
 _FP_KEYS = ("jax", "platform", "device_kind", "kernel_backend",
-            "gather_fused", "plane", "quantization")
+            "gather_fused", "plane", "quantization", "layout",
+            "visited_filter")
 
 
 class ArtifactError(RuntimeError):
@@ -160,10 +170,15 @@ def _shard_arrays(eng) -> list:
     full["hubs"] = (_to_host(g.hubs) if g.hubs is not None
                     else np.zeros((0,), np.int32))
     if getattr(plane, "quantized", False):
-        # operand order is (X, nbrs, lams, degs, hubs, codes, scales)
+        # operand order is (X, nbrs, lams, degs, hubs, codes, scales[, perm])
         ops = plane.operands()
         full["codes"] = _to_host(ops[5])
         full["scales"] = _to_host(ops[6])
+    if getattr(g, "perm", None) is not None:
+        # v5 locality layout: rows are stored in PACKED order, with the
+        # per-shard-local permutation alongside so load can re-bind (or
+        # un-permute for a reshard fallback) without re-running the BFS
+        full["perm"] = _to_host(g.perm)
     shards = []
     for i in range(n_shards):
         shard = {}
@@ -250,6 +265,9 @@ def save_index(index, path, *, aot: bool = True, extra_ks=()) -> Path:
         if getattr(plane, "quantized", False):
             arrays["codes"] = np.asarray(plane.codes)
             arrays["scales"] = np.asarray(plane.scales)
+        if getattr(g, "perm", None) is not None:
+            # v5: X/codes rows are in packed order; perm restores external
+            arrays["perm"] = np.asarray(g.perm)
         np.savez(path / _ARRAYS, **arrays)
         manifest["arrays"] = {"file": _ARRAYS,
                               "sha256": _sha256(path / _ARRAYS)}
@@ -312,6 +330,9 @@ def _prime_aot(index, path: Path, manifest: dict) -> None:
     saved_fp.setdefault("plane", "single")
     # pre-v4 artifacts predate compressed residency; all unquantized
     saved_fp.setdefault("quantization", "none")
+    # pre-v5 artifacts predate layout packing + the visited filter
+    saved_fp.setdefault("layout", False)
+    saved_fp.setdefault("visited_filter", "none")
     stale = [f for f in _FP_KEYS if saved_fp.get(f) != now_fp.get(f)]
     if eng.plane.name in ("mesh", "pod"):
         # exported mesh/pod modules are pinned to the device count and the
@@ -392,11 +413,13 @@ def load_index(index_cls, path, *, mesh=None):
     if saved_plane == "single":
         arrs = _verified_npz(path, manifest["arrays"])
         X = arrs["X"]
+        has_perm = "perm" in arrs  # v5 locality layout: X is packed
         graph = PackedGraph(
             neighbors=jnp.asarray(arrs["neighbors"]),
             lambdas=jnp.asarray(arrs["lambdas"]),
             degrees=jnp.asarray(arrs["degrees"]),
-            hubs=jnp.asarray(arrs["hubs"]) if "hubs" in arrs else None)
+            hubs=jnp.asarray(arrs["hubs"]) if "hubs" in arrs else None,
+            perm=jnp.asarray(arrs["perm"]) if has_perm else None)
         # v4 compressed-residency payload: re-bind the saved codes instead
         # of re-quantizing (pre-v4 quantized configs derive them at install)
         quant = ((arrs["codes"], arrs["scales"])
@@ -407,11 +430,16 @@ def load_index(index_cls, path, *, mesh=None):
                 "the database is re-laid over the mesh and shard-local "
                 "sub-indexes are REBUILT (the saved graph spans the whole "
                 "database); AOT cache skipped", stacklevel=3)
+            if has_perm:
+                # rebuild wants the corpus back in external row order so
+                # saved external ids (streaming state) stay valid
+                from repro.ann.layout import unpack_rows
+                X = unpack_rows(X, arrs["perm"])
             return _finish_load(
                 index_cls(X, cfg, k=k, mesh=mesh, threshold=threshold),
                 path, manifest)
         index = index_cls(X, cfg, k=k, graph=graph, threshold=threshold,
-                          quant=quant)
+                          quant=quant, packed=True)
         _prime_aot(index, path, manifest)
         return _finish_load(index, path, manifest)
 
@@ -421,9 +449,20 @@ def load_index(index_cls, path, *, mesh=None):
     names = ("X", *_GRAPH_KEYS, "hubs")
     if "codes" in shards[0]:  # v4 compressed-residency payload
         names = names + ("codes", "scales")
+    if "perm" in shards[0]:  # v5 locality layout: rows are shard-packed
+        names = names + ("perm",)
     full = {name: np.concatenate([s[name] for s in shards], axis=0)
             for name in names}
     topo = manifest.get("topology", {})
+
+    def _external_X():
+        """Corpus in external row order, for the rebuild fallbacks: a v5
+        layout artifact stores rows shard-packed, and the rebuild paths
+        must preserve the saved external ids (streaming state)."""
+        if "perm" not in full:
+            return full["X"]
+        from repro.ann.layout import unpack_rows
+        return unpack_rows(full["X"], full["perm"], n_shards=len(shards))
 
     if mesh is None:
         warnings.warn(
@@ -433,7 +472,7 @@ def load_index(index_cls, path, *, mesh=None):
             "own slice); pass mesh= to restore the sharded layout",
             stacklevel=3)
         return _finish_load(
-            index_cls(full["X"], cfg, k=k, threshold=threshold),
+            index_cls(_external_X(), cfg, k=k, threshold=threshold),
             path, manifest)
 
     from repro.core import distributed as D
@@ -447,7 +486,8 @@ def load_index(index_cls, path, *, mesh=None):
             "indexes REBUILT for the new shard cut); AOT cache skipped",
             stacklevel=3)
         return _finish_load(
-            index_cls(full["X"], cfg, k=k, mesh=mesh, threshold=threshold),
+            index_cls(_external_X(), cfg, k=k, mesh=mesh,
+                      threshold=threshold),
             path, manifest)
 
     # compatible shard cut: re-bind the saved sub-indexes, no rebuild.
@@ -483,6 +523,8 @@ def load_index(index_cls, path, *, mesh=None):
             _put(full["codes"], sh["row2"]),
             _put(full["scales"], sh["row1"]),
         )
+    if "perm" in full:  # v5: shard-local locality perm rides last
+        parts = parts + (_put(full["perm"], sh["row1"]),)
     plane = plane_cls(None, cfg, mesh, parts=parts)
     index = index_cls(None, cfg, k=k, plane=plane, threshold=threshold)
     _prime_aot(index, path, manifest)

@@ -68,7 +68,16 @@ def compact(engine, *, tile: int = 2048) -> np.ndarray:
             raise ValueError(
                 "cannot compact to an empty index: every row is "
                 "tombstoned; add vectors or rebuild")
-        X_eff, id_map = effective_corpus(stream, np.asarray(engine.X))
+        base_X = np.asarray(engine.X)
+        perm = getattr(engine.graph, "perm", None)
+        if perm is not None:
+            # locality-packed plane (DESIGN.md §10): device rows are in
+            # packed order, but the mutation log (and id_map semantics)
+            # live in external ids — un-permute before cutting the corpus
+            from repro.ann.layout import unpack_rows
+            nsh = getattr(engine.plane, "n_db_shards", 1)
+            base_X = unpack_rows(base_X, np.asarray(perm), n_shards=nsh)
+        X_eff, id_map = effective_corpus(stream, base_X)
         plane = engine.plane
         if plane.name == "mesh":
             shards = plane.n_db_shards

@@ -56,7 +56,7 @@ class Index:
     def __init__(self, X, cfg: ANNConfig | None = None, *, k: int = 10,
                  graph=None, mesh=None, plane=None, stages=None,
                  tile: int = 2048, threshold: float | None = None,
-                 quant: tuple | None = None):
+                 quant: tuple | None = None, packed: bool = False):
         from repro.serve.engine import ANNEngine
 
         cfg = cfg or ANNConfig()
@@ -71,7 +71,7 @@ class Index:
                              "(not with graph= or mesh=)")
         self.engine = ANNEngine(X, cfg, k=k, graph=graph, mesh=mesh,
                                 plane=plane, threshold=threshold,
-                                quant=quant)
+                                quant=quant, packed=packed)
 
     @classmethod
     def build(cls, X, cfg: ANNConfig | None = None, *, k: int = 10,

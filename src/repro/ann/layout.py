@@ -1,0 +1,268 @@
+"""Locality-packed graph layout (CAGRA/GGNN-style, DESIGN.md §10).
+
+The gather-fused Pallas path (DESIGN.md §2) issues one HBM->VMEM DMA per
+neighbor row at whatever addresses the build left them.  CAGRA
+(arXiv:2308.15136) and GGNN (arXiv:1912.01059) show that most of the
+remaining headroom is *layout*: store the database in an order where a
+node's neighbors live next to each other, and the per-row DMA descriptors
+collapse into multi-row contiguous copies.
+
+This module is the host-side half of that optimization:
+
+  * :func:`locality_order` — a max-fresh-first greedy traversal (a
+    coalescing-aware cousin of Cuthill–McKee): each pop numbers one
+    node's still-unnumbered neighbors as ONE consecutive id run, and pops
+    are ordered by how many fresh ids they can still mint, so the big
+    runs are minted before sibling pops fragment them;
+  * :func:`apply_layout` — relabel every structure into the packed order:
+    ``X[perm]`` rows, neighbor values through ``inv``, each row re-sorted
+    ascending by new id (sentinel ``N`` sinks to the end) so runs become
+    *detectable spans* for the kernel's grouped DMA;
+  * :func:`span_stats` — the measurement: how many of the kernel's
+    aligned G-row groups are contiguous spans (one ``make_async_copy``
+    instead of G), reported as mean DMA rows-per-copy.  The layout
+    benchmark tier and the CI gate consume this.
+
+The permutation is carried on the returned graph (``PackedGraph.perm``,
+new->old) and persisted in artifact format v5; the search procedures keep
+every externally-visible contract in the ORIGINAL id space (seeds, hash
+placements, tombstone masks, returned ids), so a packed index answers
+bitwise-identically to an unpacked one — see DESIGN.md §10 for the
+equivariance argument.
+
+Everything here is plain numpy on host: the traversal is inherently
+sequential and runs once per build (the "layout" stage), never on the
+serving path.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def locality_order(neighbors: np.ndarray, *, starts=None) -> np.ndarray:
+    """Max-fresh-first traversal order of the packed adjacency.
+
+    ``neighbors`` [N, M] int32 with sentinel ``N`` for absent edges.  Each
+    pop of a node ``u`` numbers ``u`` itself (if still unnumbered) and
+    then every still-unnumbered neighbor of ``u``, in stored lane order,
+    as one consecutive block of new ids — after relabeling, row ``u``
+    therefore holds a consecutive run the kernel's span detector can
+    coalesce.  A plain FIFO BFS wastes the runs: sibling pops inside an
+    exploding frontier have mostly-numbered neighborhoods and mint runs
+    of length ~1.  Popping by *fresh count* (how many unnumbered
+    neighbors a node still has, maintained exactly via the reverse
+    adjacency) mints the long runs first, before overlap can fragment
+    them.
+
+    ``starts`` (optional int sequence, e.g. the hub set) is popped first
+    in the given order; ties and leftovers resolve by smallest node id,
+    so the order is deterministic.  Returns ``perm`` [N] int32, new->old:
+    the node stored at packed row ``i`` is original node ``perm[i]``.
+    """
+    import heapq
+
+    nb = np.asarray(neighbors)
+    N = nb.shape[0]
+    # per-row deduped valid neighbor lists + reverse adjacency (dedup so
+    # a doubled lane cannot over-decrement the fresh counts)
+    rows: list[list[int]] = []
+    rev: list[list[int]] = [[] for _ in range(N)]
+    for u in range(N):
+        seen: set = set()
+        row = []
+        for v in nb[u]:
+            v = int(v)
+            if v < N and v not in seen:
+                seen.add(v)
+                row.append(v)
+                rev[v].append(u)
+        rows.append(row)
+    cnt = [len(r) for r in rows]
+    numbered = np.zeros(N, dtype=bool)
+    perm = np.empty(N, dtype=np.int32)
+    pos = 0
+
+    def pop(u: int) -> None:
+        nonlocal pos
+        fresh = []
+        if not numbered[u]:
+            numbered[u] = True
+            perm[pos] = u
+            pos += 1
+            fresh.append(u)
+        for v in rows[u]:
+            if not numbered[v]:
+                numbered[v] = True
+                perm[pos] = v
+                pos += 1
+                fresh.append(v)
+        for v in fresh:
+            for w in rev[v]:
+                cnt[w] -= 1
+
+    for s in (starts if starts is not None else []):
+        s = int(s)
+        if 0 <= s < N:
+            pop(s)
+    heap = [(-cnt[u], u) for u in range(N) if cnt[u] > 0]
+    heapq.heapify(heap)
+    while heap:
+        c, u = heapq.heappop(heap)
+        if -c != cnt[u]:
+            if cnt[u] > 0:
+                heapq.heappush(heap, (-cnt[u], u))  # lazy re-key
+            continue
+        pop(u)
+    for u in range(N):  # isolated leftovers, ascending
+        if not numbered[u]:
+            numbered[u] = True
+            perm[pos] = u
+            pos += 1
+    return perm
+
+
+def inverse_permutation(perm: np.ndarray) -> np.ndarray:
+    """old->new from new->old (``inv[perm[i]] == i``)."""
+    perm = np.asarray(perm)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(perm.shape[0], dtype=perm.dtype)
+    return inv
+
+
+def apply_layout(perm, X, neighbors, lambdas, degrees, hubs=None):
+    """Relabel every build artifact into packed (new-id) order.
+
+    Returns ``(X2, neighbors2, lambdas2, degrees2, hubs2)`` where
+
+      * ``X2[i] == X[perm[i]]`` (bitwise row gather — the parity contract
+        needs the packed rows to be the SAME fp32 bits);
+      * ``neighbors2[i]`` is ``inv[neighbors[perm[i]]]`` re-laid per row so
+        consecutive-id runs sit at ``span_group``-aligned lane boundaries
+        (λ carried along, sentinel ``N`` last) — the aligned runs are
+        exactly what the kernel's span detector coalesces;
+      * ``hubs2[j] == inv[hubs[j]]`` — POSITIONS are kept so the search's
+        hub draws pick the same vectors as the unpacked graph.
+
+    Lane order within a row is otherwise free: search results go through
+    the (dist, id)-total-order rank merge, so any lane permutation is
+    bitwise-invisible.  The one casualty is the λ-ascending invariant (λ
+    becomes a plain per-lane attribute); the λ-prefix ``gather_limit``
+    knob is therefore rejected for packed graphs at config validation.
+    """
+    perm = np.asarray(perm)
+    X = np.asarray(X)
+    nb = np.asarray(neighbors)
+    lam = np.asarray(lambdas)
+    N, M = nb.shape
+    inv = inverse_permutation(perm)
+    nb_p = nb[perm]
+    valid = nb_p < N
+    nb_new = np.where(valid, inv[np.clip(nb_p, 0, N - 1)], np.int32(N))
+    order = _run_aligned_order(nb_new, N, span_group(M))
+    neighbors2 = np.take_along_axis(nb_new, order, axis=1).astype(np.int32)
+    lambdas2 = np.take_along_axis(lam[perm], order, axis=1)
+    degrees2 = np.asarray(degrees)[perm]
+    hubs2 = None if hubs is None \
+        else inv[np.asarray(hubs)].astype(np.int32)
+    return X[perm], neighbors2, lambdas2, degrees2, hubs2
+
+
+def _run_aligned_order(nb_new: np.ndarray, N: int, G: int) -> np.ndarray:
+    """Per-row lane order packing consecutive-id runs onto aligned groups.
+
+    Ascending sort alone wastes most runs: a row's older (already-visited)
+    neighbor ids sort BEFORE its fresh BFS run and shift it off the
+    G-aligned boundaries the kernel inspects.  Instead, cut the sorted row
+    into maximal consecutive runs and emit each run's G-multiple prefix
+    first (the emitted prefix lengths are all multiples of G, so every
+    chunk lands on an aligned boundary and every G-chunk of a run is
+    itself consecutive), then the leftovers, then the sentinels.  Rows are
+    ``M`` lanes, so concatenated row gathers keep the alignment whenever
+    ``G | M`` — which ``span_group`` guarantees.
+
+    Returns ``order`` [N, M] int32 lane indices into the sorted-id view's
+    source row (``take_along_axis``-ready).
+    """
+    M = nb_new.shape[1]
+    sort_ord = np.argsort(nb_new, axis=1, kind="stable").astype(np.int32)
+    if G <= 1:
+        return sort_ord
+    s = np.take_along_axis(nb_new, sort_ord, axis=1).astype(np.int64)
+    # run ids: a lane starts a new run when it does not continue id+1
+    starts = np.ones_like(s, dtype=bool)
+    starts[:, 1:] = s[:, 1:] != s[:, :-1] + 1
+    starts |= s >= N                      # sentinels never join a run
+    run_id = np.cumsum(starts, axis=1) - 1           # [N, M]
+    # position within the run, and the run's total length, per lane
+    lane = np.arange(M)
+    run_start_lane = np.where(starts, lane, 0)
+    run_start_lane = np.maximum.accumulate(run_start_lane, axis=1)
+    pos = lane - run_start_lane
+    run_len = np.zeros_like(run_id)
+    np.add.at(run_len, (np.arange(s.shape[0])[:, None], run_id), 1)
+    run_len = np.take_along_axis(run_len, run_id, axis=1)
+    head = (pos < (run_len // G) * G) & (s < N)      # aligned-group lanes
+    # stable three-way partition: head lanes (in sorted order), spill, pad
+    klass = np.where(head, 0, np.where(s < N, 1, 2))
+    part = np.argsort(klass, axis=1, kind="stable").astype(np.int32)
+    return np.take_along_axis(sort_ord, part, axis=1)
+
+
+def unpack_rows(X: np.ndarray, perm: np.ndarray, *,
+                n_shards: int = 1) -> np.ndarray:
+    """Invert the packed row order back to external ids: packed row ``j``
+    holds original row ``perm[j]``, so ``out[perm[j]] = X[j]``.  With
+    ``n_shards > 1`` the inversion is per equal row slice (the mesh plane
+    packs each shard's LOCAL ids independently)."""
+    X = np.asarray(X)
+    perm = np.asarray(perm, np.int64)
+    N = X.shape[0]
+    if N % n_shards:
+        raise ValueError(f"{N} rows not divisible into {n_shards} shards")
+    n_local = N // n_shards
+    off = (np.arange(N, dtype=np.int64) // n_local) * n_local
+    out = np.empty_like(X)
+    out[off + perm] = X
+    return out
+
+
+def span_group(C: int, *, cap: int = 8) -> int:
+    """The kernel's static DMA group width for a C-lane gather: the
+    largest power of two <= ``cap`` dividing C (1 = no grouping).  Groups
+    must tile the candidate axis exactly so a group never straddles two
+    gather rows."""
+    g = 1
+    while g * 2 <= cap and C % (g * 2) == 0:
+        g *= 2
+    return g
+
+
+def span_stats(neighbors: np.ndarray, *, group: int | None = None) -> dict:
+    """Coalescing yield of a (packed or unpacked) adjacency.
+
+    Mirrors the kernel's span rule exactly: the [*, C] index array is cut
+    into aligned groups of ``group`` lanes; a group whose ids are one
+    ascending contiguous run (``idx[c+i] == idx[c] + i``) moves as ONE
+    multi-row ``make_async_copy``, every other group pays one copy per
+    lane.  Returns the group/copy accounting (pass ``group=`` to probe
+    sub-kernel span widths, e.g. the benchmark's G=2/4 histogram row).
+    """
+    nb = np.asarray(neighbors)
+    N, C = nb.shape
+    G = span_group(C) if group is None else group
+    if G <= 1 or C % G:
+        total = N * C
+        return {"group": 1, "n_groups": total, "n_coalesced": 0,
+                "dma_copies": total, "rows": total,
+                "rows_per_copy": 1.0, "frac_coalesced": 0.0}
+    g3 = nb.reshape(N, C // G, G).astype(np.int64)
+    expect = g3[:, :, :1] + np.arange(G, dtype=np.int64)
+    contig = np.all(g3 == expect, axis=2) & np.all(g3 < N, axis=2)
+    n_groups = N * (C // G)
+    n_coal = int(contig.sum())
+    copies = n_coal + (n_groups - n_coal) * G
+    rows = n_groups * G
+    return {"group": G, "n_groups": n_groups, "n_coalesced": n_coal,
+            "dma_copies": copies, "rows": rows,
+            "rows_per_copy": rows / copies,
+            "frac_coalesced": n_coal / n_groups}

@@ -55,6 +55,7 @@ class BuildState:
     lambdas: jax.Array | None = None
     degrees: jax.Array | None = None
     hubs: jax.Array | None = None
+    perm: jax.Array | None = None  # [N] int32 new->old ("layout" stage)
 
 
 # --------------------------------------------------------------------------
@@ -141,6 +142,41 @@ def _stage_bridges(s: BuildState) -> None:
     s.degrees = jnp.sum(s.neighbors < N, axis=1).astype(jnp.int32)
 
 
+@register_stage("layout")
+def _stage_layout(s: BuildState) -> None:
+    """Locality-packed layout (DESIGN.md §10): BFS-reorder node ids so
+    neighbor rows land contiguous in HBM and the gather kernel's grouped
+    DMA coalesces.  Host-side numpy — the traversal is sequential and runs
+    once per build, so this stage cannot appear inside a traced (mesh
+    shard_map) build; the mesh plane applies it per shard after the traced
+    stages instead."""
+    import numpy as np
+
+    from repro.ann import layout as L
+
+    if isinstance(s.X, jax.core.Tracer):
+        raise ValueError(
+            "the 'layout' build stage runs on host and cannot be traced; "
+            "mesh builds must strip it from the in-map pipeline and apply "
+            "the layout per shard afterwards (distributed.make_build_fn "
+            "does this automatically)")
+    if s.neighbors is None:
+        raise ValueError("'layout' must come after a graph-producing stage "
+                         "(e.g. 'diversify')")
+    nbrs = np.asarray(jax.device_get(s.neighbors))
+    hubs_np = None if s.hubs is None else np.asarray(jax.device_get(s.hubs))
+    perm = L.locality_order(nbrs, starts=hubs_np)
+    X2, nb2, lam2, deg2, hubs2 = L.apply_layout(
+        perm, jax.device_get(s.X), nbrs, jax.device_get(s.lambdas),
+        jax.device_get(s.degrees), hubs_np)
+    s.X = jnp.asarray(X2)
+    s.neighbors = jnp.asarray(nb2)
+    s.lambdas = jnp.asarray(lam2)
+    s.degrees = jnp.asarray(deg2)
+    s.hubs = None if hubs2 is None else jnp.asarray(hubs2)
+    s.perm = jnp.asarray(perm)
+
+
 # --------------------------------------------------------------------------
 # runner
 # --------------------------------------------------------------------------
@@ -172,4 +208,5 @@ def build_graph(X, cfg, *, stages=None, tile: int = 2048,
             "stage that sets state.neighbors/lambdas/degrees "
             "(e.g. 'diversify')")
     return PackedGraph(neighbors=state.neighbors, lambdas=state.lambdas,
-                       degrees=state.degrees, hubs=state.hubs)
+                       degrees=state.degrees, hubs=state.hubs,
+                       perm=state.perm)

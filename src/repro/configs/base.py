@@ -267,6 +267,13 @@ class ANNConfig:
     # rows; "none" keeps today's bitwise-exact fp32 trace
     quantization: str = "none"
     rerank_mult: int = 4
+    # in-kernel visited filter (DESIGN.md §10): "hash" consults a bucketed
+    # open-addressing hash set (8-way, external-id keyed) before rows enter
+    # the candidate pool, replacing the per-hop full-width dedup-by-id
+    # membership scans; "none" keeps the paper-faithful frozen traces
+    # bit-for-bit.  A full bucket treats the id as already-visited (safe
+    # drop — never a duplicate).
+    visited_filter: str = "none"
     family: str = "ann"
 
     def __post_init__(self):
@@ -294,6 +301,27 @@ class ANNConfig:
         if self.rerank_mult < 1:
             raise ValueError(
                 f"rerank_mult={self.rerank_mult} must be >= 1")
+        if self.visited_filter not in ("none", "hash"):
+            raise ValueError(
+                f"visited_filter={self.visited_filter!r} must be 'none' "
+                "or 'hash'")
+        if self.visited_filter == "hash" and self.exact_visited:
+            raise ValueError(
+                "visited_filter='hash' replaces the visited structures; "
+                "it cannot combine with exact_visited=True")
+        if "layout" in self.build_pipeline:
+            if self.gather_limit:
+                raise ValueError(
+                    "the 'layout' build stage re-sorts each neighbor row "
+                    "by packed id, destroying the λ-ascending prefix that "
+                    f"gather_limit={self.gather_limit} relies on; use "
+                    "gather_limit=0 with packed layouts")
+            if self.hop_width < self.max_degree:
+                raise ValueError(
+                    "packed layouts require hop_width >= max_degree "
+                    f"(got {self.hop_width} < {self.max_degree}): the "
+                    "small-batch chunked hop pairs lanes positionally, "
+                    "which is only permutation-equivariant in one chunk")
         if self.kernel_backend not in ("auto", "pallas", "xla"):
             # third-party backends are legal if registered; consult the
             # registry lazily so importing configs stays jax-free

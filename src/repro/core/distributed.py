@@ -80,8 +80,17 @@ def graph_pspec(mesh: Mesh):
 
 
 def make_build_fn(mesh: Mesh, cfg: ANNConfig):
-    """shard_map'd index build: each DB shard builds its own TSDG."""
+    """shard_map'd index build: each DB shard builds its own TSDG.
+
+    The "layout" stage (DESIGN.md §10) is a host-side BFS and cannot run
+    under the shard_map trace; it is stripped here and applied per shard
+    afterwards by :meth:`repro.serve.plane.MeshPlane._host_layout`."""
     d_ax = db_axes(mesh)
+    pipeline = tuple(getattr(cfg, "build_pipeline", ()) or ())
+    if "layout" in pipeline:
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, build_pipeline=tuple(p for p in pipeline if p != "layout"))
 
     def local_build(X_shard):
         from repro.ann.pipeline import build_graph
@@ -221,6 +230,8 @@ def make_search_fn(mesh: Mesh, cfg: ANNConfig, *, kind: str = "large",
     gather_fused = getattr(cfg, "gather_fused", None)
     quantized = getattr(cfg, "quantization", "none") == "int8"
     rerank_mult = getattr(cfg, "rerank_mult", 4)
+    visited = getattr(cfg, "visited_filter", "none")
+    has_layout = "layout" in tuple(getattr(cfg, "build_pipeline", ()) or ())
 
     def local_search(X_s, nbrs_s, lams_s, degs_s, hubs_s, *rest):
         rest = list(rest)
@@ -228,6 +239,10 @@ def make_search_fn(mesh: Mesh, cfg: ANNConfig, *, kind: str = "large",
         if quantized:  # row-sharded codes ride right after the fp32 parts
             codes_s, scales_s = rest[0], rest[1]
             rest = rest[2:]
+        perm_s = None
+        if has_layout:  # shard-local locality perm rides after the codes
+            perm_s = rest[0]
+            rest = rest[1:]
         d_codes = d_scales = None
         if stream:
             alive_s, delta_X, delta_alive = rest[0], rest[1], rest[2]
@@ -245,7 +260,8 @@ def make_search_fn(mesh: Mesh, cfg: ANNConfig, *, kind: str = "large",
             X_s = X_s.astype(jnp.bfloat16)
         graph = PackedGraph(neighbors=nbrs_s, lambdas=lams_s,
                             degrees=degs_s,
-                            hubs=hubs_s if hubs_s.shape[0] else None)
+                            hubs=hubs_s if hubs_s.shape[0] else None,
+                            perm=perm_s)
         # shard index along the DB axes -> global id offset
         idx = 0
         for a in d_ax:
@@ -265,7 +281,7 @@ def make_search_fn(mesh: Mesh, cfg: ANNConfig, *, kind: str = "large",
                 hop_width=cfg.hop_width, n_seeds=cfg.n_seeds,
                 lambda_limit=10, metric=cfg.metric, unroll=unroll,
                 t0_offset=q_idx * t0_local, t0_total=t0_local * n_q,
-                alive=alive_s,
+                alive=alive_s, visited=visited,
                 backend=backend, gather_fused=gather_fused, **quant_kw)
         else:
             ids, dist = _large_batch_search(
@@ -278,7 +294,7 @@ def make_search_fn(mesh: Mesh, cfg: ANNConfig, *, kind: str = "large",
                 unroll=unroll,
                 gather_limit=getattr(cfg, "gather_limit", 0),
                 exact_visited=getattr(cfg, "exact_visited", False),
-                alive=alive_s,
+                alive=alive_s, visited=visited,
                 backend=backend, gather_fused=gather_fused, **quant_kw)
         gids = jnp.where(ids < n_local, ids + offset, PAD_ID)
         dist = jnp.where(ids < n_local, dist, INF)
@@ -334,6 +350,8 @@ def make_search_fn(mesh: Mesh, cfg: ANNConfig, *, kind: str = "large",
                 P(d_ax))
     if quantized:  # row-sharded int8 codes + per-row scales
         in_specs = in_specs + (P(d_ax, None), P(d_ax))
+    if has_layout:  # shard-local locality perm, row-sharded
+        in_specs = in_specs + (P(d_ax),)
     if stream:
         in_specs = in_specs + (P(d_ax), P(None, None), P(None))
         if quantized:  # replicated delta codes + scales

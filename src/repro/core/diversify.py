@@ -212,12 +212,22 @@ class PackedGraph:
     that); HNSW solves it with its hierarchy, NSG with a spanning tree — the
     hub graph is the flat, TPU-friendly equivalent.  Disabled
     (bridge_hubs=0) for paper-faithful runs.
+
+    `perm` (optional) — locality layout permutation (DESIGN.md §10),
+    new->old: set by the "layout" build stage when the graph rows (and the
+    corpus rows alongside it) were reordered into BFS neighborhood order.
+    Node ids INSIDE `neighbors`/`hubs` are then internal (packed) ids;
+    everything at the facade stays in original-id space, translated
+    in-trace by the searches.  When `perm` is present the per-row λ
+    ordering gives way to ascending-id ordering (spans for the kernel's
+    coalesced DMA); λ remains a per-lane attribute.
     """
 
     neighbors: jax.Array  # [N, M] int32
-    lambdas: jax.Array    # [N, M] int32 (ascending per row)
+    lambdas: jax.Array    # [N, M] int32 (ascending per row unless perm)
     degrees: jax.Array    # [N] int32
     hubs: jax.Array | None = None  # [n_hubs] int32
+    perm: jax.Array | None = None  # [N] int32, new->old
 
     @property
     def n(self) -> int:
@@ -235,7 +245,8 @@ class PackedGraph:
         return jnp.sum(self.lambdas < lambda_limit, axis=1).astype(jnp.int32)
 
     def tree_flatten(self):
-        return (self.neighbors, self.lambdas, self.degrees, self.hubs), None
+        return (self.neighbors, self.lambdas, self.degrees, self.hubs,
+                self.perm), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):

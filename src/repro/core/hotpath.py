@@ -40,8 +40,24 @@ import jax.numpy as jnp
 
 from repro.kernels import l2dist as _l2
 from repro.kernels import topk as _topk
+from repro.kernels import visited as _vf
 
 INF = jnp.float32(3.4e38)
+
+
+def gather_dispatch(mode: str, interp: bool, fits: bool) -> bool:
+    """The gather-fused placement decision, named so tests can pin it.
+
+    ``"on"`` forces the in-kernel DMA gather (the parity tests);
+    ``"off"`` never fuses; ``"auto"`` fuses only where it wins — on real
+    TPU (BENCH_hotpath.json measured the fused path at 0.59x under
+    interpret-mode DMA emulation, so ``interp`` opts out) and only when
+    the tile fits the VMEM budget (``fits``).
+    """
+    if mode not in ("auto", "on", "off"):
+        raise ValueError(
+            f"gather_fused={mode!r} must be 'auto', 'on', or 'off'")
+    return mode == "on" or (mode == "auto" and not interp and fits)
 
 
 def _dist_block(Q3, V3, mask, metric: str, v_scale=None):
@@ -139,6 +155,10 @@ class _XlaBackend:
         return _dist_block(Q[None], Xd[None], m[None], metric,
                            v_scale=sc)[0]
 
+    @staticmethod
+    def visited_filter(table, ids, valid, *, interpret=None):
+        return _vf.visited_filter_xla(table, ids, valid)
+
 
 class _PallasBackend:
     """Fused device kernels (interpret mode when not on TPU)."""
@@ -167,9 +187,7 @@ class _PallasBackend:
         # int8 codes DMA 1 byte/element — the fused window widens ~4x
         fits = _l2.gather_fused_fits(Kq, C, d, self_q=self_q,
                                      itemsize=X.dtype.itemsize)
-        # auto: fused only where it wins — on real TPU (interpret-mode DMA
-        # emulation is far slower than one XLA gather) and inside budget
-        use_fused = mode == "on" or (mode == "auto" and not interp and fits)
+        use_fused = gather_dispatch(mode, interp, fits)
         idx_c = jnp.clip(idx, 0, X.shape[0] - 1)
         sc = None if scales is None else scales[idx_c]
         if not use_fused:
@@ -207,6 +225,11 @@ class _PallasBackend:
                                          metric=metric, bs=1,
                                          interpret=_interp(interpret))
         return out[0]
+
+    @staticmethod
+    def visited_filter(table, ids, valid, *, interpret=None):
+        return _vf.visited_filter_pallas(table, ids, valid,
+                                         interpret=_interp(interpret))
 
 
 _REGISTRY = {"xla": _XlaBackend, "pallas": _PallasBackend}
@@ -312,6 +335,54 @@ def scan_distances(Q, Xd, *, metric: str = "l2", mask=None,
                                        interpret=interpret, scales=scales)
     return fn(Q, Xd, metric=metric, mask=mask, interpret=interpret,
               scales=scales)
+
+
+def visited_table(rows: int, bound: int, *, ways: int = 8) -> jax.Array:
+    """Empty visited-filter table for ``rows`` independent searches, sized
+    for at most ``bound`` distinct insertions each at load factor <= 1/2
+    (buckets are a power of two >= 64, so bucket-overflow drops stay
+    rare).  Shape [rows, ways, n_buckets] int32, all ``EMPTY``."""
+    n_buckets = 64
+    need = -(-2 * bound // ways)
+    while n_buckets < need:
+        n_buckets *= 2
+    return jnp.full((rows, ways, n_buckets), _vf.VF_EMPTY, jnp.int32)
+
+
+def visited_filter(table, ids, *, valid, backend: str | None = None,
+                   interpret=None):
+    """Probe-and-insert a lane block into per-row visited hash sets.
+
+    ``table`` [B, W, S] int32 (from :func:`visited_table`), ``ids``
+    [B, M] int32 node ids, ``valid`` [B, M] bool -> ``(table', fresh)``
+    with ``fresh`` [B, M] bool marking lanes that are valid, were NOT
+    already in the row's set, and were inserted now.  A full bucket
+    reports not-fresh (safe drop, never a duplicate) — see
+    ``kernels/visited.py`` for the structure.
+
+    Lanes are processed in a canonical order (ascending id, invalid lanes
+    last; ties are bitwise-duplicate inserts, so their order cannot
+    matter) rather than lane order: within one call every id is probed
+    against the SAME table state regardless of how the caller's lanes are
+    arranged, which is what makes the packed-layout searches — whose hops
+    present the same multiset of ids in a permuted lane order — bitwise
+    equal to the unpacked baseline.  Backends share one int32 formulation
+    (``kernels/visited.lane_step``), so the parity contract holds here
+    too.
+    """
+    B, M = ids.shape
+    key = jnp.where(valid, ids, jnp.int32(2147483647))
+    order = jnp.argsort(key, axis=1, stable=True)
+    s_ids = jnp.take_along_axis(ids, order, axis=1)
+    s_valid = jnp.take_along_axis(valid, order, axis=1)
+    b = resolve_backend(backend)
+    impl = _REGISTRY[b]
+    fn = getattr(impl, "visited_filter", None)
+    if fn is None:  # third-party backend: the reference path is always legal
+        fn = _XlaBackend.visited_filter
+    table2, s_fresh = fn(table, s_ids, s_valid, interpret=interpret)
+    unsort = jnp.argsort(order, axis=1)
+    return table2, jnp.take_along_axis(s_fresh, unsort, axis=1)
 
 
 def seed_select(Q, X, seeds, *, metric: str = "l2", k: int = 1, mask=None,

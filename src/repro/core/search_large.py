@@ -52,7 +52,7 @@ def _seg_merge(d3, i3, keep: int, backend: str):
                      "n_seeds", "m_seg", "seg", "mv_seg", "segv",
                      "push_all_seeds", "unroll", "gather_limit",
                      "exact_visited", "backend", "gather_fused",
-                     "rerank_mult"))
+                     "rerank_mult", "visited"))
 def _large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
                        ef: int = 64, hops: int = 128, lambda_limit: int = 5,
                        metric: str = "l2", n_seeds: int = 32,
@@ -64,7 +64,8 @@ def _large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
                        alive=None,
                        backend: str = "auto",
                        gather_fused: str | None = None,
-                       codes=None, scales=None, rerank_mult: int = 0):
+                       codes=None, scales=None, rerank_mult: int = 0,
+                       visited: str = "none"):
     """Returns (ids [B, k], dists [B, k]).
 
     `alive` (optional traced [N] bool) is the streaming tombstone mask
@@ -89,12 +90,54 @@ def _large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
     are re-scored exactly against the fp32 ``X`` before the returned
     top-k — returned distances are exact.  ``codes=None`` traces the
     frozen fp32 computation bit-for-bit.
+
+    ``graph.perm`` (locality-packed layout, DESIGN.md §10): X/codes rows
+    and graph ids are then in packed (internal) order; seeds are drawn in
+    EXTERNAL id space and mapped in, every id-hash placement (C segments,
+    circular-V segments, the visited filter) keys on the external id, the
+    ``alive`` mask is external, and R's ids are mapped back external
+    before they leave — a packed index answers bitwise-identically to the
+    unpacked baseline.
+
+    ``visited="hash"`` (DESIGN.md §10) replaces the lossy circular V AND
+    the three per-hop membership scans (V rows, C rows, R array) with one
+    bucketed hash-set probe per neighbor lane
+    (:func:`repro.core.hotpath.visited_filter`) — exact up to rare
+    bucket-overflow *drops* (never duplicates).  Mutually exclusive with
+    ``exact_visited``; ``"none"`` traces the frozen computation
+    bit-for-bit.
     """
     N, d = X.shape
     B = Q.shape[0]
     if k > ef:
         raise ValueError(f"k={k} exceeds the ranking array size ef={ef}; "
                          "raise ef or lower k")
+    if visited not in ("none", "hash"):
+        raise ValueError(f"visited={visited!r} must be 'none' or 'hash'")
+    if visited == "hash" and exact_visited:
+        raise ValueError("visited='hash' replaces the visited structures; "
+                         "it cannot combine with exact_visited=True")
+    perm = graph.perm
+    if perm is not None:
+        if gather_limit:
+            raise ValueError(
+                "packed layouts re-sort neighbor rows by id, destroying "
+                f"the λ-ascending prefix gather_limit={gather_limit} "
+                "relies on")
+        inv = jnp.zeros((N,), jnp.int32).at[perm].set(
+            jnp.arange(N, dtype=jnp.int32))
+        alive_int = None if alive is None else alive[perm]
+    else:
+        inv = None
+        alive_int = alive
+
+    def _ext(ids):  # internal -> external (hash keys, output ids)
+        if perm is None:
+            return ids
+        return jnp.where(ids < N, perm[jnp.clip(ids, 0, N - 1)], ids)
+
+    def _ext_hash(ids):  # hash key for CLIPPED ids (always < N)
+        return ids if perm is None else perm[ids]
     key = jax.random.key(seed)
     # per-row keys: row i's seeds depend only on (seed, seed_offset + i),
     # never on B, so padded batches (serving shape buckets) match unpadded
@@ -107,11 +150,14 @@ def _large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
     seeds = jax.vmap(
         lambda rk: jax.random.randint(rk, (n_seeds,), 0, N, jnp.int32))(
         row_keys)                                             # [B, n_seeds]
+    if perm is not None:  # draws are EXTERNAL ids (seed parity) -> map in
+        seeds = inv[seeds]
     if graph.hubs is not None:
         nh = graph.hubs.shape[0]
         hub_pick = jax.vmap(
             lambda rk: jax.random.randint(jax.random.fold_in(rk, 1),
                                           (n_seeds // 2,), 0, nh))(row_keys)
+        # hubs hold internal ids at layout-invariant POSITIONS
         seeds = seeds.at[:, : n_seeds // 2].set(graph.hubs[hub_pick])
 
     nbrs_all, lams_all = graph.neighbors, graph.lambdas
@@ -128,7 +174,7 @@ def _large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
     ss_ids = jnp.take_along_axis(seeds, so, axis=1)
     dupm = jnp.concatenate([jnp.zeros((B, 1), bool),
                             ss_ids[:, 1:] == ss_ids[:, :-1]], axis=1)
-    seed_keep = ~dupm if alive is None else ~dupm & alive[ss_ids]
+    seed_keep = ~dupm if alive is None else ~dupm & alive_int[ss_ids]
     X_score = X if codes is None else codes  # int8 codes when quantized
     init_d, sids = HP.seed_select(Q, X_score, ss_ids, metric=metric,
                                   k=n_seeds, mask=seed_keep, backend=backend,
@@ -147,7 +193,9 @@ def _large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
     # C: hashed-segment batch insert of the seeds
     C_ids = jnp.full((B, m_seg, seg), N, jnp.int32)
     C_d = jnp.full((B, m_seg, seg), INF)
-    seg_of = jnp.clip(init_ids, 0, N - 1) % m_seg
+    # hash placements key on the EXTERNAL id so packed/unpacked layouts
+    # fill identical structures (sentinel lanes are masked via smask)
+    seg_of = _ext_hash(jnp.clip(init_ids, 0, N - 1)) % m_seg
     smask = (init_d < INF)[:, None, :] \
         & (seg_of[:, None, :] == jnp.arange(m_seg)[None, :, None])
     cd = jnp.where(smask, init_d[:, None, :], INF)
@@ -155,7 +203,15 @@ def _large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
     C_d, C_ids = _seg_merge(jnp.concatenate([C_d, cd], axis=2),
                             jnp.concatenate([C_ids, ci], axis=2),
                             seg, backend)
-    if exact_visited:
+    if visited == "hash":
+        # the hash set subsumes V *and* the per-hop C/R membership scans;
+        # V_ptr is unused.  Seeds are inserted up front (they are already
+        # in R and C, so a neighbor lane hitting a seed must not be fresh).
+        V, _ = HP.visited_filter(
+            HP.visited_table(B, n_seeds + hops * Mdeg),
+            _ext(init_ids), valid=init_d < INF, backend=backend)
+        V_ptr = jnp.zeros((B, 1), jnp.int32)
+    elif exact_visited:
         # mark the evaluated seeds; V_ptr is unused in this mode.  Marks are
         # monotone (never unset), so `.max` keeps duplicate-index scatters
         # (INF lanes clip onto node N-1) deterministic
@@ -195,14 +251,24 @@ def _large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
         ok = (lam < lambda_limit) & (e < N) & ~now_done[:, None]
         e_safe = jnp.clip(e, 0, N - 1)
         if alive is not None:  # tombstoned neighbors never enter R or C
-            ok = ok & alive[e_safe]
+            ok = ok & alive_int[e_safe]
         # drop repeats within this neighbor list (bridge splicing can
         # duplicate an existing edge) — keep the first occurrence
         dup_here = jnp.any(
             (e_safe[:, :, None] == e_safe[:, None, :]) & tril[None],
             axis=2)
 
-        if exact_visited:
+        if visited == "hash":
+            # one probe-and-insert answers "seen before?" for V, C, and R
+            # at once (every id that ever entered a ranking structure went
+            # through the filter first) and subsumes dup_here: duplicate
+            # lanes of one hop can't both be fresh.  `ok` already excludes
+            # done rows, so frozen rows never mutate their table.
+            V2, fresh = HP.visited_filter(V, _ext(e), valid=ok,
+                                          backend=backend)
+            new = fresh
+            V_ptr2 = V_ptr
+        elif exact_visited:
             # one byte-gather replaces all three membership scans;
             # evaluated nodes are marked immediately below (`.max` so a
             # duplicate edge's no-op lane can't erase its twin's fresh mark)
@@ -214,7 +280,7 @@ def _large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
             V_ptr2 = V_ptr
         else:
             # ---- V.add(u) (circular segment insert, paper Alg.2) -----
-            vs = u_safe % mv_seg
+            vs = _ext_hash(u_safe) % mv_seg
             slot = jnp.take_along_axis(V_ptr, vs[:, None], axis=1)[:, 0] \
                 % segv
             V2 = V.at[rows, vs, slot].set(u_safe)
@@ -222,10 +288,11 @@ def _large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
             V2 = jnp.where(now_done[:, None, None], V, V2)
             V_ptr2 = jnp.where(now_done[:, None], V_ptr, V_ptr2)
             # membership tests: e ∉ V and e ∉ C (paper line 15)
-            in_V = jnp.any(V2[rows[:, None], e_safe % mv_seg]
+            in_V = jnp.any(V2[rows[:, None], _ext_hash(e_safe) % mv_seg]
                            == e_safe[:, :, None], axis=2)
-            c_rows_ids = C_ids2[rows[:, None], e_safe % m_seg]  # [B, M, seg]
-            c_rows_d = C_d2[rows[:, None], e_safe % m_seg]
+            c_seg = _ext_hash(e_safe) % m_seg
+            c_rows_ids = C_ids2[rows[:, None], c_seg]           # [B, M, seg]
+            c_rows_d = C_d2[rows[:, None], c_seg]
             in_C = jnp.any((c_rows_ids == e_safe[:, :, None])
                            & (c_rows_d < INF), axis=2)
             in_R = jnp.any((R_ids[:, None, :] == e_safe[:, :, None])
@@ -246,7 +313,7 @@ def _large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
         R_d3, R_ids3 = HP.rank_merge(cat_d, cat_i, keep=ef, backend=backend)
 
         # ---- push into C: per-segment insert, evict most distant ------
-        seg_of_e = e_safe % m_seg
+        seg_of_e = _ext_hash(e_safe) % m_seg
         cand_mask = (ed < INF)[:, None, :] \
             & (seg_of_e[:, None, :] == jnp.arange(m_seg)[None, :, None])
         cand_d = jnp.where(cand_mask, ed[:, None, :], INF)  # [B, m, M]
@@ -265,18 +332,21 @@ def _large_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
     (R_ids, R_d, *_), _ = jax.lax.scan(step, state, None, length=hops,
                                        unroll=unroll)
     if codes is None:
-        return R_ids[:, :k].astype(jnp.int32), R_d[:, :k]
+        return _ext(R_ids[:, :k]).astype(jnp.int32), R_d[:, :k]
     # exact fp32 re-rank of the best rerank_mult*k survivors (R is already
     # (dist, id)-sorted and id-deduped, so a prefix slice is the top pool).
     # INF lanes (unfilled R slots carrying sentinel id N) stay masked
     # through the re-score, so they cannot displace real survivors.
     rerank = min(max(rerank_mult, 1) * k, ef)
-    rr_ids = R_ids[:, :rerank]
+    rr_ids = R_ids[:, :rerank]       # internal: indexes the packed fp32 rows
     rr_d = R_d[:, :rerank]
     ed = HP.neighbor_distances(Q, X, rr_ids, metric=metric,
                                mask=rr_d < INF, backend=backend,
                                gather_fused=gather_fused)
-    out_d, out_ids = HP.rank_merge(ed, rr_ids, keep=k, backend=backend)
+    # external BEFORE the merge so its (dist, id) tie order matches the
+    # unpacked baseline
+    out_d, out_ids = HP.rank_merge(ed, _ext(rr_ids), keep=k,
+                                   backend=backend)
     return out_ids.astype(jnp.int32), out_d
 
 

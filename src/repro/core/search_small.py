@@ -46,7 +46,7 @@ INF = jnp.float32(3.4e38)
     static_argnames=("k", "t0", "hops", "hop_width", "n_seeds",
                      "lambda_limit", "metric", "exact_merge", "width",
                      "unroll", "backend", "gather_fused", "t0_total",
-                     "rerank_mult"))
+                     "rerank_mult", "visited"))
 def _small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
                        t0: int = 32, hops: int = 6, hop_width: int = 32,
                        n_seeds: int = 32, lambda_limit: int = 10,
@@ -57,7 +57,8 @@ def _small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
                        alive=None,
                        backend: str = "auto",
                        gather_fused: str | None = None,
-                       codes=None, scales=None, rerank_mult: int = 0):
+                       codes=None, scales=None, rerank_mult: int = 0,
+                       visited: str = "none"):
     """Returns (ids [B, k], dists [B, k]).  `seed_offset` may be traced
     (it perturbs the base key — a cheap way to decorrelate restarts).
 
@@ -93,6 +94,22 @@ def _small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
     against the fp32 ``X``, and only then takes top-k — returned
     distances are exact.  ``codes=None`` traces the frozen fp32
     computation bit-for-bit.
+
+    ``graph.perm`` (locality-packed layout, DESIGN.md §10): when present,
+    X/codes rows and graph ids are in packed (internal) order, but every
+    externally-meaningful quantity stays in ORIGINAL id space — random
+    seeds are drawn externally and mapped in, the ``alive`` mask is
+    external, the visited filter hashes external ids, and candidate ids
+    are mapped back external *before* the final (id, dist) dedup merge —
+    so a packed index returns bitwise-identical results to the unpacked
+    baseline.
+
+    ``visited="hash"`` (DESIGN.md §10) consults a per-search bucketed
+    hash set (:func:`repro.core.hotpath.visited_filter`) before
+    candidates enter R_temp: already-seen ids drop to (INF, N) sentinels
+    up front, so the hop skips the O(width²) dedup-by-id scans and the
+    extra re-rank merge the paper path needs.  ``"none"`` traces the
+    frozen computation bit-for-bit.
     """
     N, d = X.shape
     B = Q.shape[0]
@@ -101,6 +118,18 @@ def _small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
         raise ValueError(
             f"k={k} exceeds the candidate pool t0*width={t0 * width}; "
             "raise t0/width or lower k")
+    if visited not in ("none", "hash"):
+        raise ValueError(f"visited={visited!r} must be 'none' or 'hash'")
+    perm = graph.perm
+    if perm is not None:
+        # old->new, in-trace (one [N] scatter per call — negligible vs the
+        # search itself); maps external draws/ids into packed space
+        inv = jnp.zeros((N,), jnp.int32).at[perm].set(
+            jnp.arange(N, dtype=jnp.int32))
+        alive_int = None if alive is None else alive[perm]
+    else:
+        inv = None
+        alive_int = alive
     half = width // 2
     key = jax.random.fold_in(jax.random.key(seed), seed_offset)
     t0_total = t0 if t0_total is None else t0_total
@@ -115,13 +144,17 @@ def _small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
     seeds = jax.vmap(
         lambda rk: jax.random.randint(rk, (n_seeds,), 0, N, jnp.int32))(
         row_keys)                                             # [S, n_seeds]
+    if perm is not None:  # draws are EXTERNAL ids (seed parity) -> map in
+        seeds = inv[seeds]
     if graph.hubs is not None:
         nh = graph.hubs.shape[0]
         hub_pick = jax.vmap(
             lambda rk: jax.random.randint(jax.random.fold_in(rk, 1),
                                           (n_seeds // 2,), 0, nh))(row_keys)
+        # hubs hold internal ids at layout-invariant POSITIONS, so the
+        # same draw picks the same vector packed or not
         seeds = seeds.at[:, : n_seeds // 2].set(graph.hubs[hub_pick])
-    seed_mask = alive[seeds] if alive is not None else None
+    seed_mask = alive_int[seeds] if alive is not None else None
     X_score = X if codes is None else codes  # int8 codes when quantized
     sd1, si1 = HP.seed_select(Qs, X_score, seeds, metric=metric, k=1,
                               mask=seed_mask, backend=backend,
@@ -140,14 +173,44 @@ def _small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
     n_chunks = max(1, -(-M_deg // hop_width))
     pad_m = n_chunks * hop_width - M_deg  # short NN lists -> one padded chunk
     tril_w = jnp.tril(jnp.ones((width, width), bool), k=-1)
+    if perm is not None and n_chunks > 1:
+        raise ValueError(
+            f"packed layout requires hop_width >= max_degree (got "
+            f"{hop_width} < {M_deg}): the chunked R_temp argmin pairs "
+            "lanes positionally, which is only permutation-equivariant "
+            "when a hop is a single chunk")
+
+    def _ext(ids):  # internal -> external (hash keys, output ids)
+        if perm is None:
+            return ids
+        return jnp.where(ids < N, perm[jnp.clip(ids, 0, N - 1)], ids)
+
+    if visited == "hash":
+        # <= M_deg fresh inserts per hop + the start node, per search row
+        vtab = HP.visited_table(S, hops * M_deg + 1)
+        vtab, _ = HP.visited_filter(vtab, _ext(u)[:, None],
+                                    valid=(u < N)[:, None], backend=backend)
 
     def hop(state, _):
-        u, rij_ids, rij_d, active = state
+        if visited == "hash":
+            u, rij_ids, rij_d, active, vtab = state
+        else:
+            u, rij_ids, rij_d, active = state
         nbrs = nbrs_all[u]                                    # [S, M]
         lams = lams_all[u]
         visit = lams < lambda_limit  # idx >= N masked by the primitive
         if alive is not None:  # tombstoned neighbors never enter a ranking
-            visit = visit & alive[jnp.clip(nbrs, 0, N - 1)]
+            visit = visit & alive_int[jnp.clip(nbrs, 0, N - 1)]
+        if visited == "hash":
+            # already-seen ids drop to (INF, N) sentinels BEFORE scoring:
+            # the hop then needs no dedup scans and no re-rank merge.
+            # External-id keys + the filter's canonical probe order make
+            # the drop set layout-invariant (graph.perm docstring above).
+            vtab_new, fresh = HP.visited_filter(
+                vtab, _ext(nbrs), valid=visit & (nbrs < N) & active[:, None],
+                backend=backend)
+            visit = fresh
+            nbrs = jnp.where(fresh, nbrs, N)
         dists = HP.neighbor_distances(Qs, X_score, nbrs, metric=metric,
                                       mask=visit, backend=backend,
                                       gather_fused=gather_fused,
@@ -172,6 +235,32 @@ def _small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
 
         rt_d_s, rt_ids_s = HP.rank_merge(rt_d, rt_ids, keep=width,
                                          backend=backend)
+        if visited == "hash":
+            # the filter already guarantees R_temp ids are distinct AND
+            # absent from R_ij (every id enters a ranking at most once per
+            # search), so the paper path's O(width²) dup scans and its
+            # re-rank of the deduped half collapse into plain merges
+            if exact_merge:
+                new_d, new_ids = HP.rank_merge(
+                    jnp.concatenate([rij_d, rt_d_s], axis=1),
+                    jnp.concatenate([rij_ids, rt_ids_s], axis=1),
+                    keep=width, backend=backend)
+                improved = jnp.any(new_d < rij_d, axis=1)
+            else:
+                improved = jnp.any(rt_d_s[:, :half] < rij_d[:, half:],
+                                   axis=1)
+                new_d, new_ids = HP.rank_merge(
+                    jnp.concatenate([rij_d[:, :half], rt_d_s[:, :half]],
+                                    axis=1),
+                    jnp.concatenate([rij_ids[:, :half], rt_ids_s[:, :half]],
+                                    axis=1),
+                    keep=width, backend=backend)
+            new_u = rt_ids_s[:, 0]
+            rij_d = jnp.where(active[:, None], new_d, rij_d)
+            rij_ids = jnp.where(active[:, None], new_ids, rij_ids)
+            u = jnp.where(active, new_u, u)
+            active = active & improved
+            return (u, rij_ids, rij_d, active, vtab_new), None
         # dedup R_temp by id: a node reached through two edges (duplicate
         # graph lanes, bridge splices) must not occupy two ranking slots.
         # The (dist, id) sort puts equal-id copies first-is-best, so "equal
@@ -219,16 +308,24 @@ def _small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
         active = active & improved
         return (u, rij_ids, rij_d, active), None
 
-    state = (u, rij_ids, rij_d, jnp.ones((S,), bool))
-    (u, rij_ids, rij_d, _), _ = jax.lax.scan(hop, state, None, length=hops,
-                                             unroll=unroll)
+    if visited == "hash":
+        state = (u, rij_ids, rij_d, jnp.ones((S,), bool), vtab)
+        (u, rij_ids, rij_d, _, _), _ = jax.lax.scan(
+            hop, state, None, length=hops, unroll=unroll)
+    else:
+        state = (u, rij_ids, rij_d, jnp.ones((S,), bool))
+        (u, rij_ids, rij_d, _), _ = jax.lax.scan(
+            hop, state, None, length=hops, unroll=unroll)
 
     # --- merge the t0 searches of each query (dedup + top-k) ---------------
     # (id, dist)-lexsorted so the dedup keeps the BEST copy of each id: a
     # plain stable id-sort keeps the first *column*, which can be an
     # INF-distance copy (λ-masked lane that entered a ranking array),
     # shadowing the real entry
-    cand_ids = rij_ids.reshape(B, t0 * width)
+    # packed layout: back to EXTERNAL ids BEFORE the dedup sort, so the
+    # (id, dist) order — and hence which duplicate survives — matches the
+    # unpacked baseline exactly
+    cand_ids = _ext(rij_ids.reshape(B, t0 * width))
     cand_d = rij_d.reshape(B, t0 * width)
     o = jnp.lexsort((cand_d, cand_ids), axis=1)
     sid = jnp.take_along_axis(cand_ids, o, axis=1)
@@ -250,7 +347,11 @@ def _small_batch_search(X, graph: PackedGraph, Q, *, k: int = 10,
     rerank = min(max(rerank_mult, 1) * k, sd2.shape[1])
     rr_d, rr_ids = HP.rank_merge(sd2, sid, keep=rerank,
                                  mask=keep_lane, backend=backend)
-    ed = HP.neighbor_distances(Q, X, rr_ids, metric=metric,
+    # rr_ids are external; the packed fp32 rows want internal indices
+    # (INF-masked lanes gather a garbage row harmlessly)
+    gi = rr_ids if perm is None else \
+        jnp.where(rr_ids < N, inv[jnp.clip(rr_ids, 0, N - 1)], rr_ids)
+    ed = HP.neighbor_distances(Q, X, gi, metric=metric,
                                mask=rr_d < INF, backend=backend,
                                gather_fused=gather_fused)
     out_d, out_ids = HP.rank_merge(ed, rr_ids, keep=k, backend=backend)

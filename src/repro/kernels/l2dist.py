@@ -233,6 +233,19 @@ def block_distances_pallas(Q, V, mask, v_scales=None, *, metric: str = "l2",
 # gathered-neighbor buffer of the gather-then-block path never exists.
 
 
+def span_group(C: int, *, cap: int = 8) -> int:
+    """Aligned-group width for span-coalesced gather DMA: the largest
+    power of two <= ``cap`` dividing C.  Group g covers candidate lanes
+    [g*G, (g+1)*G); when its prefetched ids are contiguous ascending the
+    kernel issues ONE [G, d] copy instead of G row copies.  Static in C,
+    so the kernel trace (and its issue/wait pairing) never depends on the
+    data.  ``ann.layout.span_stats`` mirrors this rule host-side."""
+    g = 1
+    while g * 2 <= cap and C % (g * 2) == 0:
+        g *= 2
+    return g
+
+
 def _gather_tile_bytes(Kq: int, C: int, d: int, *, self_q: bool,
                        itemsize: int = 4) -> int:
     """Bytes of one gather-fused block set per row of tile: Q tile (unless
@@ -275,6 +288,7 @@ def _gather_body(idx_ref, q_ref, s_ref, m_ref, x_hbm, o_ref, vbuf, sem, *,
     """
     i = pl.program_id(0)
     n = pl.num_programs(0)
+    G = span_group(C)  # aligned-group width for span-coalesced copies
 
     def _dma(slot, tile, r):
         # r enumerates the bs*C neighbor rows of the tile
@@ -284,17 +298,62 @@ def _gather_body(idx_ref, q_ref, s_ref, m_ref, x_hbm, o_ref, vbuf, sem, *,
             vbuf.at[slot, s, c],
             sem.at[slot])
 
-    def _issue(slot, tile):
-        def body(r, carry):
-            _dma(slot, tile, r).start()
+    def _span(tile, g):
+        """Group g of the tile: (row-in-tile, lane offset, base id, ok)
+        where ok means the G prefetched ids form one contiguous ascending
+        run — a single multi-row HBM slice.  Layout-packed graphs
+        (DESIGN.md §10) make this the common case.  All-SMEM scalar
+        reads, recomputed identically at issue and wait time so starts
+        and waits pair up; contiguity also bounds the slice (the last id
+        is pre-clipped < N, so base + G <= N)."""
+        gpr = C // G
+        s, c0 = g // gpr, jax.lax.rem(g, gpr) * G
+        base = idx_ref[tile * bs + s, c0]
+        ok = base >= 0
+        for j in range(1, G):
+            ok = jnp.logical_and(ok, idx_ref[tile * bs + s, c0 + j]
+                                 == base + j)
+        return s, c0, base, ok
+
+    def _span_dma(slot, tile, g):
+        s, c0, base, _ = _span(tile, g)
+        return pltpu.make_async_copy(
+            x_hbm.at[pl.ds(base, G)],
+            vbuf.at[slot, s, pl.ds(c0, G)],
+            sem.at[slot])
+
+    def _sweep(slot, tile, act):
+        """Drive every DMA of a tile through ``act`` (start or wait).
+        G == 1: the original per-row enumeration.  Else per group: one
+        coalesced copy when the span predicate holds, the G per-row
+        copies otherwise — both phases traverse the same groups with the
+        same predicates, so every started copy gets one matching wait."""
+        if G == 1:
+            def body(r, carry):
+                act(_dma(slot, tile, r))
+                return carry
+            jax.lax.fori_loop(0, bs * C, body, 0)
+            return
+
+        def body(g, carry):
+            s, c0, _, ok = _span(tile, g)
+
+            @pl.when(ok)
+            def _():
+                act(_span_dma(slot, tile, g))
+
+            @pl.when(jnp.logical_not(ok))
+            def _():
+                for j in range(G):
+                    act(_dma(slot, tile, s * C + c0 + j))
             return carry
-        jax.lax.fori_loop(0, bs * C, body, 0)
+        jax.lax.fori_loop(0, bs * (C // G), body, 0)
+
+    def _issue(slot, tile):
+        _sweep(slot, tile, lambda cp: cp.start())
 
     def _wait(slot, tile):
-        def body(r, carry):
-            _dma(slot, tile, r).wait()
-            return carry
-        jax.lax.fori_loop(0, bs * C, body, 0)
+        _sweep(slot, tile, lambda cp: cp.wait())
 
     @pl.when(i == 0)
     def _():

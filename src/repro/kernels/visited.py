@@ -1,0 +1,133 @@
+"""Bucketed open-addressing visited filter (CAGRA-style, DESIGN.md §10).
+
+A per-query hash SET of already-visited node ids, consulted before
+neighbor rows enter the candidate pool: ``search_small``/``search_large``
+with ``visited_filter="hash"`` replace their per-hop full-width
+dedup-by-id membership scans (O(width²) id comparisons through the
+bitonic rank-merge) with W probes per candidate lane.
+
+Layout: ``table`` [B, W, S] int32 — S buckets (power of two, last axis so
+the TPU lane dimension does the probing) × W ways per bucket, ``EMPTY``
+= -1 (node ids are always >= 0).  An id hashes to one bucket
+(Fibonacci/Knuth multiplicative hash on the HIGH bits via a logical right
+shift); membership is "any way equals id"; insertion takes the first
+empty way.  A full bucket treats the id as already visited — a safe
+*drop* (the search may rarely skip a revisit it would have re-pruned
+anyway) and never a duplicate, which is what the downstream merges rely
+on.  Tables are sized by :func:`repro.core.hotpath.visited_table` at load
+factor <= 1/2, so overflow drops are rare.
+
+Bitwise contract: everything here is int32 compare/select arithmetic, so
+the Pallas kernel and the XLA reference (both driven through
+:func:`lane_step`, one lane at a time in the caller-canonicalized order)
+agree exactly — the parity harness extends over the filter unchanged.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+VF_EMPTY = -1  # node ids are >= 0 (plain int: kernels must not capture it)
+# int32 wrap of Knuth's 2654435761 — multiplicative hashing wants the
+# high bits, hence the logical (unsigned) right shift in hash_bucket
+_GOLD = -1640531527
+
+
+def shift_for(n_buckets: int) -> int:
+    """Right-shift amount mapping a 32-bit hash onto [0, n_buckets)."""
+    if n_buckets < 2 or n_buckets & (n_buckets - 1):
+        raise ValueError(
+            f"visited-filter bucket count must be a power of two >= 2, "
+            f"got {n_buckets}")
+    return 32 - (n_buckets.bit_length() - 1)
+
+
+def hash_bucket(ids, shift: int):
+    """[*, ] int32 ids -> bucket indices in [0, 2**(32-shift))."""
+    return jax.lax.shift_right_logical(ids * jnp.int32(_GOLD), shift)
+
+
+def lane_step(tab, lid, lval, *, shift: int):
+    """Probe-and-insert ONE lane across the row batch.
+
+    ``tab`` [B, W, S] int32, ``lid`` [B] int32, ``lval`` [B] bool ->
+    ``(tab', fresh [B] bool)`` where ``fresh`` means: valid, not already
+    present, and inserted (bucket had a free way).  Pure int32
+    compare/select — the single formulation both backends execute, so
+    they agree bitwise by construction.
+    """
+    B, W, S = tab.shape
+    iota_s = jax.lax.broadcasted_iota(jnp.int32, (B, S), 1)
+    iota_w = jax.lax.broadcasted_iota(jnp.int32, (B, W), 1)
+    sel = iota_s == hash_bucket(lid, shift)[:, None]            # [B, S]
+    in_bucket = (tab == lid[:, None, None]) & sel[:, None, :]
+    hit = jnp.any(jnp.any(in_bucket, axis=2), axis=1)           # [B]
+    emptyw = jnp.any((tab == jnp.int32(VF_EMPTY)) & sel[:, None, :], axis=2)
+    slot = jnp.min(jnp.where(emptyw, iota_w, W), axis=1)        # first free
+    fresh = lval & (~hit) & (slot < W)
+    wmask = sel[:, None, :] & (iota_w == slot[:, None])[:, :, None] \
+        & fresh[:, None, None]
+    return jnp.where(wmask, lid[:, None, None], tab), fresh
+
+
+def visited_filter_xla(table, ids, valid):
+    """Reference path: lanes applied sequentially with ``lax.scan``."""
+    shift = shift_for(table.shape[2])
+
+    def lane(tab, xs):
+        lid, lval = xs
+        return lane_step(tab, lid, lval, shift=shift)
+
+    table2, fresh_t = jax.lax.scan(lane, table, (ids.T, valid.T))
+    return table2, fresh_t.T
+
+
+def _vf_kernel(ids_ref, val_ref, tab_ref, tab_out, fresh_ref, *, shift):
+    """One row-block: table resident in VMEM, lanes statically unrolled
+    (M is a trace constant; per-lane work is a handful of [bs, W, S]
+    compare/selects)."""
+    tab = tab_ref[...]
+    n_lanes = ids_ref.shape[1]
+    for lane in range(n_lanes):
+        lid = ids_ref[:, lane]
+        lval = val_ref[:, lane] != 0
+        tab, fresh = lane_step(tab, lid, lval, shift=shift)
+        fresh_ref[:, lane] = fresh.astype(jnp.int32)
+    tab_out[...] = tab
+
+
+def visited_filter_pallas(table, ids, valid, *, interpret: bool = False):
+    """Pallas path: grid over row blocks, the [bs, W, S] table block stays
+    VMEM-resident across all lanes of the call (the XLA path re-streams it
+    per scan step).  Same :func:`lane_step` arithmetic — bitwise the
+    reference."""
+    B, W, S = table.shape
+    M = ids.shape[1]
+    shift = shift_for(S)
+    # block small enough that table + ids + masks sit comfortably in VMEM
+    bs = 1
+    while bs * 2 <= min(B, 8) and (2 * bs) * W * S * 4 <= (1 << 20):
+        bs *= 2
+    Bp = -(-B // bs) * bs
+    if Bp != B:
+        pad = ((0, Bp - B),)
+        table = jnp.pad(table, pad + ((0, 0), (0, 0)),
+                        constant_values=int(VF_EMPTY))
+        ids = jnp.pad(ids, pad + ((0, 0),))
+        valid = jnp.pad(valid, pad + ((0, 0),))
+    table2, fresh = pl.pallas_call(
+        functools.partial(_vf_kernel, shift=shift),
+        grid=(Bp // bs,),
+        in_specs=[pl.BlockSpec((bs, M), lambda i: (i, 0)),
+                  pl.BlockSpec((bs, M), lambda i: (i, 0)),
+                  pl.BlockSpec((bs, W, S), lambda i: (i, 0, 0))],
+        out_specs=[pl.BlockSpec((bs, W, S), lambda i: (i, 0, 0)),
+                   pl.BlockSpec((bs, M), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((Bp, W, S), jnp.int32),
+                   jax.ShapeDtypeStruct((Bp, M), jnp.int32)],
+        interpret=interpret,
+    )(ids, valid.astype(jnp.int32), table)
+    return table2[:B], fresh[:B] != 0

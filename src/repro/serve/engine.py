@@ -130,6 +130,11 @@ class ServeStats:
     n_deleted: int = 0              # ids tombstoned via delete()
     compactions: int = 0
     stream_batches: int = 0         # batches answered by a streaming exe
+    # pinned-host H2D staging (single plane): batches moved through the
+    # plane's staging route, and how many reused an already-built route
+    # (the proof the pinned bounce buffer is reused in steady state)
+    h2d_staged: int = 0
+    h2d_stage_reuses: int = 0
     per_regime: dict = dataclasses.field(
         default_factory=lambda: {"small": RegimeStats(),
                                  "large": RegimeStats()})
@@ -156,6 +161,8 @@ class ServeStats:
             "generation": self.generation, "n_added": self.n_added,
             "n_deleted": self.n_deleted, "compactions": self.compactions,
             "stream_batches": self.stream_batches,
+            "h2d_staged": self.h2d_staged,
+            "h2d_stage_reuses": self.h2d_stage_reuses,
         }
         for name, reg in self.per_regime.items():
             for key, val in reg.percentiles().items():
@@ -184,7 +191,8 @@ class ANNEngine:
     def __init__(self, X, cfg: ANNConfig | None = None, *, k: int = 10,
                  graph=None, mesh=None, plane=None,
                  threshold: float | None = None,
-                 quant: tuple | None = None, cache_from=None):
+                 quant: tuple | None = None, cache_from=None,
+                 packed: bool = False):
         self.cfg = cfg or ANNConfig()
         self.k = k
         self.stats = ServeStats()
@@ -205,7 +213,7 @@ class ANNEngine:
             self.plane = plane
         elif mesh is None:
             self.plane = SingleDevicePlane(X, self.cfg, graph=graph,
-                                           quant=quant)
+                                           quant=quant, packed=packed)
         else:
             if graph is not None or quant is not None:
                 raise ValueError("mesh mode builds its own sharded graph "
@@ -364,13 +372,24 @@ class ANNEngine:
         """Answer a batch: (ids [B, k], dists [B, k]) numpy arrays."""
         Q_in = Q
         Q = self._check_numeric(Q, "Q")
-        Q = jnp.asarray(Q, jnp.float32) if Q is not Q_in else jnp.asarray(Q)
-        if Q.ndim != 2 or Q.shape[1] != self.X.shape[1]:
+        stage = getattr(self.plane, "stage_query", None)
+        host = None
+        if stage is not None and not isinstance(Q_in, jax.Array):
+            # host-resident batch on a staging-capable plane: keep it on
+            # host, pad there, and let the plane move it through its
+            # reusable pinned-host bounce route (one H2D DMA per call)
+            host = np.ascontiguousarray(np.asarray(Q, np.float32))
+            q_shape = host.shape
+        else:
+            Q = (jnp.asarray(Q, jnp.float32) if Q is not Q_in
+                 else jnp.asarray(Q))
+            if Q.dtype != jnp.float32:
+                Q = Q.astype(jnp.float32)
+            q_shape = tuple(Q.shape)
+        if len(q_shape) != 2 or q_shape[1] != self.X.shape[1]:
             raise ValueError(
-                f"Q must be [B, {self.X.shape[1]}], got {tuple(Q.shape)}")
-        if Q.dtype != jnp.float32:
-            Q = Q.astype(jnp.float32)
-        B = Q.shape[0]
+                f"Q must be [B, {self.X.shape[1]}], got {tuple(q_shape)}")
+        B = q_shape[0]
         if B == 0:
             raise ValueError("empty query batch")
         kind = self.regime(B)
@@ -382,7 +401,14 @@ class ANNEngine:
         # (bounded: generations move monotonically under _mutlock)
         for _ in range(3):
             streaming = self.plane.stream_active
-            if bucket > B:
+            if host is not None:
+                # edge-pad on host (bitwise the jnp.pad below: row
+                # replication), then one staged H2D transfer; the staged
+                # array is freshly ours, safe to donate
+                Qh = (host if bucket == B else
+                      np.pad(host, ((0, bucket - B), (0, 0)), mode="edge"))
+                Qpad = stage(Qh)
+            elif bucket > B:
                 Qpad = jnp.pad(Q, ((0, bucket - B), (0, 0)), mode="edge")
             elif self._donate:
                 # the executable donates its input buffer; never hand it a
@@ -415,6 +441,9 @@ class ANNEngine:
                 st.large_batches += 1
             if streaming:
                 st.stream_batches += 1
+            if host is not None:
+                st.h2d_staged += 1
+                st.h2d_stage_reuses = self.plane.stage_reuses
             if compiled_now:
                 st.bucket_misses += 1
             else:

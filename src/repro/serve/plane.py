@@ -98,7 +98,8 @@ class ExecutionPlane(Protocol):
 
     def operands(self) -> tuple:
         """Flat device-resident runtime arguments of exported modules, in
-        order: (X, neighbors, lambdas, degrees[, hubs])."""
+        order: (X, neighbors, lambdas, degrees[, hubs][, codes, scales]
+        [, perm])."""
         ...
 
     def fingerprint(self) -> dict:
@@ -148,6 +149,11 @@ def _runtime_fingerprint(plane) -> dict:
         "gather_fused": plane.gather_fused,
         "plane": plane.name,
         "quantization": getattr(plane.cfg, "quantization", "none"),
+        # locality-packed layout + visited filter (DESIGN.md §10): both
+        # change the lowered search trace, so persisted executables must
+        # not be reused across a flip of either
+        "layout": getattr(plane.graph, "perm", None) is not None,
+        "visited_filter": getattr(plane.cfg, "visited_filter", "none"),
     }
 
 
@@ -259,8 +265,11 @@ class SingleDevicePlane(_SnapshotPlane):
     name = "single"
 
     def __init__(self, X, cfg: ANNConfig, *, graph: PackedGraph | None = None,
-                 quant: tuple | None = None):
+                 quant: tuple | None = None, packed: bool = False):
         self.cfg = cfg
+        # reusable pinned-host H2D staging routes (see stage_query)
+        self._stage_puts = {}
+        self.stage_reuses = 0
         # kernel backend resolved once per plane; part of the engine's AOT
         # cache key so an engine rebuilt with a different backend never
         # aliases entries
@@ -275,9 +284,20 @@ class SingleDevicePlane(_SnapshotPlane):
         if graph is None:
             from repro.ann.pipeline import build_graph
             graph = build_graph(X, cfg)
-        self._install(X, graph, stream=None, quant=quant)
+        self._install(X, graph, stream=None, quant=quant, packed=packed)
 
-    def _install(self, X, graph, *, stream, quant=None) -> None:
+    def _install(self, X, graph, *, stream, quant=None,
+                 packed: bool = False) -> None:
+        """Swap in a generation.  ``X`` (and ``quant`` rows, if given)
+        arrive in EXTERNAL row order and are packed here when the graph
+        carries a locality permutation (DESIGN.md §10) — ``packed=True``
+        (artifact load) says they are already in packed order."""
+        perm = getattr(graph, "perm", None)
+        if perm is not None and not packed:
+            X = jnp.take(X, perm, axis=0)
+            if quant is not None:
+                quant = (jnp.take(jnp.asarray(quant[0]), perm, axis=0),
+                         jnp.take(jnp.asarray(quant[1]), perm, axis=0))
         self.X = X
         self.graph = graph
         if self.quantized:
@@ -293,6 +313,8 @@ class SingleDevicePlane(_SnapshotPlane):
             ops = ops + (graph.hubs,)
         if self.quantized:
             ops = ops + (self.codes, self.scales)
+        if perm is not None:
+            ops = ops + (perm,)  # rides last; tokenized like any operand
         self._snap = (_token_of(ops), ops, stream)
 
     # -- generations & streaming -------------------------------------------
@@ -333,6 +355,43 @@ class SingleDevicePlane(_SnapshotPlane):
     def fingerprint(self) -> dict:
         return _runtime_fingerprint(self)
 
+    # -- H2D staging --------------------------------------------------------
+
+    def _make_stage(self, shape, dtype):
+        """Build the staging route for one (shape, dtype): host numpy ->
+        pinned-host buffer -> one device DMA.  Falls back to a plain
+        ``device_put`` where the runtime has no pinned-host memory space
+        (CPU, interpret-mode test rigs)."""
+        dev = jax.devices()[0]
+        try:
+            pin = jax.sharding.SingleDeviceSharding(
+                dev, memory_kind="pinned_host")
+            dst = jax.sharding.SingleDeviceSharding(dev)
+            # probe: raises on runtimes without a pinned_host space
+            jax.device_put(jnp.zeros((1,), dtype), pin).block_until_ready()
+
+            def put(Qh):
+                return jax.device_put(jax.device_put(Qh, pin), dst)
+            return put
+        except Exception:  # noqa: BLE001 — capability probe
+            return lambda Qh: jax.device_put(jnp.asarray(Qh), dev)
+
+    def stage_query(self, Qh):
+        """Stage a host query batch onto the device through a reusable
+        pinned-host bounce route (ROADMAP "H2D staging").  One route is
+        kept per (shape, dtype) — the engine's bucket ladder makes repeats
+        the steady state — and every re-hit increments ``stage_reuses``
+        (surfaced as ``ServeStats.h2d_stage_reuses``, the proof that
+        steady-state traffic reuses the staging buffer instead of setting
+        up a fresh transfer path per call)."""
+        key = (tuple(Qh.shape), str(Qh.dtype))
+        put = self._stage_puts.get(key)
+        if put is None:
+            put = self._stage_puts[key] = self._make_stage(Qh.shape, Qh.dtype)
+        else:
+            self.stage_reuses += 1
+        return put(Qh)
+
     # -- lowering -----------------------------------------------------------
 
     def _search_args(self, kind: str, k: int):
@@ -341,10 +400,12 @@ class SingleDevicePlane(_SnapshotPlane):
         from repro.core.search_small import _small_batch_search
 
         cfg = self.cfg
+        visited = getattr(cfg, "visited_filter", "none")
         if kind == "small":
             kwargs = dict(k=k, t0=cfg.small_t0, hops=cfg.small_hops,
                           hop_width=cfg.hop_width, n_seeds=cfg.n_seeds,
                           lambda_limit=10, metric=cfg.metric,
+                          visited=visited,
                           backend=self.backend,
                           gather_fused=self.gather_fused)
             return _small_batch_search, kwargs
@@ -353,6 +414,7 @@ class SingleDevicePlane(_SnapshotPlane):
                       n_seeds=getattr(cfg, "large_n_seeds", cfg.n_seeds),
                       m_seg=cfg.queue_segments, seg=cfg.segment_size,
                       mv_seg=cfg.visited_segments, delta=cfg.delta,
+                      visited=visited,
                       backend=self.backend,
                       gather_fused=self.gather_fused)
         return _large_batch_search, kwargs
@@ -368,14 +430,17 @@ class SingleDevicePlane(_SnapshotPlane):
         (bitwise contract)."""
         fn, kwargs = self._search_args(kind, k)
         has_hubs = self.graph.hubs is not None
+        has_perm = self.graph.perm is not None
         n_base = 5 if has_hubs else 4
         quantized = self.quantized
+        i_perm = n_base + (2 if quantized else 0)  # perm rides last
         rerank_mult = getattr(self.cfg, "rerank_mult", 4)
 
         def call(*args):
             Xa, nbrs, lams, degs = args[:4]
             g = PackedGraph(neighbors=nbrs, lambdas=lams, degrees=degs,
-                            hubs=args[4] if has_hubs else None)
+                            hubs=args[4] if has_hubs else None,
+                            perm=args[i_perm] if has_perm else None)
             extra = dict(codes=args[n_base], scales=args[n_base + 1],
                          rerank_mult=rerank_mult) if quantized else {}
             return fn(Xa, g, args[-1], **kwargs, **extra)
@@ -409,7 +474,9 @@ class SingleDevicePlane(_SnapshotPlane):
         cap = int(stream[1].shape[0])
         fn, kwargs = self._search_args(kind, k)
         has_hubs = self.graph.hubs is not None
+        has_perm = self.graph.perm is not None
         n_base = 5 if has_hubs else 4
+        i_perm = n_base + (2 if self.quantized else 0)
         n_ops = len(self.operands())
         N = int(self.X.shape[0])
         metric = self.cfg.metric
@@ -422,7 +489,8 @@ class SingleDevicePlane(_SnapshotPlane):
         def call(*args):
             Xa, nbrs, lams, degs = args[:4]
             g = PackedGraph(neighbors=nbrs, lambdas=lams, degrees=degs,
-                            hubs=args[4] if has_hubs else None)
+                            hubs=args[4] if has_hubs else None,
+                            perm=args[i_perm] if has_perm else None)
             Qb = args[-1]
             extra = dict(codes=args[n_base], scales=args[n_base + 1],
                          rerank_mult=rerank_mult) if quantized else {}
@@ -546,9 +614,10 @@ class MeshPlane(_SnapshotPlane):
                                                None))
         if parts is None:
             Xs = self._put(X, self._db2)
-            nbrs, lams, degs, hubs = D.make_build_fn(mesh, cfg)(Xs)
-            jax.block_until_ready(nbrs)
-            parts = (Xs, nbrs, lams, degs, hubs)
+            built = D.make_build_fn(mesh, cfg)(Xs)
+            jax.block_until_ready(built[0])
+            Xs, built = self._host_layout(Xs, built)
+            parts = (Xs,) + tuple(built)
         self._install(parts[0], parts[1:], stream=None)
 
     def _put(self, a, sharding):
@@ -565,17 +634,83 @@ class MeshPlane(_SnapshotPlane):
         return jax.jit(quantize_rows,
                        out_shardings=(self._db2, self._db1))(Xs)
 
+    def _host_layout(self, Xs, built):
+        """Per-shard locality packing (DESIGN.md §10).  The traced shard
+        build cannot run the host-BFS "layout" stage (it is stripped from
+        the shard_map pipeline by ``distributed.make_build_fn``), so a
+        layout config packs here instead: pull each shard's sub-index to
+        host, BFS-order its LOCAL ids, relabel, and lay the packed arrays
+        (plus the [N] shard-local perm operand) back over the mesh.  The
+        ``ids + offset`` global-id composition in the distributed search is
+        untouched because the search procedures translate back to
+        external-local ids before returning."""
+        pipeline = tuple(getattr(self.cfg, "build_pipeline", ()) or ())
+        if "layout" not in pipeline:
+            return Xs, tuple(built)
+        import numpy as np
+
+        from repro.ann import layout as L
+
+        def host(a):
+            if isinstance(a, jax.Array) and not a.is_fully_addressable:
+                from jax.experimental import multihost_utils
+                return np.asarray(
+                    multihost_utils.process_allgather(a, tiled=True))
+            return np.asarray(jax.device_get(a))
+
+        X_h = host(Xs)
+        nbrs, lams, degs, hubs = (host(a) for a in built)
+        nsh = self.n_db_shards
+        n_local = X_h.shape[0] // nsh
+        nh = hubs.shape[0] // nsh if hubs.shape[0] else 0
+        outs = {"X": [], "nbrs": [], "lams": [], "degs": [], "hubs": [],
+                "perm": []}
+        for i in range(nsh):
+            lo = i * n_local
+            hub_i = hubs[i * nh:(i + 1) * nh] if nh else None
+            nb_i = nbrs[lo:lo + n_local]
+            perm_i = L.locality_order(nb_i, starts=hub_i)
+            X2, nb2, lam2, deg2, hub2 = L.apply_layout(
+                perm_i, X_h[lo:lo + n_local], nb_i,
+                lams[lo:lo + n_local], degs[lo:lo + n_local], hubs=hub_i)
+            outs["X"].append(X2)
+            outs["nbrs"].append(nb2)
+            outs["lams"].append(lam2)
+            outs["degs"].append(deg2)
+            outs["hubs"].append(hub2 if hub2 is not None
+                                else np.zeros((0,), np.int32))
+            outs["perm"].append(perm_i)
+        cat = {k: np.concatenate(v, axis=0) for k, v in outs.items()}
+        return (self._put(cat["X"], self._db2),
+                (self._put(cat["nbrs"], self._db2),
+                 self._put(cat["lams"], self._db2),
+                 self._put(cat["degs"], self._db1),
+                 self._put(cat["hubs"], self._db1),
+                 self._put(cat["perm"].astype(np.int32), self._db1)))
+
     def _install(self, Xs, parts, *, stream) -> None:
+        parts = tuple(parts)
+        # perm (layout configs) rides LAST in the operand tuple, after any
+        # quantization extras — same convention as the single plane
+        has_layout = "layout" in tuple(
+            getattr(self.cfg, "build_pipeline", ()) or ())
+        perm = None
+        if has_layout:
+            perm = parts[-1]
+            parts = parts[:-1]
         if self.quantized and len(parts) == 4:
             # built fresh / restored from a pre-v4 artifact: derive the
-            # codes here (a v4 artifact restores them via parts directly)
+            # codes here (a v4 artifact restores them via parts directly).
+            # Xs is already in packed order, so the row-local codes are too.
             parts = parts + self._quantize_sharded(Xs)
+        if perm is not None:
+            parts = parts + (perm,)
         nbrs, lams, degs, hubs = parts[:4]
         self.X = Xs
         self._parts = parts
         self.graph = PackedGraph(
             neighbors=nbrs, lambdas=lams, degrees=degs,
-            hubs=hubs if hubs.shape[0] else None)
+            hubs=hubs if hubs.shape[0] else None, perm=perm)
         ops = (Xs, *parts)
         self._snap = (_token_of(ops), ops, stream)
 
@@ -587,10 +722,10 @@ class MeshPlane(_SnapshotPlane):
         shard-mapped build a fresh mesh plane runs, so the swapped-in state
         is bitwise a fresh build's (compaction's parity bar)."""
         Xs = self._put(X, self._db2)
-        nbrs, lams, degs, hubs = self._D.make_build_fn(self.mesh,
-                                                       self.cfg)(Xs)
-        jax.block_until_ready(nbrs)
-        self._install(Xs, (nbrs, lams, degs, hubs), stream=None)
+        built = self._D.make_build_fn(self.mesh, self.cfg)(Xs)
+        jax.block_until_ready(built[0])
+        Xs, built = self._host_layout(Xs, built)
+        self._install(Xs, built, stream=None)
 
     def set_stream(self, alive, delta_X, delta_alive) -> None:
         """Tombstone mask row-sharded like ``degrees``; delta shard
@@ -632,7 +767,7 @@ class MeshPlane(_SnapshotPlane):
 
     def shardings(self) -> dict:
         return {"X": self._db2, "neighbors": self._db2, "lambdas": self._db2,
-                "degrees": self._db1, "hubs": self._db1,
+                "degrees": self._db1, "hubs": self._db1, "perm": self._db1,
                 "codes": self._db2, "scales": self._db1,
                 "alive": self._db1, "delta_X": self._repl,
                 "delta_alive": self._repl1, "delta_codes": self._repl,
@@ -709,7 +844,11 @@ class MeshPlane(_SnapshotPlane):
 
     def _operand_shardings(self) -> tuple:
         base = (self._db2, self._db2, self._db2, self._db1, self._db1)
-        return base + (self._db2, self._db1) if self.quantized else base
+        if self.quantized:
+            base = base + (self._db2, self._db1)
+        if self.graph.perm is not None:
+            base = base + (self._db1,)  # shard-local perm, row-sharded
+        return base
 
 
 register_plane("single", lambda X, cfg, **kw: SingleDevicePlane(X, cfg, **kw))

@@ -486,3 +486,19 @@ def test_pick_bs_itemsize_aware(rng):
         assert bs8 * bc8 >= bs32 * bc32, (Kq, C, d)
         assert L2._block_bytes(bs8, Kq, bc8, d, itemsize=1) \
             <= L2.VMEM_BUDGET, (Kq, C, d, bs8, bc8)
+
+
+def test_gather_dispatch_pinned():
+    """The gather-fused placement decision, exhaustively pinned: "on"
+    always fuses, "off" never, and "auto" fuses only off-interpret (real
+    TPU) AND inside the VMEM budget — the regression for the auto path
+    silently fusing under interpret-mode DMA emulation."""
+    assert HP.gather_dispatch("auto", interp=True, fits=True) is False
+    assert HP.gather_dispatch("auto", interp=True, fits=False) is False
+    assert HP.gather_dispatch("auto", interp=False, fits=True) is True
+    assert HP.gather_dispatch("auto", interp=False, fits=False) is False
+    assert HP.gather_dispatch("on", interp=True, fits=True) is True
+    assert HP.gather_dispatch("on", interp=True, fits=False) is True
+    assert HP.gather_dispatch("off", interp=False, fits=True) is False
+    with pytest.raises(ValueError, match="gather_fused"):
+        HP.gather_dispatch("always", interp=False, fits=True)

@@ -23,6 +23,7 @@ from repro.ann import Index
 from repro.ann.quantize import (dequantize, dequantize_rows, quantize,
                                 quantize_rows)
 from repro.configs import get_arch
+from repro.ann.artifact import FORMAT_VERSION
 from repro.configs.base import ANNConfig
 from repro.core import hotpath
 from repro.data.synthetic import make_clustered
@@ -265,7 +266,7 @@ def test_artifact_v4_roundtrip_quantized(ds, tmp_path):
     p = tmp_path / "art"
     ix.save(p)
     manifest = json.loads((p / "manifest.json").read_text())
-    assert manifest["format_version"] == 4
+    assert manifest["format_version"] == FORMAT_VERSION  # v4 fields persist
     assert manifest["fingerprint"]["quantization"] == "int8"
     with np.load(p / "arrays.npz") as arrs:
         assert arrs["codes"].dtype == np.int8
